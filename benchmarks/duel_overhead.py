@@ -1,0 +1,74 @@
+"""Fig 7 + §7.1: duel-and-judge overhead at duel rates 5/10/25%.
+
+Four nodes, k = 2 judges per duel, requests from a dedicated requester-only
+node (intentionally higher relative overhead than typical deployments).
+Checks (i) the analytic extra-load formula N·α·p_d·(1+k) against the
+simulated count and (ii) that latency CDF / SLO curves stay nearly identical
+across duel rates.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import DuelParams, Network, Node, NodePolicy
+from repro.core.duel import expected_extra_requests
+from repro.sim import WorkloadSpec, make_profile, make_requests, uniform_phases
+
+T_END = 900.0
+
+
+def run_duel_rate(p_d: float, seed: int = 0) -> Dict:
+    net = Network(mode="decentralized", seed=seed, ledger_mode="shared",
+                  duel=DuelParams(p_d=p_d, k_judges=2), init_balance=500.0)
+    req_pol = NodePolicy(offload_freq=1.0, accept_freq=0.0,
+                         offload_queue_threshold=0,
+                         offload_util_threshold=0.0, stake=1.0)
+    net.add_node(Node("requester", make_profile(quality=0.5), policy=req_pol))
+    for i in range(4):
+        net.add_node(Node(f"node{i+1}", make_profile(quality=0.6),
+                          policy=NodePolicy(offload_freq=0.0, accept_freq=1.0,
+                                            target_utilization=0.9)))
+    specs = [WorkloadSpec("requester", uniform_phases(T_END, 1.5),
+                          output_mean=2048, slo_s=480.0)]
+    m = net.run(make_requests(specs, seed=3 + seed), until=T_END)
+    user = [c for c in m.completed if not c.is_duel_extra]
+    extra = [c for c in m.completed if c.is_duel_extra]
+    alpha = m.delegation_rate()
+    return {
+        "p_d": p_d,
+        "slo": m.slo_attainment(),
+        "avg_latency": m.avg_latency(),
+        "p50": m.latency_percentile(50),
+        "p90": m.latency_percentile(90),
+        "n_user": len(user),
+        "n_extra": len(extra),
+        "predicted_extra": expected_extra_requests(len(user), alpha, p_d, 2),
+    }
+
+
+def main(rows: List[str]) -> None:
+    base = None
+    for p_d in (0.05, 0.10, 0.25):
+        t0 = time.perf_counter()
+        r = run_duel_rate(p_d)
+        us = (time.perf_counter() - t0) * 1e6
+        if base is None:
+            base = r
+        rel = r["avg_latency"] / base["avg_latency"]
+        pred_ok = (abs(r["n_extra"] - r["predicted_extra"])
+                   <= max(0.5 * r["predicted_extra"], 20))
+        rows.append(
+            f"fig7_duel_rate_{int(p_d*100)}pct,{us:.0f},"
+            f"slo={r['slo']:.3f};lat={r['avg_latency']:.1f};p90={r['p90']:.1f};"
+            f"extra={r['n_extra']};predicted={r['predicted_extra']:.0f};"
+            f"formula_ok={pred_ok};lat_vs_5pct={rel:.3f}")
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    main(rows)
+    print("\n".join(rows))

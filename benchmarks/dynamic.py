@@ -1,0 +1,89 @@
+"""Fig 5: dynamic participation — nodes joining (a) and leaving (b)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.settings import OUTPUT_MEAN, SLO_S, build_network
+from repro.core import DuelParams, Network, Node, NodePolicy
+from repro.sim import WorkloadSpec, make_profile, make_requests, uniform_phases
+
+
+def _mk_net(seed=0) -> Network:
+    return Network(mode="decentralized", seed=seed, ledger_mode="shared",
+                   duel=DuelParams(p_d=0.05), init_balance=1000.0)
+
+
+def run_join(seed: int = 0, t_end: float = 600.0) -> Dict:
+    """Start with 2 nodes under pressure; nodes 3..6 join at 150/250/350/450s."""
+    net = _mk_net(seed)
+    join_times = {"node3": 150.0, "node4": 250.0, "node5": 350.0,
+                  "node6": 450.0}
+    for i in range(1, 7):
+        nid = f"node{i}"
+        node = Node(nid, make_profile("qwen3-8b", "ADA6000", "sglang",
+                                      quality=0.7))
+        net.add_node(node)
+        if nid in join_times:
+            node.online = False
+            node.view.set_offline(0.0)
+            net.loop.schedule(join_times[nid],
+                              lambda n=node: n.go_online())
+    specs = [WorkloadSpec(f"node{i}", uniform_phases(t_end, 5.0),
+                          output_mean=OUTPUT_MEAN, slo_s=SLO_S)
+             for i in (1, 2)]
+    m = net.run(make_requests(specs, seed=7 + seed), until=t_end)
+    trace = m.windowed_latency(window=50.0, t_end=t_end + 200)
+    return {"events": sorted(join_times.values()), "trace": trace,
+            "slo": m.slo_attainment(), "n": len(m.completed)}
+
+
+def run_leave(seed: int = 0, t_end: float = 600.0) -> Dict:
+    """Start with 4 nodes; two leave at 200s and 400s."""
+    net = _mk_net(seed)
+    nodes = []
+    for i in range(1, 5):
+        node = Node(f"node{i}", make_profile("qwen3-8b", "ADA6000", "sglang",
+                                             quality=0.7))
+        net.add_node(node)
+        nodes.append(node)
+    net.loop.schedule(200.0, lambda: nodes[2].go_offline())
+    net.loop.schedule(400.0, lambda: nodes[3].go_offline())
+    specs = [WorkloadSpec(f"node{i}", uniform_phases(t_end, 8.0),
+                          output_mean=OUTPUT_MEAN, slo_s=SLO_S)
+             for i in (1, 2)]
+    m = net.run(make_requests(specs, seed=9 + seed), until=t_end)
+    trace = m.windowed_latency(window=50.0, t_end=t_end + 200)
+    return {"events": [200.0, 400.0], "trace": trace,
+            "slo": m.slo_attainment(), "n": len(m.completed)}
+
+
+def main(rows: List[str]) -> None:
+    t0 = time.perf_counter()
+    j = run_join()
+    l = run_leave()
+    us = (time.perf_counter() - t0) * 1e6
+
+    def seg_mean(trace, lo, hi):
+        xs = [v for t, v in trace if lo <= t < hi]
+        return float(np.mean(xs)) if xs else float("nan")
+
+    # joins: pre-join overload peak vs post-join steady state
+    j_before = seg_mean(j["trace"], 150, 300)
+    j_after = seg_mean(j["trace"], 450, 600)
+    # leaves: before first leave vs after second
+    l_before = seg_mean(l["trace"], 50, 200)
+    l_after = seg_mean(l["trace"], 400, 600)
+    rows.append(f"fig5a_join,{us:.0f},lat_before={j_before:.1f};"
+                f"lat_after={j_after:.1f};drops={j_before > j_after}")
+    rows.append(f"fig5b_leave,{us:.0f},lat_before={l_before:.1f};"
+                f"lat_after={l_after:.1f};rises={l_after > l_before}")
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    main(rows)
+    print("\n".join(rows))

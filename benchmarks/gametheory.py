@@ -1,0 +1,64 @@
+"""§5 (Theorem 5.8): stake-share dynamics converge to high-quality equilibrium.
+
+(i) RK4 integration of the replicator ODE (Prop 5.6) in pure JAX;
+(ii) numerical verification of Prop 5.6 (analytic dp/dt == finite diff);
+(iii) Monte-Carlo credit simulator agreement (stochastic PoS + duels).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.creditsim import CreditSimParams, simulate
+from repro.core.gametheory import (GameParams, group_share, integrate,
+                                   verify_proposition_56)
+
+
+def main(rows: List[str]) -> None:
+    N = 8
+    q = jnp.array([0.9, 0.85, 0.8, 0.75, 0.35, 0.3, 0.25, 0.2])
+    c = jnp.full((N,), 0.3)
+    params = GameParams(q=q, c=c, p_d=0.5, R_add=2.0, P=2.0)
+    hi = q > 0.5
+
+    t0 = time.perf_counter()
+    _, shares = integrate(params, jnp.ones(N), dt=0.1, steps=20000)
+    us = (time.perf_counter() - t0) * 1e6
+    ph = np.asarray(group_share(shares, hi))
+    ph0, phT = float(ph[0] if ph.ndim else ph), float(
+        group_share(shares[-1], hi))
+    ph_traj = np.asarray([float(group_share(shares[i], hi))
+                          for i in range(0, 20000, 1000)])
+    monotone = bool(np.all(np.diff(ph_traj) > -1e-6))
+    rows.append(f"thm58_replicator,{us:.0f},p_H_0=0.5;p_H_T={phT:.3f};"
+                f"monotone={monotone};converges={phT > 0.8}")
+
+    t0 = time.perf_counter()
+    err = verify_proposition_56(params, jnp.ones(N) * 2.0)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(f"prop56_sharedynamics,{us:.0f},fd_vs_analytic_err={err:.2e};"
+                f"ok={err < 1e-2}")
+
+    t0 = time.perf_counter()
+    cp = CreditSimParams(q=q, c=c, p_d=0.3, R_add=1.0, P=1.0)
+    traj, wins, duels = simulate(cp, jnp.ones(N) * 10.0,
+                                 jax.random.PRNGKey(0), steps=1500)
+    us = (time.perf_counter() - t0) * 1e6
+    sh = np.asarray(traj[-1] / traj[-1].sum())
+    mc_ph = float(sh[np.asarray(hi)].sum())
+    wr = np.asarray(wins / np.maximum(duels, 1))
+    wr_ordered = bool(np.mean(wr[:4]) > np.mean(wr[4:]))
+    rows.append(f"thm58_montecarlo,{us:.0f},p_H_T={mc_ph:.3f};"
+                f"high_q_winrate={np.mean(wr[:4]):.2f};"
+                f"low_q_winrate={np.mean(wr[4:]):.2f};ordered={wr_ordered}")
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    main(rows)
+    print("\n".join(rows))

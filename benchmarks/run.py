@@ -1,0 +1,35 @@
+"""Benchmark harness: one entry per paper table/figure + substrate benches.
+
+Prints ``name,us_per_call,derived`` CSV (one row per artifact).  Roofline
+numbers come from ``repro.launch.dryrun`` (see EXPERIMENTS.md §Roofline) —
+that path needs 512 host devices and therefore runs as its own process.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+
+def main() -> None:
+    rows: List[str] = ["name,us_per_call,derived"]
+    from benchmarks import (duel_overhead, dynamic, gametheory, kernels,
+                            policies, protocol, quality, scheduling)
+    for mod, label in ((scheduling, "scheduling (Fig4/Tab2)"),
+                       (dynamic, "dynamic participation (Fig5)"),
+                       (quality, "quality incentivization (Fig6)"),
+                       (duel_overhead, "duel overhead (Fig7)"),
+                       (policies, "user-level policies (Fig8)"),
+                       (gametheory, "game theory (Sec5)"),
+                       (protocol, "protocol: ledger ablation + gossip (AppA2/C)"),
+                       (kernels, "pallas kernels")):
+        t0 = time.perf_counter()
+        mod.main(rows)
+        dt = time.perf_counter() - t0
+        print(f"# {label}: {dt:.1f}s", file=sys.stderr, flush=True)
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

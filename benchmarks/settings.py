@@ -1,0 +1,83 @@
+"""Experimental settings (paper Appendix C, Table 3), shared by benchmarks.
+
+Each node: (model, gpu, backend, [(interval, 1/lambda), ...]).  The paper's
+inter-arrival times are scaled by ARRIVAL_SCALE to hit comparable saturation
+under our calibrated service model; every node uses the paper's policy
+defaults (offload 80%, accept 80%, target util 70%, max tokens 8192).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core import DuelParams, Network, Node, NodePolicy
+from repro.sim import WorkloadSpec, make_profile
+from repro.sim.servicemodel import MODEL_QUALITY
+from repro.sim.workload import ArrivalPhase
+
+T_END = 750.0
+OUTPUT_MEAN = 5120          # OpenR1-Math reasoning traces are long
+SLO_S = 360.0
+OFFLOAD_UTIL = 0.8          # offload once utilization passes 80% of the knee
+
+# (model, gpu, backend, [(t0, t1, inter-arrival s), ...])
+NodeSpec = Tuple[str, str, str, List[Tuple[float, float, float]]]
+
+SETTINGS: Dict[str, List[NodeSpec]] = {
+    "setting1": [
+        ("qwen3-8b", "ADA6000", "sglang", [(0, 300, 5), (300, 750, 20)]),
+        ("qwen3-8b", "ADA6000", "sglang", [(0, 750, 20)]),
+        ("qwen3-8b", "ADA6000", "sglang", [(0, 750, 20)]),
+        ("qwen3-8b", "ADA6000", "sglang", [(0, 450, 20), (450, 750, 5)]),
+    ],
+    "setting2": [
+        ("qwen3-8b", "ADA6000", "sglang", [(0, 300, 4), (300, 750, 20)]),
+        ("qwen3-8b", "ADA6000", "sglang", [(0, 750, 20)]),
+        ("qwen3-4b", "RTX3090", "sglang", [(0, 750, 30)]),
+        ("qwen3-4b", "RTX3090", "sglang", [(0, 450, 30), (450, 750, 6)]),
+    ],
+    "setting3": [
+        ("qwen3-32b", "4xA100", "sglang", [(0, 300, 2), (300, 750, 6)]),
+        ("qwen3-8b", "L40S", "sglang", [(0, 750, 15)]),
+        ("deepseek-qwen-7b", "RTX3090", "vllm", [(0, 750, 30)]),
+        ("llama3.1-8b", "ADA6000", "vllm", [(0, 450, 15), (450, 750, 5)]),
+    ],
+    "setting4": [
+        ("llama3.1-8b", "L40S", "vllm", [(0, 750, 9)]),
+        ("llama3.1-8b", "L40S", "vllm", [(0, 450, 6), (450, 750, 12)]),
+        ("deepseek-qwen-7b", "ADA6000", "vllm", [(0, 300, 6), (300, 750, 12)]),
+        ("deepseek-qwen-7b", "ADA6000", "vllm", [(0, 450, 12), (450, 750, 6)]),
+        ("qwen3-4b", "RTX4090", "sglang", [(0, 750, 12)]),
+        ("qwen3-4b", "RTX4090", "sglang", [(0, 450, 10), (450, 750, 20)]),
+        ("qwen3-4b", "RTX3090", "sglang", [(0, 300, 20), (300, 750, 10)]),
+        ("qwen3-4b", "RTX3090", "sglang", [(0, 300, 20), (300, 750, 10)]),
+    ],
+}
+
+# the paper's absolute 1/λ values assume its hardware pool; we scale them so
+# the calibrated service model reaches the same saturation regimes
+ARRIVAL_SCALE = {"setting1": 0.6, "setting2": 0.6, "setting3": 0.6,
+                 "setting4": 0.6}
+
+
+def build_network(setting: str, mode: str, seed: int = 0,
+                  duel: DuelParams | None = None,
+                  policy_overrides: Dict[int, NodePolicy] | None = None
+                  ) -> Tuple[Network, List[WorkloadSpec]]:
+    nodes = SETTINGS[setting]
+    net = Network(mode=mode, seed=seed, ledger_mode="shared",
+                  duel=duel or DuelParams(p_d=0.1, k_judges=2),
+                  init_balance=100.0)
+    specs: List[WorkloadSpec] = []
+    scale = ARRIVAL_SCALE.get(setting, 1.0)
+    for i, (model, gpu, backend, phases) in enumerate(nodes):
+        nid = f"node{i + 1}"
+        prof = make_profile(model, gpu, backend,
+                            quality=MODEL_QUALITY.get(model, 0.5))
+        pol = (policy_overrides or {}).get(
+            i, NodePolicy(offload_util_threshold=OFFLOAD_UTIL))
+        net.add_node(Node(nid, prof, policy=pol))
+        specs.append(WorkloadSpec(
+            nid, [ArrivalPhase(t0, t1, ia * scale) for t0, t1, ia in phases],
+            output_mean=OUTPUT_MEAN, slo_s=SLO_S))
+    return net, specs

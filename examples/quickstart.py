@@ -1,0 +1,51 @@
+"""Quickstart: a 4-node WWW.Serve network in ~30 lines.
+
+Builds the decentralized network, submits a bursty workload to one hot node,
+and shows the protocol redistributing it — vs single-node and centralized
+baselines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import DuelParams, Network, Node, NodePolicy
+from repro.sim import (WorkloadSpec, make_profile, make_requests, two_phase,
+                       uniform_phases)
+
+T_END = 750.0
+
+
+def build(mode: str) -> Network:
+    net = Network(mode=mode, seed=0, duel=DuelParams(p_d=0.1, k_judges=2),
+                  init_balance=100.0)
+    for i, gpu in enumerate(("A100", "ADA6000", "RTX4090", "RTX3090")):
+        net.add_node(Node(f"node{i+1}",
+                          make_profile("qwen3-8b", gpu, "sglang",
+                                       quality=0.5 + 0.1 * i),
+                          policy=NodePolicy(offload_util_threshold=0.8)))
+    return net
+
+
+def main() -> None:
+    specs = [
+        WorkloadSpec("node1", two_phase(300, T_END, 3, 20),
+                     output_mean=5120, slo_s=360),
+        WorkloadSpec("node2", uniform_phases(T_END, 20),
+                     output_mean=5120, slo_s=360),
+        WorkloadSpec("node3", uniform_phases(T_END, 20),
+                     output_mean=5120, slo_s=360),
+        WorkloadSpec("node4", two_phase(450, T_END, 20, 3),
+                     output_mean=5120, slo_s=360),
+    ]
+    reqs = make_requests(specs, seed=42)
+    print(f"{len(reqs)} user requests over {T_END:.0f}s\n")
+    for mode in ("single", "centralized", "decentralized"):
+        m = build(mode).run(reqs, until=T_END)
+        print(f"{mode:14s} SLO={m.slo_attainment():.3f} "
+              f"avg latency={m.avg_latency():7.1f}s "
+              f"delegated={m.delegation_rate():.0%}")
+    print("\ndecentralized ≈ centralized efficiency, zero coordinators — "
+          "that's the paper's headline claim.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Train a small dense model for a few hundred steps on CPU.
+
+Exercises the full training substrate (data pipeline -> model -> AdamW ->
+checkpoint) and asserts the loss actually drops.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, TokenPipeline
+from repro.training import AdamWConfig, init_state, make_train_step
+from repro.training import checkpoint as ckpt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-8b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke().replace(dtype="float32")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params")
+    step_fn = jax.jit(make_train_step(cfg, opt, q_chunk=64, kv_chunk=64))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                    global_batch=8, seed=0))
+    first = None
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        state, m = step_fn(state, batch)
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={loss:.4f}")
+    assert loss < first - 0.5, "training did not reduce loss"
+    with tempfile.NamedTemporaryFile(suffix=".msgpack") as f:
+        ckpt.save(f.name, state, step=args.steps)
+        _, step = ckpt.restore(f.name, state)
+        print(f"checkpoint roundtrip OK at step {step}; "
+              f"loss {first:.3f} -> {loss:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from the dryrun JSONL logs.
+
+    PYTHONPATH=src python experiments/render_tables.py
+"""
+
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).parent
+
+
+def load(path):
+    rows = {}
+    if not (HERE / path).exists():
+        return rows
+    for line in open(HERE / path):
+        r = json.loads(line)
+        if "error" in r:
+            continue
+        rows[(r["arch"], r["shape"], r.get("perf_variant", "baseline"))] = r
+    return rows
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | peak GB/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for (a, s, _), r in sorted(rows.items()):
+        rf = r.get("roofline")
+        if not rf:
+            continue
+        out.append(
+            f"| {a} | {s} | {rf['compute_ms']/1e3:.3f} | "
+            f"{rf['memory_ms']/1e3:.2f} | {rf['collective_ms']/1e3:.2f} | "
+            f"{rf['dominant']} | {rf['useful_fraction']:.2f} | "
+            f"{r['memory']['peak_bytes']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def multipod_table(rows):
+    out = ["| arch | shape | compile s | peak GB/dev |",
+           "|---|---|---:|---:|"]
+    for (a, s, _), r in sorted(rows.items()):
+        out.append(f"| {a} | {s} | {r['compile_s']:.1f} | "
+                   f"{r['memory']['peak_bytes']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def perf_table(rows):
+    out = ["| arch | shape | variant | compute s | memory s | collective s "
+           "| peak GB/dev |",
+           "|---|---|---|---:|---:|---:|---:|"]
+    for (a, s, v), r in rows.items():      # keep insertion (iteration) order
+        rf = r.get("roofline", {})
+        out.append(
+            f"| {a} | {s} | {v} | {rf.get('compute_ms', 0)/1e3:.3f} | "
+            f"{rf.get('memory_ms', 0)/1e3:.2f} | "
+            f"{rf.get('collective_ms', 0)/1e3:.2f} | "
+            f"{r['memory']['peak_bytes']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    single = load("dryrun_single.jsonl")
+    multi = load("dryrun_multipod.jsonl")
+    perf = load("perf_iters.jsonl")
+    print("## Single-pod (16x16) baselines\n")
+    print(roofline_table(single))
+    print(f"\n{len(single)} combinations compiled.\n")
+    print("## Multi-pod (2x16x16)\n")
+    print(multipod_table(multi))
+    print(f"\n{len(multi)} combinations compiled.\n")
+    print("## Perf iterations\n")
+    print(perf_table(perf))

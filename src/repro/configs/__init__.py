@@ -1,0 +1,61 @@
+"""Architecture + input-shape registry for the assigned (arch × shape) grid."""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS: Dict[str, str] = {
+    "starcoder2-7b": "starcoder2_7b",
+    "qwen3-8b": "qwen3_8b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "whisper-base": "whisper_base",
+}
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, shape: Optional[str] = None) -> ModelConfig:
+    """Resolve an architecture config; `long_500k` on a full-attention arch
+    returns the sliding-window variant (see DESIGN.md §Arch-applicability)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    cfg: ModelConfig = mod.CONFIG
+    if shape == "long_500k" and cfg.family in ("dense", "moe", "vlm", "audio"):
+        window = getattr(mod, "LONG_CONTEXT_WINDOW", 4096)
+        cfg = cfg.replace(name=cfg.name + "-window",
+                          sliding_window=window)
+    return cfg
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)
+
+
+def grid() -> List[Tuple[str, str]]:
+    """All assigned (arch, shape) combinations — 10 × 4 = 40."""
+    return [(a, s) for a in sorted(ARCHS) for s in INPUT_SHAPES]

@@ -1,0 +1,18 @@
+"""WWW.Serve core: the paper's decentralized serving mechanisms."""
+
+from repro.core.duel import DuelParams, DuelOutcome, expected_extra_requests, run_duel
+from repro.core.gossip import PeerRecord, PeerView, gossip_round, rounds_to_convergence
+from repro.core.ledger import (BalanceView, CreditBlock, CreditChain, CreditOp,
+                               LedgerError, SharedLedger)
+from repro.core.network import Network, TREASURY
+from repro.core.node import Node, QueuedRequest
+from repro.core.policy import NodePolicy
+from repro.core.pos import pos_sample, pos_sample_one, selection_probs
+
+__all__ = [
+    "DuelParams", "DuelOutcome", "expected_extra_requests", "run_duel",
+    "PeerRecord", "PeerView", "gossip_round", "rounds_to_convergence",
+    "BalanceView", "CreditBlock", "CreditChain", "CreditOp", "LedgerError",
+    "SharedLedger", "Network", "TREASURY", "Node", "QueuedRequest",
+    "NodePolicy", "pos_sample", "pos_sample_one", "selection_probs",
+]

@@ -1,0 +1,113 @@
+"""Gossip-driven peer synchronization (paper §A.2, Figure 10).
+
+Every node keeps a local view: node_id -> PeerRecord(version, online, addr,
+last_seen).  In each gossip round a node exchanges its full view with a few
+random peers; each side keeps, per entry, the record with the higher
+*version* (a per-origin monotonic counter bumped by the origin on any status /
+address change, and by heartbeats).  Offline detection: if an entry's
+heartbeat has not advanced within ``suspect_after`` sim-seconds, the node
+locally marks the peer offline (the mark itself gossips as a higher-version
+record only once the origin really stops heartbeating — a revived origin's
+own heartbeat always wins because it carries a newer version).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PeerRecord:
+    node_id: str
+    version: int
+    online: bool
+    addr: str
+    heartbeat_time: float    # origin-local time of the last self-update
+
+
+class PeerView:
+    """One node's local membership view."""
+
+    def __init__(self, self_id: str, addr: str, now: float = 0.0) -> None:
+        self.self_id = self_id
+        self.records: Dict[str, PeerRecord] = {
+            self_id: PeerRecord(self_id, 1, True, addr, now)
+        }
+
+    # -- local mutations (the origin bumps its own version) ------------------
+    def heartbeat(self, now: float) -> None:
+        r = self.records[self.self_id]
+        self.records[self.self_id] = replace(r, version=r.version + 1,
+                                             heartbeat_time=now, online=True)
+
+    def set_offline(self, now: float) -> None:
+        r = self.records[self.self_id]
+        self.records[self.self_id] = replace(r, version=r.version + 1,
+                                             online=False, heartbeat_time=now)
+
+    def set_addr(self, addr: str, now: float) -> None:
+        r = self.records[self.self_id]
+        self.records[self.self_id] = replace(r, version=r.version + 1,
+                                             addr=addr, heartbeat_time=now)
+
+    # -- anti-entropy merge ---------------------------------------------------
+    def merge(self, remote: Iterable[PeerRecord]) -> int:
+        """Keep the higher-version record per node. Returns #updates taken."""
+        taken = 0
+        for rec in remote:
+            mine = self.records.get(rec.node_id)
+            if mine is None or rec.version > mine.version:
+                self.records[rec.node_id] = rec
+                taken += 1
+        return taken
+
+    def suspect_failures(self, now: float, suspect_after: float) -> List[str]:
+        """Locally mark peers offline whose heartbeat is stale."""
+        newly = []
+        for nid, rec in list(self.records.items()):
+            if nid == self.self_id or not rec.online:
+                continue
+            if now - rec.heartbeat_time > suspect_after:
+                # local suspicion does NOT bump version: a live origin's next
+                # heartbeat (higher version) overrides it on merge.
+                self.records[nid] = replace(rec, online=False)
+                newly.append(nid)
+        return newly
+
+    def online_peers(self) -> List[str]:
+        return sorted(n for n, r in self.records.items()
+                      if r.online and n != self.self_id)
+
+    def knows(self, nid: str) -> bool:
+        return nid in self.records
+
+    def snapshot(self) -> List[PeerRecord]:
+        return list(self.records.values())
+
+
+def gossip_round(a: PeerView, b: PeerView) -> Tuple[int, int]:
+    """Symmetric pairwise exchange (paper Fig 10). Returns updates taken by each."""
+    snap_a, snap_b = a.snapshot(), b.snapshot()
+    return a.merge(snap_b), b.merge(snap_a)
+
+
+def rounds_to_convergence(views: Sequence[PeerView], rng: np.random.Generator,
+                          fanout: int = 2, max_rounds: int = 64) -> int:
+    """Drive random pairwise gossip until all views agree; returns #rounds."""
+    def converged() -> bool:
+        base = {n: (r.version, r.online) for n, r in views[0].records.items()}
+        return all({n: (r.version, r.online) for n, r in v.records.items()} == base
+                   for v in views[1:])
+
+    for rnd in range(1, max_rounds + 1):
+        for v in views:
+            peers = [w for w in views if w is not v]
+            for w in rng.choice(len(peers), size=min(fanout, len(peers)),
+                                replace=False):
+                gossip_round(v, peers[int(w)])
+        if converged():
+            return rnd
+    return max_rounds

@@ -1,0 +1,465 @@
+"""The decentralized network: routing workflow + baselines (paper §3.2, Fig 1b/9).
+
+``Network`` wires nodes, the event loop, the credit ledger, gossip, and the
+duel-and-judge mechanism together, and supports three deployment modes used
+throughout the paper's evaluation (§6.1):
+
+* ``single``        — every node serves only its own users (no cooperation).
+* ``centralized``   — an omniscient global dispatcher assigns each arrival to
+                      the least-loaded node (upper-bound baseline).
+* ``decentralized`` — the WWW.Serve protocol: policy-driven offloading,
+                      PoS executor selection, probing, credit transactions,
+                      duels, gossip-maintained membership.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.duel import DuelOutcome, DuelParams, run_duel
+from repro.core.gossip import gossip_round
+from repro.core.ledger import (CreditChain, CreditOp, LedgerError, SharedLedger)
+from repro.core.node import Node, QueuedRequest
+from repro.core.pos import pos_sample, pos_sample_one
+from repro.sim.events import EventLoop
+from repro.sim.metrics import CompletedRequest, MetricsCollector
+from repro.sim.workload import Request
+
+TREASURY = "__treasury__"
+
+
+@dataclass
+class _DuelState:
+    duel_id: str
+    req: Request
+    origin: str
+    executors: Tuple[str, str]
+    finished: List[str] = field(default_factory=list)
+    user_served: bool = False
+    judges_done: int = 0
+    judges: Tuple[str, ...] = ()
+
+
+class Network:
+    def __init__(self, mode: str = "decentralized", *, seed: int = 0,
+                 ledger_mode: str = "shared", msg_latency: float = 0.05,
+                 duel: Optional[DuelParams] = None,
+                 gossip_interval: float = 1.0, gossip_fanout: int = 2,
+                 suspect_after: float = 5.0,
+                 init_balance: float = 20.0,
+                 restake_interval: Optional[float] = 30.0,
+                 restake_fraction: float = 0.5,
+                 max_probes: int = 3,
+                 power_of_two: bool = False) -> None:
+        assert mode in ("single", "centralized", "decentralized")
+        assert ledger_mode in ("shared", "chain")
+        self.mode = mode
+        self.ledger_mode = ledger_mode
+        self.loop = EventLoop()
+        self.rng = np.random.default_rng(seed)
+        self.nodes: Dict[str, Node] = {}
+        self.metrics = MetricsCollector()
+        self.duel_params = duel or DuelParams()
+        self.msg_latency = msg_latency
+        self.gossip_interval = gossip_interval
+        self.gossip_fanout = gossip_fanout
+        self.suspect_after = suspect_after
+        self.init_balance = init_balance
+        self.restake_interval = restake_interval
+        self.restake_fraction = restake_fraction
+        self.max_probes = max_probes
+        self.power_of_two = power_of_two
+
+        self.shared_ledger = SharedLedger()
+        self.chains: Dict[str, CreditChain] = {}
+        self._duels: Dict[str, _DuelState] = {}
+        self._duel_ctr = itertools.count()
+        self.credit_trace: List[Tuple[float, str, float]] = []  # (t, node, credit)
+        self.block_confirmations: List[int] = []
+        self._shutdown = False
+
+        # seed the treasury that funds duel bonuses / judge fees
+        self._apply_ops([CreditOp("mint", "", TREASURY, 1e9)], proposer=None)
+
+    # ------------------------------------------------------------- membership
+    def add_node(self, node: Node) -> None:
+        node.network = self
+        self.nodes[node.id] = node
+        if self.ledger_mode == "chain":
+            chain = CreditChain(node.id)
+            donors = [c for c in self.chains.values() if c.blocks]
+            if donors:
+                # bootstrap: replay history from the longest live chain
+                donor = max(donors, key=lambda c: len(c.blocks))
+                for blk in donor.blocks:
+                    chain.append(blk)
+            else:
+                # first chain: write the treasury genesis block
+                genesis = chain.propose(
+                    [CreditOp("mint", "", TREASURY, 1e9)], self.loop.now,
+                    node.secret if hasattr(node, "secret") else b"sys")
+                chain.append(genesis)
+            self.chains[node.id] = chain
+        ops = [CreditOp("mint", "", node.id, self.init_balance + node.policy.stake),
+               CreditOp("stake", node.id, "", node.policy.stake)]
+        self._apply_ops(ops, proposer=node.id)
+        # introduce to the network: one gossip exchange with an online peer
+        for other in self.nodes.values():
+            if other is not node and other.online:
+                gossip_round(node.view, other.view)
+                break
+
+    # ----------------------------------------------------------------- ledger
+    def _apply_ops(self, ops: Sequence[CreditOp], proposer: Optional[str]) -> None:
+        if self.ledger_mode == "shared" or proposer is None or not self.chains:
+            try:
+                self.shared_ledger.apply(ops)
+            except LedgerError:
+                pass  # e.g. slashing an already-empty stake: drop the op set
+            return
+        # full-chain path: proposer builds + signs a block, broadcasts, and the
+        # block finalizes once a majority of ONLINE peers validate + append.
+        # Offline peers miss the broadcast and resync on rejoin (below).
+        chain = self.chains[proposer]
+        node = self.nodes.get(proposer)
+        secret = node.secret if node else b"sys"
+        block = chain.propose(ops, self.loop.now, secret)
+        peers = {nid: c for nid, c in self.chains.items()
+                 if nid not in self.nodes or self.nodes[nid].online}
+        confirms = sum(1 for c in peers.values() if c.validate(block)[0])
+        self.block_confirmations.append(confirms)
+        if confirms * 2 > len(peers):
+            for peer_chain in peers.values():
+                try:
+                    peer_chain.append(block)
+                except LedgerError:
+                    pass
+            # mirror into the shared view so balance reads stay O(1)
+            try:
+                self.shared_ledger.apply(ops)
+            except LedgerError:
+                pass
+
+    def resync_chain(self, node_id: str) -> int:
+        """Catch a rejoining node's chain up from the longest live chain
+        (paper: 'newly joined resources can be quickly integrated').
+        Returns the number of blocks replayed."""
+        if self.ledger_mode != "chain" or node_id not in self.chains:
+            return 0
+        mine = self.chains[node_id]
+        donors = [c for nid, c in self.chains.items()
+                  if nid != node_id
+                  and (nid not in self.nodes or self.nodes[nid].online)]
+        if not donors:
+            return 0
+        donor = max(donors, key=lambda c: len(c.blocks))
+        replayed = 0
+        for blk in donor.blocks[len(mine.blocks):]:
+            try:
+                mine.append(blk)
+                replayed += 1
+            except LedgerError:
+                break
+        return replayed
+
+    def ledger_balance(self, node_id: str) -> float:
+        return self.shared_ledger.balance_of(node_id)
+
+    def ledger_stakes(self) -> Dict[str, float]:
+        return self.shared_ledger.stakes()
+
+    # -------------------------------------------------------------- workflow
+    def submit(self, req: Request) -> None:
+        if self.mode == "centralized":
+            self._dispatch_centralized(req)
+        else:
+            self.nodes[req.origin].submit(req)
+
+    def resubmit_elsewhere(self, req: Request) -> None:
+        online = [n for n in self.nodes.values() if n.online]
+        if not online:
+            self.loop.schedule(5.0, lambda: self.resubmit_elsewhere(req))
+            return
+        pick = online[int(self.rng.integers(len(online)))]
+        pick.enqueue(QueuedRequest(req, self.loop.now, delegated=False,
+                                   origin_node=req.origin))
+
+    def _est_wait(self, node: Node, req: Request) -> float:
+        """Omniscient load estimate for the centralized baseline."""
+        backlog = sum(q.req.output_tokens for q in
+                      node.local_queue + node.delegated_queue)
+        cap = node.profile.decode_tps * node.profile.saturation
+        queued_s = backlog / cap
+        active_s = node.n_active / max(1, node.profile.saturation) * 30.0
+        return queued_s + active_s + node.profile.service_time(
+            req.prompt_tokens, req.output_tokens, node.n_active + 1)
+
+    def _dispatch_centralized(self, req: Request) -> None:
+        online = [n for n in self.nodes.values() if n.online]
+        if not online:
+            self.loop.schedule(5.0, lambda: self._dispatch_centralized(req))
+            return
+        best = min(online, key=lambda n: self._est_wait(n, req))
+        delegated = best.id != req.origin
+        lat = self.msg_latency if delegated else 0.0
+        self.loop.schedule(lat, lambda: best.enqueue(
+            QueuedRequest(req, self.loop.now, delegated=delegated,
+                          origin_node=req.origin)))
+
+    # -- decentralized offload: PoS sampling + probing (paper Fig 9 step 3.2) --
+    def try_offload(self, origin: Node, req: Request) -> bool:
+        stakes = self.ledger_stakes()
+        eligible = [p for p in origin.view.online_peers()
+                    if p in self.nodes and self.nodes[p].online]
+        if not eligible:
+            return False
+        if self.rng.random() < self.duel_params.p_d and len(eligible) >= 2:
+            return self._start_duel(origin, req, stakes, eligible)
+        probes = 0
+        tried: List[str] = []
+        while probes < self.max_probes:
+            if self.power_of_two:
+                # BEYOND-PAPER: power-of-two-choices on top of PoS — sample
+                # two candidates by stake, probe both, pick the less loaded.
+                # Keeps PoS incentives (both draws are stake-weighted) while
+                # exploiting the probe the protocol already pays for.
+                pair = pos_sample(stakes, eligible, 2, self.rng,
+                                  exclude=tried)
+                if not pair:
+                    break
+                pair.sort(key=lambda n: self.nodes[n].utilization())
+                cand_id = pair[0]
+                probes += 1
+                tried.extend(pair)
+            else:
+                cand_id = pos_sample_one(stakes, eligible, self.rng,
+                                         exclude=tried)
+                if cand_id is None:
+                    break
+                probes += 1
+                tried.append(cand_id)
+            cand = self.nodes[cand_id]
+            if cand.online and cand.policy.accepts_delegated(
+                    cand.n_active, cand.profile.saturation,
+                    len(cand.delegated_queue), self.rng):
+                delay = 2 * self.msg_latency * probes + self.msg_latency
+                self.loop.schedule(delay, lambda cand=cand: cand.enqueue(
+                    QueuedRequest(req, self.loop.now, delegated=True,
+                                  origin_node=origin.id)))
+                return True
+        return False
+
+    def _start_duel(self, origin: Node, req: Request, stakes: Dict[str, float],
+                    eligible: Sequence[str]) -> bool:
+        execs = pos_sample(stakes, eligible, 2, self.rng)
+        if len(execs) < 2:
+            return False
+        accepted = []
+        for eid in execs:
+            e = self.nodes[eid]
+            if e.online and e.policy.accepts_delegated(
+                    e.n_active, e.profile.saturation,
+                    len(e.delegated_queue), self.rng):
+                accepted.append(eid)
+        if len(accepted) < 2:
+            return False
+        did = f"duel-{next(self._duel_ctr)}"
+        self._duels[did] = _DuelState(did, req, origin.id,
+                                      (accepted[0], accepted[1]))
+        for i, eid in enumerate(accepted):
+            e = self.nodes[eid]
+            delay = 3 * self.msg_latency
+            self.loop.schedule(delay, lambda e=e, i=i: e.enqueue(
+                QueuedRequest(req, self.loop.now, delegated=True,
+                              origin_node=origin.id, duel_id=did)))
+        return True
+
+    # ------------------------------------------------------------ completion
+    def on_request_finished(self, executor: Node, qr: QueuedRequest) -> None:
+        now = self.loop.now
+        if qr.duel_id is not None:
+            if qr.duel_id.endswith(":judging"):
+                self.metrics.record(CompletedRequest(
+                    rid=qr.req.rid, origin=qr.origin_node, executor=executor.id,
+                    arrival=qr.req.arrival, finish=now, slo_s=qr.req.slo_s,
+                    delegated=True, is_duel_extra=True))
+                st = self._duels.get(qr.duel_id.rsplit(":", 1)[0])
+                if st is not None:
+                    self._on_judge_done(st)
+                return
+            self._on_duel_response(executor, qr)
+            return
+        finish = now + (self.msg_latency if qr.delegated else 0.0)
+        self.metrics.record(CompletedRequest(
+            rid=qr.req.rid, origin=qr.origin_node, executor=executor.id,
+            arrival=qr.req.arrival, finish=finish, slo_s=qr.req.slo_s,
+            delegated=qr.delegated, is_duel_extra=qr.req.is_duel_extra))
+        if qr.delegated and not qr.req.is_duel_extra:
+            price = self.nodes[qr.origin_node].policy.offload_price \
+                if qr.origin_node in self.nodes else 1.0
+            self._apply_ops(
+                [CreditOp("transfer", qr.origin_node, executor.id, price,
+                          ref=qr.req.rid)], proposer=executor.id)
+
+    def _on_duel_response(self, executor: Node, qr: QueuedRequest) -> None:
+        st = self._duels.get(qr.duel_id)
+        if st is None:
+            return
+        st.finished.append(executor.id)
+        if not st.user_served:
+            # the first response back serves the user
+            st.user_served = True
+            self.metrics.record(CompletedRequest(
+                rid=st.req.rid, origin=st.origin, executor=executor.id,
+                arrival=st.req.arrival, finish=self.loop.now + self.msg_latency,
+                slo_s=st.req.slo_s, delegated=True, is_duel_extra=False))
+            price = self.nodes[st.origin].policy.offload_price \
+                if st.origin in self.nodes else 1.0
+            self._apply_ops([CreditOp("transfer", st.origin, executor.id,
+                                      price, ref=st.req.rid)],
+                            proposer=executor.id)
+        else:
+            # challenger inference: counts as duel overhead (paper §7.1)
+            self.metrics.record(CompletedRequest(
+                rid=f"{st.req.rid}-challenger", origin=st.origin,
+                executor=executor.id, arrival=st.req.arrival,
+                finish=self.loop.now, slo_s=st.req.slo_s,
+                delegated=True, is_duel_extra=True))
+        if len(st.finished) == 2:
+            self._dispatch_judges(st)
+
+    def _dispatch_judges(self, st: _DuelState) -> None:
+        stakes = self.ledger_stakes()
+        eligible = [n for n, node in self.nodes.items()
+                    if node.online and n not in st.executors and n != st.origin]
+        judges = pos_sample(stakes, eligible, self.duel_params.k_judges, self.rng)
+        if not judges:
+            self._resolve_duel(st, ())
+            return
+        st.judges = tuple(judges)
+        for j in judges:
+            node = self.nodes[j]
+            eval_req = Request(
+                rid=f"{st.duel_id}-judge-{j}", origin=j, arrival=self.loop.now,
+                prompt_tokens=st.req.prompt_tokens + 2 * st.req.output_tokens,
+                output_tokens=64, slo_s=st.req.slo_s, is_duel_extra=True)
+            jqr = QueuedRequest(eval_req, self.loop.now, delegated=True,
+                                origin_node=st.origin)
+            jqr.duel_id = f"{st.duel_id}:judging"
+            node.enqueue(jqr)
+
+    def _on_judge_done(self, st: _DuelState) -> None:
+        st.judges_done += 1
+        if st.judges_done >= len(st.judges):
+            self._resolve_duel(st, st.judges)
+
+    def _resolve_duel(self, st: _DuelState, judges: Sequence[str]) -> None:
+        q = {nid: n.quality for nid, n in self.nodes.items()}
+        out = run_duel(st.duel_id, st.executors[0], st.executors[1], judges, q,
+                       self.duel_params, self.rng, treasury=TREASURY)
+        self._apply_ops(out.ops, proposer=out.winner)
+        if out.winner in self.nodes:
+            self.nodes[out.winner].duel_wins += 1
+        if out.loser in self.nodes:
+            self.nodes[out.loser].duel_losses += 1
+        del self._duels[st.duel_id]
+
+    # -------------------------------------------------------- periodic tasks
+    def _rebalance_tick(self, interval: float) -> None:
+        """Re-examine overloaded queues (paper: offload once workload exceeds
+        threshold — not only at admission time)."""
+        if self._shutdown:
+            return
+        for node in self.nodes.values():
+            if not node.online:
+                continue
+            moved = 0
+            while (node.local_queue and moved < 4
+                   and node.policy.wants_offload(node.queue_len, node.n_active,
+                                                 node.profile.saturation,
+                                                 self.ledger_balance(node.id),
+                                                 self.rng)):
+                qr = node.local_queue.pop()      # youngest queued local request
+                if self.try_offload(node, qr.req):
+                    moved += 1
+                else:
+                    node.local_queue.append(qr)
+                    break
+        self.loop.schedule(interval, lambda: self._rebalance_tick(interval))
+
+    def _gossip_tick(self) -> None:
+        if self._shutdown:
+            return
+        for node in self.nodes.values():
+            if not node.online:
+                continue
+            node.view.heartbeat(self.loop.now)
+            peers = [p for p in node.view.online_peers() if p in self.nodes]
+            if peers:
+                picks = self.rng.choice(len(peers),
+                                        size=min(self.gossip_fanout, len(peers)),
+                                        replace=False)
+                for i in picks:
+                    peer = self.nodes[peers[int(i)]]
+                    if peer.online:
+                        gossip_round(node.view, peer.view)
+            node.view.suspect_failures(self.loop.now, self.suspect_after)
+        self.loop.schedule(self.gossip_interval, self._gossip_tick)
+
+    def _restake_tick(self) -> None:
+        """Assumption 5.4: rational nodes re-stake a fraction of earnings —
+        and unstake when too illiquid to pay for offloading."""
+        if self._shutdown:
+            return
+        reserve = 5.0
+        for node in self.nodes.values():
+            if not node.online:
+                continue
+            bal = self.ledger_balance(node.id)
+            stake = self.shared_ledger.stake_of(node.id)
+            free = bal - reserve           # keep an offload reserve liquid
+            if free > 0.1:
+                amt = self.restake_fraction * free
+                self._apply_ops([CreditOp("stake", node.id, "", amt)],
+                                proposer=node.id)
+            elif bal < reserve and stake > node.policy.stake:
+                amt = min(stake - node.policy.stake, 4.0 * reserve)
+                self._apply_ops([CreditOp("unstake", node.id, "", amt)],
+                                proposer=node.id)
+        self.loop.schedule(self.restake_interval, self._restake_tick)
+
+    def _trace_tick(self, interval: float) -> None:
+        if self._shutdown:
+            return
+        for node in self.nodes.values():
+            credit = (self.ledger_balance(node.id)
+                      + self.shared_ledger.stake_of(node.id))
+            self.credit_trace.append((self.loop.now, node.id, credit))
+        self.loop.schedule(interval, lambda: self._trace_tick(interval))
+
+    # -------------------------------------------------------------- execution
+    def run(self, requests: Sequence[Request], until: float,
+            trace_interval: Optional[float] = 10.0,
+            rebalance_interval: float = 2.0, drain: bool = True
+            ) -> MetricsCollector:
+        self._shutdown = False
+        for req in requests:
+            self.loop.schedule_at(req.arrival, lambda r=req: self.submit(r))
+        if self.mode == "decentralized":
+            self.loop.schedule(self.gossip_interval, self._gossip_tick)
+            if self.restake_interval:
+                self.loop.schedule(self.restake_interval, self._restake_tick)
+            if rebalance_interval:
+                self.loop.schedule(rebalance_interval,
+                                   lambda: self._rebalance_tick(rebalance_interval))
+        if trace_interval:
+            self.loop.schedule(0.0, lambda: self._trace_tick(trace_interval))
+        self.loop.run(until=until)
+        self._shutdown = True          # periodic tasks stop rescheduling
+        if drain:
+            self.loop.run()            # let in-flight requests complete
+        return self.metrics

@@ -1,0 +1,141 @@
+"""A WWW.Serve node (paper Figure 2).
+
+Each node bundles the five managers:
+
+* **Request Manager** — local + delegated queues, admission timestamps.
+* **Policy Manager**  — ``NodePolicy`` decisions (offload / accept / priority).
+* **Ledger Manager**  — either a shared ledger handle or a local CreditChain.
+* **Model Manager**   — backend-agnostic execution: an analytic
+  ``BackendProfile`` (simulation) or a real JAX serving engine callback.
+* **Communication Manager** — message send via the network bus (latency
+  injected by the event loop; ZeroMQ ROUTER in the paper).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.gossip import PeerView
+from repro.core.policy import NodePolicy
+from repro.sim.servicemodel import BackendProfile
+from repro.sim.workload import Request
+
+if TYPE_CHECKING:
+    from repro.core.network import Network
+
+
+@dataclass
+class QueuedRequest:
+    req: Request
+    enqueue_time: float
+    delegated: bool
+    origin_node: str              # who the response must be returned to
+    duel_id: Optional[str] = None # set if this execution is part of a duel
+
+
+class Node:
+    def __init__(self, node_id: str, profile: BackendProfile,
+                 policy: Optional[NodePolicy] = None,
+                 quality: Optional[float] = None) -> None:
+        self.id = node_id
+        self.profile = profile
+        self.policy = policy or NodePolicy()
+        self.quality = profile.quality if quality is None else quality
+        self.secret = node_id.encode() + b"-secret"
+        self.view = PeerView(node_id, addr=f"tcp://{node_id}:5555")
+        self.online = True
+
+        # Request Manager state
+        self.local_queue: List[QueuedRequest] = []
+        self.delegated_queue: List[QueuedRequest] = []
+        self.n_active = 0
+
+        # stats
+        self.served_total = 0
+        self.served_delegated = 0
+        self.duel_wins = 0
+        self.duel_losses = 0
+
+        self.network: Optional["Network"] = None  # set on Network.add_node
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def queue_len(self) -> int:
+        return len(self.local_queue) + len(self.delegated_queue)
+
+    def utilization(self) -> float:
+        return self.n_active / max(1, self.profile.saturation)
+
+    def balance(self) -> float:
+        return self.network.ledger_balance(self.id)
+
+    # --------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        """User submits a request to this node (paper Fig 9, Step 1)."""
+        assert self.network is not None
+        if not self.online:
+            # user traffic to an offline node is re-targeted by the network
+            self.network.resubmit_elsewhere(req)
+            return
+        net, rng = self.network, self.network.rng
+        # Step 2: local vs offload decision (Policy Manager)
+        if (net.mode == "decentralized"
+                and self.policy.wants_offload(self.queue_len, self.n_active,
+                                              self.profile.saturation,
+                                              self.balance(), rng)):
+            if net.try_offload(self, req):
+                return
+        self.enqueue(QueuedRequest(req, net.loop.now, delegated=False,
+                                   origin_node=self.id))
+
+    def enqueue(self, qr: QueuedRequest) -> None:
+        (self.delegated_queue if qr.delegated else self.local_queue).append(qr)
+        self._maybe_start()
+
+    def _pop_next(self) -> Optional[QueuedRequest]:
+        if self.policy.prioritize_local:
+            for q in (self.local_queue, self.delegated_queue):
+                if q:
+                    return q.pop(0)
+            return None
+        both = self.local_queue + self.delegated_queue
+        if not both:
+            return None
+        qr = min(both, key=lambda x: x.enqueue_time)
+        (self.local_queue if not qr.delegated else self.delegated_queue).remove(qr)
+        return qr
+
+    def _maybe_start(self) -> None:
+        net = self.network
+        while (self.online and self.n_active < self.profile.max_concurrency
+               and self.queue_len > 0):
+            qr = self._pop_next()
+            if qr is None:
+                break
+            self.n_active += 1
+            st = self.profile.service_time(qr.req.prompt_tokens,
+                                           qr.req.output_tokens,
+                                           self.n_active)
+            net.loop.schedule(st, lambda qr=qr: self._finish(qr))
+
+    def _finish(self, qr: QueuedRequest) -> None:
+        self.n_active -= 1
+        self.served_total += 1
+        if qr.delegated:
+            self.served_delegated += 1
+        self.network.on_request_finished(self, qr)
+        self._maybe_start()
+
+    # ------------------------------------------------------------------ churn
+    def go_offline(self) -> None:
+        self.online = False
+        self.view.set_offline(self.network.loop.now)
+
+    def go_online(self) -> None:
+        self.online = True
+        self.view.heartbeat(self.network.loop.now)
+        self.network.resync_chain(self.id)   # catch up on missed blocks
+        self._maybe_start()

@@ -1,0 +1,46 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+The model zoo calls these entry points; ``backend="auto"`` picks the Pallas
+kernel when running on real TPU hardware and the jnp reference otherwise
+(this container is CPU-only, so 'auto' = reference; kernels are still
+exercised in interpret mode by the test suite and benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.flash_decode import flash_decode_tpu
+from repro.kernels.ref import decode_ref, flash_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "backend",
+                                             "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              backend: str = "auto", interpret: bool = True) -> jax.Array:
+    """Prefill/train attention. q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D)."""
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if use_pallas:
+        return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                   interpret=interpret and not _on_tpu())
+    return flash_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "backend", "interpret"))
+def decode(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None,
+           backend: str = "auto", interpret: bool = True) -> jax.Array:
+    """Single-token decode. q: (B,1,H,D); caches: (B,S,Hkv,D)."""
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if use_pallas:
+        return flash_decode_tpu(q, k_cache, v_cache, cache_len, window=window,
+                                interpret=interpret and not _on_tpu())
+    return decode_ref(q, k_cache, v_cache, cache_len, window=window)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracles for the Pallas kernels (also the CPU/dry-run path)."""
+
+from repro.models.attention import (decode_attention as decode_ref,
+                                    flash_attention as flash_ref,
+                                    reference_attention)
+
+__all__ = ["decode_ref", "flash_ref", "reference_attention"]

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+# The 512 placeholder host devices exist ONLY here — smoke tests and benches
+# see the real single CPU device.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from typing import Dict, Optional, Tuple   # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, grid     # noqa: E402
+from repro.launch import sharding as sh                      # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_production_mesh)         # noqa: E402
+from repro.launch.specs import input_specs                   # noqa: E402
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step)            # noqa: E402
+from repro.models import runtime                             # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (post-SPMD module)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)", line)
+        if not m:
+            continue
+        result_shape, op = m.groups()
+        op = op.rstrip(".0123456789")
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        out[base] += _shape_bytes(result_shape)
+    return out
+
+
+def hbm_traffic_bytes(hlo_text: str) -> float:
+    """As-if-fused HBM traffic estimate from the optimized HLO graph.
+
+    XLA:CPU fuses far less than XLA:TPU, so raw ``bytes accessed`` counts
+    every elementwise instruction's operands as HBM traffic.  We instead walk
+    the instruction graph and count operand + result bytes only for ops that
+    are HBM-traffic boundaries on TPU (dots, reduces, collectives, gathers/
+    scatters, slices, fusions), treating elementwise/broadcast/reshape chains
+    as fused.  See EXPERIMENTS.md §Roofline for the definition.
+    """
+    heavy_prefixes = ("dot", "convolution", "fusion", "reduce",
+                      "all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute", "gather", "scatter",
+                      "dynamic-slice", "dynamic-update-slice", "sort", "copy",
+                      "transpose", "custom-call")
+    line_re = re.compile(
+        r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)"
+        r"\(([^)]*)\)")
+    sizes: Dict[str, int] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = line_re.match(line)
+        if not m:
+            continue
+        name, shape_txt, op, operands = m.groups()
+        nbytes = _shape_bytes(shape_txt)
+        sizes[name] = nbytes
+        opb = op.rstrip(".0123456789")
+        if any(opb == p or opb.startswith(p) for p in heavy_prefixes):
+            opnd = 0
+            for tok in operands.split(","):
+                tok = tok.strip().lstrip("%").split(" ")[0]
+                opnd += sizes.get(tok, 0)
+            total += nbytes + opnd
+    return total
+
+
+def _lower(arch: str, shape_name: str, mesh, kw: Dict, *,
+           roofline: bool = False, k_groups: Optional[int] = None):
+    """One lowering; roofline=True unrolls structural loops for exact counts;
+    k_groups lowers a reduced-depth config (roofline extrapolation)."""
+    kw = dict(kw)
+    flags = {k: kw.pop(k) for k in ("seq_parallel_", "decode_seq_shard_",
+                                    "attn_batch_only_", "gqa_native_",
+                                    "moe_a2a_")
+             if k in kw}
+    data_fsdp = not kw.pop("tp_only_params", False)
+    donate_cache = kw.pop("donate_cache", False)
+    pad_heads = kw.pop("pad_heads", None)
+    kv_quant = kw.pop("kv_quant", False)
+    base_cfg = get_config(arch, shape_name)
+    if pad_heads:
+        base_cfg = base_cfg.replace(n_heads=pad_heads)
+    if kv_quant:
+        base_cfg = base_cfg.replace(kv_quant=True)
+    cfg_override = base_cfg if (pad_heads or kv_quant or k_groups is None) else None
+    if k_groups is not None:
+        from repro.launch.specs import reduced_depth
+        cfg_override = reduced_depth(base_cfg, k_groups)
+    specs = input_specs(arch, shape_name, cfg_override=cfg_override)
+    cfg, shp = specs["cfg"], specs["shape"]
+    if roofline:
+        kw["microbatches"] = 1
+    ctx = runtime.roofline_lowering() if roofline else _nullctx()
+    with runtime.perf_flags(**flags), ctx, jax.sharding.set_mesh(mesh):
+        if shp.kind == "train":
+            step = build_train_step(cfg, shp, **kw)
+            pshard = sh.params_shardings(specs["state"]["params"], mesh,
+                                         data_fsdp=data_fsdp)
+            oshard = {"mu": pshard, "nu": pshard,
+                      "step": NamedSharding(mesh, P())}
+            state_sh = {"params": pshard, "opt": oshard}
+            batch_sh = sh.batch_shardings(specs["batch"], mesh)
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None)
+                              ).lower(specs["state"], specs["batch"])
+        elif shp.kind == "prefill":
+            step = build_prefill_step(cfg, shp,
+                                      **{k: v for k, v in kw.items()
+                                         if k.endswith("chunk")})
+            pshard = sh.params_shardings(specs["params"], mesh,
+                                         data_fsdp=data_fsdp)
+            batch_sh = sh.batch_shardings(specs["batch"], mesh)
+            cache_struct = jax.eval_shape(step, specs["params"],
+                                          specs["batch"])[1]
+            cache_sh = sh.cache_shardings(cache_struct, mesh)
+            lowered = jax.jit(step, in_shardings=(pshard, batch_sh),
+                              out_shardings=(None, cache_sh)
+                              ).lower(specs["params"], specs["batch"])
+        else:
+            step = build_serve_step(cfg, shp)
+            pshard = sh.params_shardings(specs["params"], mesh,
+                                         data_fsdp=data_fsdp)
+            cache_sh = sh.cache_shardings(specs["cache"], mesh)
+            tok_sh = sh.batch_shardings(specs["token"], mesh)
+            lowered = jax.jit(step, in_shardings=(pshard, cache_sh, tok_sh),
+                              out_shardings=(None, cache_sh),
+                              donate_argnums=(1,) if donate_cache else ()
+                              ).lower(specs["params"], specs["cache"],
+                                      specs["token"])
+        compiled = lowered.compile()
+    return compiled, cfg, shp
+
+
+import contextlib                                            # noqa: E402
+
+
+def _nullctx():
+    return contextlib.nullcontext()
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              perf_variant: Optional[str] = None,
+              with_roofline: Optional[bool] = None):
+    """Lower + compile one (arch × shape) on the production mesh.
+
+    Two lowerings: FIT (production scan structure -> memory analysis and the
+    compile-success proof; the only one run for multi-pod) and ROOFLINE
+    (loops unrolled -> exact flops/bytes/collective counts; single-pod only).
+    perf_variant enables §Perf hillclimb configs (see EXPERIMENTS.md).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    kw: Dict = {}
+    for part in (perf_variant or "").split("+"):
+        if part == "skip_blocks":
+            kw["skip_masked_blocks"] = True
+        elif part == "seqpar":
+            kw["seq_parallel_"] = True
+        elif part == "lsedecode":
+            kw["decode_seq_shard_"] = True
+        elif part == "attnbatch":
+            kw["attn_batch_only_"] = True
+        elif part == "tponly":
+            kw["tp_only_params"] = True
+        elif part == "gqanative":
+            kw["gqa_native_"] = True
+        elif part == "donate":
+            kw["donate_cache"] = True
+        elif part == "kvint8":
+            kw["kv_quant"] = True
+        elif part == "moea2a":
+            kw["moe_a2a_"] = True
+        elif part.startswith("padheads"):
+            kw["pad_heads"] = int(part[len("padheads"):])
+        elif part.startswith("qchunk"):
+            kw["q_chunk"] = kw["kv_chunk"] = int(part[len("qchunk"):])
+        elif part.startswith("mb"):
+            kw["microbatches"] = int(part[2:])
+
+    t0 = time.time()
+    compiled, cfg, shp = _lower(arch, shape_name, mesh, kw)
+    t_fit = time.time() - t0
+    mem = compiled.memory_analysis()
+    report = {
+        "arch": arch, "shape": shape_name, "kind": shp.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "perf_variant": perf_variant or "baseline",
+        "compile_s": round(t_fit, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+    }
+
+    if with_roofline is None:
+        with_roofline = not multi_pod
+    if not with_roofline:
+        return compiled, report
+
+    # Roofline terms by exact linear extrapolation over the homogeneous layer
+    # stack: lower 1-group and 2-group reduced configs with loops unrolled;
+    # per-group delta x (G-1) + 1-group base gives the full-depth counts.
+    from repro.launch.specs import n_groups_of
+
+    def stats(k_groups: int):
+        rc, rcfg, _ = _lower(arch, shape_name, mesh, kw, roofline=True,
+                             k_groups=k_groups)
+        cost = rc.cost_analysis() or {}
+        hlo = rc.as_text()
+        return {"flops": float(cost.get("flops", 0.0)),
+                "hbm": hbm_traffic_bytes(hlo),
+                "coll": collective_bytes(hlo)}
+
+    t0 = time.time()
+    s1 = stats(1)
+    s2 = stats(2)
+    t_roof = time.time() - t0
+    G = n_groups_of(get_config(arch, shape_name))
+
+    def extrap(a, b):
+        return a + (G - 1) * (b - a)
+
+    flops = max(extrap(s1["flops"], s2["flops"]), 0.0)
+    bytes_acc = max(extrap(s1["hbm"], s2["hbm"]), 0.0)
+    coll = {k: max(extrap(s1["coll"][k], s2["coll"][k]), 0.0)
+            for k in s1["coll"]}
+    coll_total = sum(coll.values())
+
+    compute_t = flops / PEAK_FLOPS_BF16
+    memory_t = bytes_acc / HBM_BW
+    collective_t = coll_total / ICI_BW_PER_LINK
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: useful-math floor for this step
+    n_active = cfg.n_active_params()
+    tokens = shp.global_batch * (shp.seq_len if shp.kind != "decode" else 1)
+    model_flops = (6.0 if shp.kind == "train" else 2.0) * n_active * tokens
+    hlo_flops_global = flops * n_chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    report["roofline_compile_s"] = round(t_roof, 1)
+    report["per_device"] = {"flops": flops, "bytes_accessed": bytes_acc}
+    report["collective_bytes"] = coll
+    report["roofline"] = {
+        "compute_ms": round(compute_t * 1e3, 4),
+        "memory_ms": round(memory_t * 1e3, 4),
+        "collective_ms": round(collective_t * 1e3, 4),
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_fraction": round(useful, 4),
+    }
+    return compiled, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--perf-variant", default=None)
+    ap.add_argument("--out", default=None, help="append JSONL reports here")
+    args = ap.parse_args(argv)
+
+    combos = grid() if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape in combos:
+        try:
+            _, rep = lower_one(arch, shape, multi_pod=args.multi_pod,
+                               perf_variant=args.perf_variant)
+            line = json.dumps(rep)
+            print(line, flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((arch, shape, repr(e)))
+            print(json.dumps({"arch": arch, "shape": shape,
+                              "error": repr(e)[:500]}), flush=True)
+    if failures:
+        print(f"FAILED {len(failures)}/{len(combos)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

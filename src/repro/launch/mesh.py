@@ -1,0 +1,29 @@
+"""Production mesh builders (TPU v5e pods; 512 host devices in the dry-run).
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Single-device mesh for smoke tests / examples on this CPU container."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW_PER_LINK = 50e9       # bytes/s per link

@@ -1,0 +1,166 @@
+"""Sharding rules: map every param / batch / cache leaf to a PartitionSpec.
+
+Scheme (baseline, recorded in the roofline):
+* batch dims          -> ("pod", "data")            (data parallel)
+* heads / ffn / vocab / experts / recurrence width -> "model" (tensor/expert
+  parallel)
+* the matching contraction dim of each weight      -> "data"  (FSDP; XLA
+  all-gathers weights on use, reduce-scatters grads)
+* KV-cache sequence dim at decode                  -> "model" (sequence-
+  sharded attention; queries are tiny at decode so this is the only way long
+  caches fit HBM)
+
+Any axis that does not divide its mesh extent falls back to None (e.g.
+36 heads on a 16-way model axis stay unsharded in shard-strict spots; GSPMD
+handles uneven cases where we do shard).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# last-path-component -> role
+_UP = {"wq", "wk", "wv", "w_gate", "w_up", "w_up1", "w_up2", "w_y", "w_x",
+       "w_a", "w_i", "w_z", "w_f", "router", "lm_head"}
+_DOWN = {"wo", "w_down", "w_o"}
+_EXPERT_UP = {"we_gate", "we_up"}
+_EXPERT_DOWN = {"we_down"}
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def _trim(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes that don't evenly divide (keeps shard_map-compatible specs)."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        out.append(axes if _fits(dim, mesh, axes) else None)
+    return P(*out)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Spec for one parameter leaf; ``path`` is the joined pytree path."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    bx = _batch_axes(mesh)
+    data = "data" if "data" in mesh.axis_names else None
+    if nd <= 1:
+        return P()
+    if name == "embed":
+        return _trim(("model", data), shape, mesh)
+    if name in ("enc_pos", "dec_pos"):
+        return _trim((None, "model"), shape, mesh)
+    if name in _EXPERT_UP or name in _EXPERT_DOWN:
+        # (L, E, d_in, d_out): experts -> model, contraction -> data (FSDP)
+        if name in _EXPERT_UP:
+            return _trim((None, "model", data, None), shape, mesh)
+        return _trim((None, "model", None, data), shape, mesh)
+    if name in _UP:
+        if nd == 2:
+            return _trim((data, "model"), shape, mesh)
+        if nd == 3:
+            return _trim((None, data, "model"), shape, mesh)
+        if nd == 4:   # stacked block-diagonal (G, H, dh, dh)
+            return _trim((None, None, data, "model"), shape, mesh)
+    if name in _DOWN:
+        if nd == 2:
+            return _trim(("model", data), shape, mesh)
+        if nd == 3:
+            return _trim((None, "model", data), shape, mesh)
+        if nd == 4:
+            return _trim((None, None, "model", data), shape, mesh)
+    if name in ("r_z", "r_i", "r_f", "r_o"):   # sLSTM recurrent (G,H,dh,dh)
+        return _trim((None, None, None, "model"), shape, mesh)
+    if name == "conv_w":
+        return _trim((None,) * (nd - 1) + ("model",), shape, mesh)
+    if name == "lam":
+        return _trim((None,) * (nd - 1) + ("model",), shape, mesh)
+    # norms, biases, small leftovers: replicate
+    return P()
+
+
+def params_shardings(params_tree, mesh: Mesh, *, data_fsdp: bool = True):
+    """Pytree of NamedShardings matching ``params_tree`` (arrays or structs).
+
+    ``data_fsdp=False`` drops the 'data' (FSDP) axis from every param spec —
+    the inference sharding: weights stay TP-resident, no per-step all-gather
+    (§Perf variant ``tponly``).
+    """
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = param_spec(pstr, leaf.shape, mesh)
+        if not data_fsdp:
+            spec = P(*(None if a == "data" else
+                       (tuple(x for x in a if x != "data") or None)
+                       if isinstance(a, tuple) else a for a in spec))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Tokens/labels/embeds: shard the leading batch dim."""
+    bx = _batch_axes(mesh)
+    spec = (bx,) + (None,) * (len(shape) - 1)
+    return _trim(spec, shape, mesh)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh)),
+        batch_tree)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode caches: batch -> data axes; long axes -> model."""
+    name = path.split("/")[-1]
+    bx = _batch_axes(mesh)
+    nd = len(shape)
+    if name in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale"):
+        # (L, B, S, Hkv, dh): sequence-sharded KV over "model"
+        return _trim((None, bx, "model", None, None), shape, mesh)
+    if name == "length":
+        return P()
+    if name == "C":       # mLSTM matrix state (G, B, H, dh, dh)
+        return _trim((None, bx, None, None, "model"), shape, mesh)
+    if name == "conv":    # (G, B, cw-1, W)
+        return _trim((None, bx) + (None,) * (nd - 3) + ("model",), shape, mesh)
+    if name in ("h", "n", "m", "c"):
+        # recurrent vector states (G, B, ...) — shard last dim over model
+        spec = (None, bx) + (None,) * (nd - 3) + ("model",)
+        return _trim(spec, shape, mesh)
+    # default: batch only (dim 1 is batch for stacked (L,B,...) caches)
+    return _trim((None, bx) + (None,) * (nd - 2), shape, mesh)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return NamedSharding(mesh, cache_spec(pstr, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_shardings(state_tree, params_shard):
+    """Optimizer moments mirror the parameter shardings."""
+    return {"params": params_shard,
+            "mu": params_shard, "nu": params_shard}

@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the abstract batch for lowering; decode
+shapes additionally need ``cache_struct`` (built by abstract evaluation of the
+prefill, so every family's cache layout — KV rings, RG-LRU states, mLSTM
+matrix memories, Whisper cross-KV — comes out right by construction).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, InputShape, get_config
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+TOK = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int,
+                 with_labels: bool) -> Dict:
+    """Abstract model-input batch for one (config, B, S)."""
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict = {}
+    if cfg.family == "audio":
+        # frontend STUB: precomputed mel/conv frame embeddings
+        out["encoder_embeds"] = _sds((batch, cfg.encoder_seq, cfg.d_model), dt)
+        out["tokens"] = _sds((batch, seq), TOK)
+    elif cfg.embeds_input:
+        # frontend STUB: precomputed vision patch embeddings + (t,h,w) ids
+        out["embeds"] = _sds((batch, seq, cfg.d_model), dt)
+        out["positions"] = _sds((batch, seq, 3), TOK)
+    else:
+        out["tokens"] = _sds((batch, seq), TOK)
+    if with_labels:
+        out["labels"] = _sds((batch, seq), TOK)
+    return out
+
+
+def params_struct(cfg: ModelConfig):
+    return registry.params_shape(cfg)
+
+
+def state_struct(cfg: ModelConfig):
+    from repro.training.train_step import state_shape
+    return state_shape(cfg)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int):
+    """Abstract decode cache for a fully-prefilled context of length ``seq``."""
+    fam = registry.get_family(cfg)
+    ps = params_struct(cfg)
+    bs = batch_struct(cfg, batch, seq, with_labels=False)
+
+    def run(params, b):
+        _, cache = fam.prefill(params, cfg, b, q_chunk=1024, kv_chunk=1024,
+                               capacity=seq)
+        return cache
+
+    return jax.eval_shape(run, ps, bs)
+
+
+def token_struct(batch: int):
+    return _sds((batch, 1), TOK)
+
+
+def reduced_depth(cfg: ModelConfig, k_groups: int) -> ModelConfig:
+    """Same config with k pattern-groups of layers (roofline extrapolation)."""
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern or ("rec", "rec", "attn"))
+        tail = cfg.n_layers % pat
+        return cfg.replace(n_layers=pat * k_groups + tail)
+    if cfg.family == "ssm":
+        pat = len(cfg.xlstm_pattern or ("m", "s"))
+        tail = cfg.n_layers % pat
+        return cfg.replace(n_layers=pat * k_groups + tail)
+    if cfg.family == "audio":
+        return cfg.replace(n_layers=k_groups, n_encoder_layers=k_groups)
+    return cfg.replace(n_layers=k_groups)
+
+
+def n_groups_of(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.block_pattern or ("rec", "rec", "attn"))
+    if cfg.family == "ssm":
+        return cfg.n_layers // len(cfg.xlstm_pattern or ("m", "s"))
+    return cfg.n_layers                     # audio: Le == Ld == n_layers
+
+
+def input_specs(arch: str, shape_name: str,
+                cfg_override: Optional[ModelConfig] = None) -> Dict:
+    """Everything dryrun/train/serve need for one (arch × input shape)."""
+    shp = INPUT_SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch, shape_name)
+    out = {"cfg": cfg, "shape": shp}
+    if shp.kind == "train":
+        out["state"] = state_struct(cfg)
+        out["batch"] = batch_struct(cfg, shp.global_batch, shp.seq_len,
+                                    with_labels=True)
+    elif shp.kind == "prefill":
+        out["params"] = params_struct(cfg)
+        out["batch"] = batch_struct(cfg, shp.global_batch, shp.seq_len,
+                                    with_labels=False)
+    else:  # decode
+        out["params"] = params_struct(cfg)
+        out["cache"] = cache_struct(cfg, shp.global_batch, shp.seq_len)
+        out["token"] = token_struct(shp.global_batch)
+    return out

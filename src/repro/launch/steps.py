@@ -1,0 +1,72 @@
+"""Step builders for the dry-run / launchers: train_step, prefill_step,
+serve_step (single decode token), parameterized per architecture."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import make_train_step
+
+# per-(family) lowering knobs: microbatch count for train_4k, attention chunks
+TRAIN_MICROBATCHES = {
+    "dbrx-132b": 8, "command-r-plus-104b": 8, "qwen3-32b": 8,
+    "recurrentgemma-9b": 4, "qwen3-8b": 4, "starcoder2-7b": 4,
+    "qwen2-vl-7b": 4, "granite-moe-1b-a400m": 2, "xlstm-1.3b": 2,
+    "whisper-base": 1,
+}
+
+
+def microbatches_for(cfg: ModelConfig, shape: InputShape) -> int:
+    mb = TRAIN_MICROBATCHES.get(cfg.name.replace("-window", ""), 4)
+    while shape.global_batch % mb != 0:
+        mb //= 2
+    return max(mb, 1)
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape,
+                     microbatches: Optional[int] = None,
+                     q_chunk: int = 1024, kv_chunk: int = 1024,
+                     skip_masked_blocks: bool = False):
+    opt = AdamWConfig()
+    mb = microbatches or microbatches_for(cfg, shape)
+    kw = dict(q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if cfg.family in ("dense", "vlm") and skip_masked_blocks:
+        kw["skip_masked_blocks"] = True
+    if cfg.family == "ssm":
+        kw = {"chunk": 256}
+    if cfg.family == "audio":
+        kw = {"q_chunk": q_chunk}
+    return make_train_step(cfg, opt, microbatches=mb, **kw)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape,
+                       q_chunk: int = 1024, kv_chunk: int = 1024):
+    fam = registry.get_family(cfg)
+    kw = dict(q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if cfg.family == "ssm":
+        kw = {"chunk": 256}
+    if cfg.family == "audio":
+        kw = {"q_chunk": q_chunk}
+
+    def prefill_step(params, batch):
+        return fam.prefill(params, cfg, batch, capacity=shape.seq_len, **kw)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, shape: InputShape):
+    """One decode token against a cache of length seq_len."""
+    fam = registry.get_family(cfg)
+
+    def serve_step(params, cache, token):
+        return fam.decode_step(params, cfg, cache, token)
+
+    return serve_step

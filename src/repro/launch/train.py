@@ -1,0 +1,73 @@
+"""Training launcher: runs a real (host-scale) training loop.
+
+Production pods use the same ``build_train_step`` the dry-run lowers; on this
+CPU container you train reduced ("smoke") variants, e.g.::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+        --steps 50 --batch 8 --seq 128 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, TokenPipeline
+from repro.training import AdamWConfig, init_state, make_train_step
+from repro.training import checkpoint as ckpt
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="train the reduced same-family variant (CPU)")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke().replace(dtype="float32")
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"family={cfg.family}")
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    state = init_state(jax.random.PRNGKey(args.seed), cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=1,
+                                      q_chunk=64, kv_chunk=64))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch, seed=args.seed))
+    t0 = time.time()
+    for i in range(args.steps):
+        raw = pipe.batch(i)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        if cfg.family == "audio":
+            batch["encoder_embeds"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.embeds_input:
+            tokens = batch.pop("tokens")
+            batch["embeds"] = jax.nn.one_hot(
+                tokens % cfg.d_model, cfg.d_model, dtype=jnp.float32)
+        state, m = step_fn(state, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f}")
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
+    if args.checkpoint:
+        ckpt.save(args.checkpoint, state, step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

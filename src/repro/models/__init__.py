@@ -1,0 +1,6 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import (FAMILIES, apply_logits, apply_with_aux,
+                                   get_family, init, params_shape)
+
+__all__ = ["ModelConfig", "FAMILIES", "apply_logits", "apply_with_aux",
+           "get_family", "init", "params_shape"]

@@ -1,0 +1,375 @@
+"""Memory-sane attention in pure jnp (flash-style chunked online softmax).
+
+This is simultaneously (i) the attention used by every model in the zoo for
+train / prefill lowering (O(chunk²) peak memory, so 32k prefill fits), and
+(ii) the numerical oracle that the Pallas kernels in ``repro.kernels`` are
+validated against.
+
+Supports causal masking, GQA (n_kv_heads < n_heads), and sliding windows.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,Hkv,D) -> (B,S,H,D) by repeating kv heads (GQA)."""
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                   window: Optional[int]) -> jax.Array:
+    """(Sq, Skv) boolean 'attend' mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        q_offset: int = 0) -> jax.Array:
+    """Naive O(S²) attention — oracle for tests, small shapes only.
+
+    q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D).  ``q_offset`` is the absolute position
+    of q[0] (used at decode: Sq=1 at position Skv-1).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    mask = attention_mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    skip_masked_blocks: bool = False) -> jax.Array:
+    """Chunked online-softmax attention, O(q_chunk·kv_chunk) score memory.
+
+    q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D), Sq == Skv (train / prefill).
+    ``skip_masked_blocks`` unrolls the q-chunk loop in Python and, per q
+    chunk, only visits kv chunks intersecting the causal/window band —
+    halving causal FLOPs (§Perf iteration; off = simplest baseline).
+    """
+    from repro.models import runtime
+    if runtime.roofline_mode():
+        # exact op counts require python-unrolled block loops + big chunks
+        q_chunk = runtime.attn_chunk(q_chunk)
+        kv_chunk = runtime.attn_chunk(kv_chunk)
+        skip_masked_blocks = True
+    b, sq_orig, h, d = q.shape
+    skv_orig = k.shape[1]
+    q_chunk = min(q_chunk, sq_orig)
+    kv_chunk = min(kv_chunk, skv_orig)
+    q_pad = (-sq_orig) % q_chunk
+    kv_pad = (-skv_orig) % kv_chunk
+    # pad to chunk multiples; padded keys sit at positions >= skv_orig and are
+    # masked out below, padded queries are sliced off the output.
+    if q_pad:
+        q = jnp.pad(q, [(0, 0), (0, q_pad), (0, 0), (0, 0)])
+    if kv_pad:
+        kv_p = [(0, 0), (0, kv_pad), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, kv_p), jnp.pad(v, kv_p)
+    sq, skv = sq_orig + q_pad, skv_orig + kv_pad
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = d ** -0.5
+
+    from repro.models import runtime as _rt
+    if _rt.gqa_native() and k.shape[2] < h:
+        # §Perf variant: keep K/V at n_kv_heads — q grouped (Hkv, rep) — so
+        # expanded KV copies never materialize (HBM traffic / memory term)
+        hkv = k.shape[2]
+        rep = h // hkv
+        qg = q.reshape(b, sq, hkv, rep, d).transpose(0, 2, 3, 1, 4)
+        qg = qg.reshape(b, hkv * rep, sq, d)   # grouped-head contiguous
+        kr = k.transpose(0, 2, 1, 3).reshape(b, hkv, skv, d)
+        vr = v.transpose(0, 2, 1, 3).reshape(b, hkv, skv, d)
+        out = _flash_grouped(qg, kr, vr, rep, nq, nk, q_chunk, kv_chunk,
+                             causal, window, skv_orig, scale,
+                             skip_masked_blocks)
+        out = (out.reshape(b, hkv, rep, sq, d).transpose(0, 3, 1, 2, 4)
+               .reshape(b, sq, h, d))[:, :sq_orig]
+        return out.astype(q.dtype)
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    # (B, H, nq, qc, D) etc. — scan over chunk axes
+    qr = q.transpose(0, 2, 1, 3).reshape(b, h, nq, q_chunk, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b, h, nk, kv_chunk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b, h, nk, kv_chunk, d)
+
+    def one_q_chunk(qi: int, qc: jax.Array, kv_lo: int, kv_hi: int) -> jax.Array:
+        """qc: (B,H,qc,D); visit kv chunks [kv_lo, kv_hi)."""
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, kj):
+            acc, m, l = carry
+            kc = jax.lax.dynamic_index_in_dim(kr, kj, 2, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vr, kj, 2, keepdims=False)
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * scale
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            mask = attention_mask(q_pos, k_pos, causal, window)
+            mask &= (k_pos < skv_orig)[None, :]
+            sc = jnp.where(mask[None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        init = (jnp.zeros((b, h, q_chunk, d), jnp.float32),
+                jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32))
+        if skip_masked_blocks:
+            carry = init
+            for kj in range(kv_lo, kv_hi):
+                carry, _ = body(carry, kj)
+            acc, m, l = carry
+        else:
+            (acc, m, l), _ = jax.lax.scan(body, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if skip_masked_blocks:
+        outs = []
+        for qi in range(nq):
+            q_hi_pos = (qi + 1) * q_chunk - 1
+            q_lo_pos = qi * q_chunk
+            hi = (q_hi_pos // kv_chunk + 1) if causal else nk
+            lo = 0
+            if window is not None:
+                lo = max(0, (q_lo_pos - window + 1) // kv_chunk)
+            outs.append(one_q_chunk(qi, qr[:, :, qi], lo, min(hi, nk)))
+        out = jnp.stack(outs, axis=2)                  # (B,H,nq,qc,D)
+    else:
+        out = jax.lax.map(
+            lambda qi: one_q_chunk(qi, jax.lax.dynamic_index_in_dim(
+                qr, qi, 2, keepdims=False), 0, nk),
+            jnp.arange(nq))                            # (nq,B,H,qc,D)
+        out = jnp.moveaxis(out, 0, 2)                  # (B,H,nq,qc,D)
+    out = out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)[:, :sq_orig]
+    return out.astype(q.dtype)
+
+
+def kv_quantize(x: jax.Array):
+    """Symmetric int8 per-(token, head) quantization of K/V.
+
+    x: (..., D) -> (int8 values, bf16 scales (..., 1)).  Halves (vs bf16) the
+    dominant decode HBM stream and cache residency; dequant is fused into the
+    attention read on TPU.
+    """
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _flash_grouped(qg, kr, vr, rep, nq, nk, q_chunk, kv_chunk, causal,
+                   window, skv_orig, scale, skip):
+    """GQA-native chunked flash: qg (B, Hkv*rep, Sq, D) grouped by kv head;
+    kr/vr (B, Hkv, Skv, D).  The rep query heads of a group share the kv
+    tiles, so K/V are never expanded."""
+    b, hr, sq, d = qg.shape
+    hkv = kr.shape[1]
+    qg = qg.reshape(b, hkv, rep, nq, q_chunk, d)
+    krc = kr.reshape(b, hkv, nk, kv_chunk, d)
+    vrc = vr.reshape(b, hkv, nk, kv_chunk, d)
+
+    def one_q(qi: int, qc: jax.Array, lo: int, hi: int) -> jax.Array:
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        acc = jnp.zeros((b, hkv, rep, q_chunk, d), jnp.float32)
+        m = jnp.full((b, hkv, rep, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, rep, q_chunk), jnp.float32)
+        for kj in range(lo, hi):
+            kc = krc[:, :, kj].astype(jnp.float32)
+            vc = vrc[:, :, kj].astype(jnp.float32)
+            sc = jnp.einsum("bgrqd,bgkd->bgrqk", qc.astype(jnp.float32),
+                            kc) * scale
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            mask = attention_mask(q_pos, k_pos, causal, window)
+            mask &= (k_pos < skv_orig)[None, :]
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vc)
+            m = m_new
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = []
+    for qi in range(nq):
+        hi = ((qi + 1) * q_chunk - 1) // kv_chunk + 1 if causal else nk
+        lo = 0
+        if window is not None:
+            lo = max(0, (qi * q_chunk - window + 1) // kv_chunk)
+        outs.append(one_q(qi, qg[:, :, :, qi], lo, min(hi, nk)))
+    out = jnp.stack(outs, axis=3)            # (B,Hkv,rep,nq,qc,D)
+    return out.reshape(b, hkv, rep, sq, d).reshape(b, hkv * rep, sq, d)
+
+
+def decode_attention_seqsharded(q: jax.Array, k_cache: jax.Array,
+                                v_cache: jax.Array, k_new: jax.Array,
+                                v_new: jax.Array, slot: jax.Array,
+                                cache_len: jax.Array, *,
+                                scales: Optional[tuple] = None):
+    """§Perf variant: sequence-sharded flash-decode via shard_map, with the
+    ring-cache write done LOCALLY by the owning shard.
+
+    Baseline GSPMD turns the dynamic-update-slice into a seq-sharded cache
+    into cache-sized collectives (the dominant decode collective in the
+    roofline).  Here each shard (a) updates its own slice if the write slot
+    falls in its range — zero communication — and (b) computes a partial
+    attention output + log-sum-exp over its chunk; a pmax/psum of the tiny
+    (B,1,H,D) partials combines them.  TPU analogue of flash-decode /
+    tree-attention sequence parallelism.
+
+    Returns (attn_out, new_k_cache, new_v_cache).
+    """
+    quant = scales is not None
+    if quant:
+        ks_cache, vs_cache, kn_scale, vn_scale = scales
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        dus = lambda c, n: jax.lax.dynamic_update_slice(c, n, (0, slot, 0, 0))
+        kc, vc = dus(k_cache, k_new), dus(v_cache, v_new)
+        if quant:
+            ks_c, vs_c = dus(ks_cache, kn_scale), dus(vs_cache, vn_scale)
+            out = decode_attention(q, kv_dequantize(kc, ks_c, q.dtype),
+                                   kv_dequantize(vc, vs_c, q.dtype),
+                                   cache_len)
+            return out, kc, vc, ks_c, vs_c
+        return decode_attention(q, kc, vc, cache_len), kc, vc
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b_spec = batch_ax if (batch_ax and q.shape[0] %
+                          _mesh_size(mesh, batch_ax) == 0) else None
+    h = q.shape[2]
+
+    def local(q_l, k_l, v_l, kn, vn, scalars, *scl):
+        # q_l/kn/vn: (B_l, 1, ·, D) replicated over model;
+        # k_l/v_l: (B_l, S/m, Hkv, D) — this shard's seq chunk.
+        slot_, n_valid = scalars[0], scalars[1]
+        d = q_l.shape[-1]
+        s_loc = k_l.shape[1]
+        shard = jax.lax.axis_index("model")
+        # (a) local ring write — no comms
+        local_slot = slot_ - shard * s_loc
+        in_range = (local_slot >= 0) & (local_slot < s_loc)
+        safe = jnp.clip(local_slot, 0, s_loc - 1)
+
+        def write(cache, new):
+            upd = jax.lax.dynamic_update_slice(
+                cache, new, (0, safe) + (0,) * (cache.ndim - 2))
+            return jnp.where(in_range, upd, cache)
+
+        k_l, v_l = write(k_l, kn), write(v_l, vn)
+        if quant:
+            ks_l, vs_l = write(scl[0], scl[2]), write(scl[1], scl[3])
+            kf = kv_dequantize(k_l, ks_l, jnp.float32)
+            vf = kv_dequantize(v_l, vs_l, jnp.float32)
+        else:
+            kf = k_l.astype(jnp.float32)
+            vf = v_l.astype(jnp.float32)
+        # (b) partial attention over the local chunk — GQA-native: K/V stay
+        # at n_kv_heads, the rep query heads of a group share the kv stream
+        bl = q_l.shape[0]
+        hkv = k_l.shape[2]
+        rep = h // hkv
+        qg = q_l.reshape(bl, hkv, rep, d).astype(jnp.float32)
+        sc = jnp.einsum("bgrd,bkgd->bgrk", qg, kf) / (d ** 0.5)
+        pos = shard * s_loc + jnp.arange(s_loc)
+        valid = pos[None, :] < jnp.reshape(n_valid, (-1, 1))
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        m_loc = sc.max(-1)                                      # (B,Hkv,rep)
+        m_glob = jax.lax.pmax(m_loc, "model")
+        p = jnp.exp(sc - m_glob[..., None])
+        l_loc = p.sum(-1)
+        o_loc = jnp.einsum("bgrk,bkgd->bgrd", p, vf)
+        l = jax.lax.psum(l_loc, "model")
+        o = jax.lax.psum(o_loc, "model")
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).reshape(bl, 1, h, d)
+        if quant:
+            return out.astype(q_l.dtype), k_l, v_l, ks_l, vs_l
+        return out.astype(q_l.dtype), k_l, v_l
+
+    rep_spec = P(b_spec, None, None, None)
+    seq_spec = P(b_spec, "model", None, None)
+    in_specs = [rep_spec, seq_spec, seq_spec, rep_spec, rep_spec, P()]
+    out_specs = [rep_spec, seq_spec, seq_spec]
+    args = [q, k_cache, v_cache, k_new, v_new,
+            jnp.stack([jnp.asarray(slot, jnp.int32),
+                       jnp.asarray(cache_len, jnp.int32)])]
+    if quant:
+        in_specs += [seq_spec, seq_spec, rep_spec, rep_spec]
+        out_specs += [seq_spec, seq_spec]
+        args += [ks_cache, vs_cache, kn_scale, vn_scale]
+    fn = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=tuple(out_specs), check_rep=False)
+    return fn(*args)
+
+
+def _mesh_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= dict(mesh.shape)[a]
+    return n
+
+
+def _concrete_mesh(abstract_mesh):
+    """shard_map accepts the abstract mesh directly in recent JAX."""
+    return abstract_mesh
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token decode attention over a (possibly partially filled) cache.
+
+    q: (B,1,H,D); k_cache/v_cache: (B,S,Hkv,D); cache_len: () or (B,) int32 —
+    number of valid positions (the query attends to positions < cache_len).
+    For sliding-window caches S == window and all positions are valid.
+    """
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    k = _expand_kv(k_cache, h).astype(jnp.float32)
+    v = _expand_kv(v_cache, h).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k) / (d ** 0.5)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))          # (B,S)|(1,S)
+    if window is not None:
+        valid &= pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)

@@ -1,0 +1,149 @@
+"""Shared layers: norms, activations, RoPE / M-RoPE, initializers, sharding."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical sharding: annotate intermediates; the mesh context resolves axes.
+# data-parallel batch spans ("pod", "data"); tensor-parallel spans "model".
+# ---------------------------------------------------------------------------
+
+BATCH_AXES = ("pod", "data")
+
+
+def _mesh_axes() -> Tuple[str, ...]:
+    env = jax.sharding.get_abstract_mesh()
+    try:
+        return tuple(env.axis_names) if env is not None else ()
+    except Exception:
+        return ()
+
+
+def logical(*axes: Optional[str]) -> P:
+    """Build a PartitionSpec, dropping mesh axes that don't exist.
+
+    ``logical("batch", None, "model")`` maps batch -> ("pod","data") when the
+    pod axis exists, else ("data",).
+    """
+    from repro.models import runtime
+    present = _mesh_axes()
+    spec = []
+    for a in axes:
+        if a is None:
+            spec.append(None)
+        elif a == "batch":
+            got = tuple(x for x in BATCH_AXES if x in present)
+            spec.append(got if got else None)
+        elif a == "seq":
+            # sequence parallelism (§Perf variant): shard the sequence dim
+            # over 'model' only when the flag is on
+            spec.append("model" if (runtime.seq_parallel()
+                                    and "model" in present) else None)
+        else:
+            spec.append(a if a in present else None)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh (no-op without mesh)."""
+    if not _mesh_axes():
+        return x
+    return jax.lax.with_sharding_constraint(x, logical(*axes))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x: jax.Array, p: dict, norm_type: str) -> jax.Array:
+    if norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_params(d: int, norm_type: str, dtype) -> dict:
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Sequence[int]) -> jax.Array:
+    """Qwen2-VL M-RoPE. x: (B,S,H,D); positions: (B,S,3) = (t,h,w) ids.
+
+    The D/2 rotary frequencies are split into ``sections`` (t,h,w); each
+    section rotates by its own position id (arXiv:2409.12191 §3.1).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    assert sum(sections) == d // 2, (
+        f"mrope_sections {sections} must sum to head_dim/2 = {d // 2}")
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])  # (D/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                         # (B,S,3)
+        jnp.broadcast_to(sec[None, None, :], positions.shape[:2] + sec.shape),
+        axis=-1)                                               # (B,S,D/2)
+    ang = pos * freqs                                          # (B,S,D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,326 @@
+"""Dense decoder-only transformer family.
+
+Covers: starcoder2 (LayerNorm+GeLU+bias), qwen3 (RMSNorm+SwiGLU+qk_norm),
+command-r-plus (parallel attention/FFN block, no bias), qwen2-vl (M-RoPE,
+embedding inputs), and the sliding-window long-context variants.
+
+Parameters are stacked over layers (leading L axis) so the layer stack is a
+single ``lax.scan`` — essential for 64-layer configs to compile quickly in the
+multi-pod dry-run.  Activation checkpointing wraps the per-layer block.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import runtime
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ModelConfig
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------- init
+def init(key: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = _dt(cfg)
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 16)
+
+    def stack(initfn, k, *shape_args, **kw):
+        ks = jax.random.split(k, L)
+        return jnp.stack([initfn(ks[i], *shape_args, **kw) for i in range(L)])
+
+    p: Dict = {
+        "embed": cm.embed_init(keys[0], cfg.padded_vocab, d, dt),
+        "final_norm": cm.norm_params(d, cfg.norm_type, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_init(keys[1], d, cfg.padded_vocab, dt)
+
+    lyr: Dict = {
+        "ln1": _stack_norm(L, d, cfg.norm_type, dt),
+        "wq": stack(cm.dense_init, keys[2], d, cfg.q_dim, dt),
+        "wk": stack(cm.dense_init, keys[3], d, cfg.kv_dim, dt),
+        "wv": stack(cm.dense_init, keys[4], d, cfg.kv_dim, dt),
+        "wo": stack(cm.dense_init, keys[5], cfg.q_dim, d, dt),
+    }
+    if not cfg.parallel_block:
+        lyr["ln2"] = _stack_norm(L, d, cfg.norm_type, dt)
+    if cfg.qk_norm:
+        lyr["q_norm"] = jnp.ones((L, cfg.head_dim), dt)
+        lyr["k_norm"] = jnp.ones((L, cfg.head_dim), dt)
+    if cfg.use_bias:
+        lyr["bq"] = jnp.zeros((L, cfg.q_dim), dt)
+        lyr["bk"] = jnp.zeros((L, cfg.kv_dim), dt)
+        lyr["bv"] = jnp.zeros((L, cfg.kv_dim), dt)
+        lyr["bo"] = jnp.zeros((L, d), dt)
+    if cfg.act == "swiglu":
+        lyr["w_gate"] = stack(cm.dense_init, keys[6], d, f, dt)
+        lyr["w_up"] = stack(cm.dense_init, keys[7], d, f, dt)
+        lyr["w_down"] = stack(cm.dense_init, keys[8], f, d, dt)
+    else:
+        lyr["w_up"] = stack(cm.dense_init, keys[6], d, f, dt)
+        lyr["w_down"] = stack(cm.dense_init, keys[7], f, d, dt)
+        if cfg.use_bias:
+            lyr["b_up"] = jnp.zeros((L, f), dt)
+            lyr["b_down"] = jnp.zeros((L, d), dt)
+    p["layers"] = lyr
+    return p
+
+
+def _stack_norm(L: int, d: int, norm_type: str, dt) -> Dict:
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((L, d), dt), "bias": jnp.zeros((L, d), dt)}
+    return {"scale": jnp.ones((L, d), dt)}
+
+
+# ---------------------------------------------------------------- sub-blocks
+def _project_qkv(lp: Dict, cfg: ModelConfig, h: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """h: (B,S,d) -> roped q (B,S,H,dh), k/v (B,S,Hkv,dh)."""
+    b, s, _ = h.shape
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.use_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    if not runtime.attn_batch_only():
+        q = cm.shard(q, "batch", None, "model")
+        k = cm.shard(k, "batch", None, "model")
+        v = cm.shard(v, "batch", None, "model")
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, lp["q_norm"])
+        k = cm.rms_norm(k, lp["k_norm"])
+    if cfg.mrope:
+        q = cm.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = cm.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp(lp: Dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        g = cm.shard(h @ lp["w_gate"], "batch", None, "model")
+        u = cm.shard(h @ lp["w_up"], "batch", None, "model")
+        return (jax.nn.silu(g) * u) @ lp["w_down"]
+    u = h @ lp["w_up"]
+    if cfg.use_bias:
+        u = u + lp["b_up"]
+    u = cm.shard(u, "batch", None, "model")
+    out = cm.gelu(u) @ lp["w_down"]
+    if cfg.use_bias:
+        out = out + lp["b_down"]
+    return out
+
+
+def _block_train(lp: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                 q_chunk: int, kv_chunk: int, skip_masked: bool) -> jax.Array:
+    h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+    q, k, v = _project_qkv(lp, cfg, h, positions)
+    attn = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk,
+                           skip_masked_blocks=skip_masked)
+    attn = attn.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ lp["wo"]
+    if cfg.use_bias:
+        attn = attn + lp["bo"]
+    if cfg.parallel_block:
+        return cm.shard(x + attn + _mlp(lp, cfg, h), "batch", "seq", None)
+    x = x + attn
+    h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+    x = x + _mlp(lp, cfg, h2)
+    return cm.shard(x, "batch", "seq", None)
+
+
+# ------------------------------------------------------------------- forward
+def apply(params: Dict, cfg: ModelConfig, batch: Dict, *,
+          q_chunk: int = 1024, kv_chunk: int = 1024,
+          skip_masked_blocks: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, padded_vocab)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    block_fn = functools.partial(_block_train, cfg=cfg, positions=positions,
+                                 q_chunk=min(q_chunk, x.shape[1]),
+                                 kv_chunk=min(kv_chunk, x.shape[1]),
+                                 skip_masked=skip_masked_blocks)
+    scan_body = jax.checkpoint(lambda carry, lp: (block_fn(lp, x=carry), None))
+    x, _ = jax.lax.scan(scan_body, x, params["layers"],
+                        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return logits_of(params, cfg, x)
+
+
+def embed_inputs(params: Dict, cfg: ModelConfig, batch: Dict
+                 ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.embeds_input and "embeds" in batch:
+        x = batch["embeds"].astype(_dt(cfg))
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    x = cm.shard(x, "batch", "seq", None)
+    positions = batch.get("positions")
+    if positions is None:
+        shape = (b, s, 3) if cfg.mrope else (b, s)
+        base = jnp.arange(s, dtype=jnp.int32)
+        positions = jnp.broadcast_to(base[None, :, None] if cfg.mrope
+                                     else base[None, :], shape)
+    return x, positions
+
+
+def logits_of(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return cm.shard(x @ head, "batch", None, "model")
+
+
+# --------------------------------------------------------------- decode path
+def _block_decode(lp: Dict, cfg: ModelConfig, x: jax.Array, kv: Dict,
+                  length: jax.Array, position: jax.Array
+                  ) -> Tuple[jax.Array, Dict]:
+    """One layer, one token.  x: (B,1,d); kv holds this layer's cache slices
+    (B,C,Hkv,dh) (+ per-token scales when cfg.kv_quant)."""
+    from repro.models.attention import kv_dequantize, kv_quantize
+    b = x.shape[0]
+    cap = kv["k"].shape[1]
+    h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+    pos = jnp.broadcast_to(position.reshape(1, 1), (b, 1))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(position.reshape(1, 1, 1), (b, 1, 3))
+    q, k, v = _project_qkv(lp, cfg, h, pos)
+    slot = jnp.mod(length, cap)                      # ring write (window cache)
+    n_valid = jnp.minimum(length + 1, cap)
+    writes = {"k": k, "v": v}
+    if cfg.kv_quant:
+        writes["k"], writes["k_scale"] = kv_quantize(k)
+        writes["v"], writes["v_scale"] = kv_quantize(v)
+    if runtime.decode_seq_shard():
+        # §Perf: shard-local ring write + LSE-combined partial attention —
+        # avoids GSPMD's cache-sized collectives for the seq-sharded update
+        from repro.models.attention import decode_attention_seqsharded
+        if cfg.kv_quant:
+            attn, kc, vc, ks_, vs_ = decode_attention_seqsharded(
+                q, kv["k"], kv["v"], writes["k"], writes["v"], slot, n_valid,
+                scales=(kv["k_scale"], kv["v_scale"],
+                        writes["k_scale"], writes["v_scale"]))
+            kv = {"k": kc, "v": vc, "k_scale": ks_, "v_scale": vs_}
+        else:
+            attn, kc, vc = decode_attention_seqsharded(
+                q, kv["k"], kv["v"], k, v, slot, n_valid)
+            kv = {"k": kc, "v": vc}
+    else:
+        kv = {name: jax.lax.dynamic_update_slice(
+            kv[name], w, (0, slot, 0, 0)) for name, w in writes.items()}
+        if cfg.kv_quant:
+            # int8 cache stream; dequant fuses into the attention read on TPU
+            kf = kv_dequantize(kv["k"], kv["k_scale"], _dt(cfg))
+            vf = kv_dequantize(kv["v"], kv["v_scale"], _dt(cfg))
+        else:
+            kf, vf = kv["k"], kv["v"]
+        attn = decode_attention(q, kf, vf, n_valid)
+    attn = attn.reshape(b, 1, cfg.q_dim) @ lp["wo"]
+    if cfg.use_bias:
+        attn = attn + lp["bo"]
+    if cfg.parallel_block:
+        return x + attn + _mlp(lp, cfg, h), kv
+    x = x + attn
+    h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+    return x + _mlp(lp, cfg, h2), kv
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array
+                ) -> Tuple[jax.Array, Dict]:
+    """cache: {"k": (L,B,C,Hkv,dh), "v": ..., "length": ()} ; token: (B,1).
+    With cfg.kv_quant the caches are int8 plus "k_scale"/"v_scale"."""
+    x = jnp.take(params["embed"], token, axis=0)
+    length = cache["length"]
+    kv_names = [n for n in ("k", "v", "k_scale", "v_scale") if n in cache]
+
+    def step(x, xs):
+        lp, kv = xs
+        x, kv = _block_decode(lp, cfg, x, kv, length, length)
+        return x, kv
+
+    x, kv_new = jax.lax.scan(
+        step, x, (params["layers"], {n: cache[n] for n in kv_names}),
+        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = logits_of(params, cfg, x)
+    return logits, {**kv_new, "length": length + 1}
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> Dict:
+    dt = dtype or _dt(cfg)
+    cap = capacity if cfg.sliding_window is None else min(capacity,
+                                                          cfg.sliding_window)
+    shape = (cfg.n_layers, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            q_chunk: int = 1024, kv_chunk: int = 1024,
+            capacity: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Run the prompt, build the KV cache, return last-position logits.
+
+    ``capacity`` is the cache size to allocate (>= prompt length for full
+    attention; defaults to the prompt length, which leaves no room to decode —
+    the serving engine passes prompt+max_new).  Sliding-window configs use a
+    ring cache of size ``sliding_window`` with the invariant
+    ``slot(position p) = p % window``.
+    """
+    x, positions = embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    if cfg.sliding_window is None:
+        cap = max(s, capacity or s)
+    else:
+        cap = min(cfg.sliding_window, capacity or cfg.sliding_window)
+
+    def step(carry, lp):
+        x = carry
+        h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+        q, k, v = _project_qkv(lp, cfg, h, positions)
+        attn = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                               q_chunk=min(q_chunk, s), kv_chunk=min(kv_chunk, s))
+        attn = attn.reshape(b, s, cfg.q_dim) @ lp["wo"]
+        if cfg.use_bias:
+            attn = attn + lp["bo"]
+        if cfg.parallel_block:
+            x = x + attn + _mlp(lp, cfg, h)
+        else:
+            x = x + attn
+            x = x + _mlp(lp, cfg, cm.apply_norm(x, lp["ln2"], cfg.norm_type))
+        x = cm.shard(x, "batch", "seq", None)
+
+        def ring(a):
+            if cap <= s:
+                # keep the last ``cap`` tokens, ring-rotated so that the
+                # token at absolute position p sits at slot p % cap.
+                return jnp.roll(a[:, -cap:], shift=s % cap, axis=1)
+            padw = [(0, 0), (0, cap - s)] + [(0, 0)] * (a.ndim - 2)
+            return jnp.pad(a, padw)
+
+        out = {"k": k, "v": v}
+        if cfg.kv_quant:
+            from repro.models.attention import kv_quantize
+            out["k"], out["k_scale"] = kv_quantize(k)
+            out["v"], out["v_scale"] = kv_quantize(v)
+        return x, {n: ring(a) for n, a in out.items()}
+
+    step = jax.checkpoint(step)
+    x, kvs = jax.lax.scan(step, x, params["layers"],
+                          unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = logits_of(params, cfg, x[:, -1:])
+    cache = {**kvs, "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache

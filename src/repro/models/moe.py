@@ -1,0 +1,299 @@
+"""Mixture-of-Experts transformer (granite-3.0-MoE, DBRX).
+
+Attention is shared with the dense family; the MLP is replaced by a top-k
+token-choice router with capacity-based, sort-free dispatch:
+
+* per batch row, tokens are argsorted by assigned expert; the rank of a token
+  within its expert comes from a searchsorted difference (no (T,E) one-hot);
+* tokens beyond the per-expert capacity C = ceil(S·k/E · cf) are dropped
+  (standard Switch/GShard semantics);
+* dispatch/combine are gather / scatter-add with a sentinel index (out-of-
+  range writes are dropped by XLA), so the only materialized buffer is
+  (B, E, C, d) — sharded over ``model`` on the expert axis.
+
+Expert compute is a single batched einsum over the expert axis, which the
+mesh shards over ``model`` (expert parallelism).  The combine induces one
+all-reduce over ``model`` per MoE layer — the baseline recorded in the
+roofline; an explicit all-to-all shard_map variant is a §Perf iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import runtime
+from repro.models import dense
+from repro.models.attention import flash_attention
+from repro.models.config import ModelConfig
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    c = int(tokens_per_row * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(cfg.top_k, min(c, tokens_per_row))
+
+
+# --------------------------------------------------------------------- init
+def init(key: jax.Array, cfg: ModelConfig) -> Dict:
+    p = dense.init(key, cfg)
+    lyr = p["layers"]
+    # replace dense MLP weights by router + per-expert SwiGLU weights
+    for name in ("w_gate", "w_up", "w_down", "b_up", "b_down"):
+        lyr.pop(name, None)
+    L, d, f, E = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(key, 4)
+
+    def stack_expert(k, d_in, d_out):
+        ks = jax.random.split(k, L * E)
+        w = [cm.dense_init(ks[i], d_in, d_out, _dt(cfg)) for i in range(L * E)]
+        return jnp.stack(w).reshape(L, E, d_in, d_out)
+
+    lyr["router"] = jnp.stack([
+        cm.dense_init(kk, d, E, jnp.float32, scale=0.1)
+        for kk in jax.random.split(keys[0], L)])
+    lyr["we_gate"] = stack_expert(keys[1], d, f)
+    lyr["we_up"] = stack_expert(keys[2], d, f)
+    lyr["we_down"] = stack_expert(keys[3], f, d)
+    return p
+
+
+# ---------------------------------------------------------------- MoE layer
+def route(cfg: ModelConfig, router_w: jax.Array, x: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,d) -> (gates (B,S,k), experts (B,S,k), aux_loss ())."""
+    logits = x.astype(jnp.float32) @ router_w            # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss: E * Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=(0, 1))                                  # (E,)
+    one_hot_top1 = jax.nn.one_hot(experts[..., 0], cfg.n_experts)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gates, experts, aux
+
+
+def _dispatch(cfg: ModelConfig, router_w: jax.Array, x: jax.Array):
+    """Sort-free capacity dispatch.  x: (B,S,d) -> (xin (B,E,C,d),
+    disp (B,E*C) token idx, gsel (B,E*C) gates, aux loss)."""
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = expert_capacity(cfg, s)
+    gates, experts, aux = route(cfg, router_w, x)
+
+    # flatten the k assignments: (B, S*k)
+    ef = experts.reshape(b, s * k)
+    gf = gates.reshape(b, s * k)
+    order = jnp.argsort(ef, axis=1, stable=True)                 # (B, S*k)
+    e_sorted = jnp.take_along_axis(ef, order, axis=1)
+    g_sorted = jnp.take_along_axis(gf, order, axis=1)
+    tok_sorted = order // k                                      # token index
+    # rank of each entry within its expert
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(e_sorted)
+    rank = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, e_sorted,
+                                                            axis=1)
+    keep = rank < C
+    slot = e_sorted * C + jnp.minimum(rank, C - 1)               # (B, S*k)
+    slot = jnp.where(keep, slot, E * C)                          # sentinel
+
+    # dispatch: token index per (expert, capacity) slot; sentinel = S (pad row)
+    disp = jnp.full((b, E * C + 1), s, jnp.int32)
+    disp = disp.at[jnp.arange(b)[:, None], slot].set(tok_sorted, mode="drop")
+    disp = disp[:, : E * C]
+    gsel = jnp.zeros((b, E * C + 1), jnp.float32)
+    gsel = gsel.at[jnp.arange(b)[:, None], slot].set(g_sorted, mode="drop")
+    gsel = gsel[:, : E * C]
+
+    xp = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xin = jnp.take_along_axis(xp, disp[:, :, None], axis=1)      # (B, E*C, d)
+    return xin.reshape(b, E, C, d), disp, gsel, aux
+
+
+def _combine(x: jax.Array, eout: jax.Array, disp: jax.Array,
+             gsel: jax.Array) -> jax.Array:
+    """Scatter-add expert outputs back to token order. eout: (B,E,C,d)."""
+    b, s, d = x.shape
+    ec = disp.shape[1]
+    eout = eout.reshape(b, ec, d).astype(jnp.float32) * gsel[:, :, None]
+    out = jnp.zeros((b, s, d), jnp.float32)
+    out = out.at[jnp.arange(b)[:, None], disp].add(eout, mode="drop")
+    return out.astype(x.dtype)
+
+
+def moe_mlp(cfg: ModelConfig, lp: Dict, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based top-k expert MLP. x: (B,S,d) -> (B,S,d), aux loss."""
+    if runtime.moe_a2a():
+        out = _moe_mlp_a2a(cfg, lp, x)
+        if out is not None:
+            return out
+    xin, disp, gsel, aux = _dispatch(cfg, lp["router"], x)
+    xin = cm.shard(xin, "batch", "model", None, None)
+
+    h = jnp.einsum("becd,edf->becf", xin, lp["we_gate"])
+    u = jnp.einsum("becd,edf->becf", xin, lp["we_up"])
+    h = cm.shard(jax.nn.silu(h) * u, "batch", "model", None, None)
+    eout = jnp.einsum("becf,efd->becd", h, lp["we_down"])        # (B,E,C,d)
+    out = _combine(x, eout, disp, gsel)
+    return cm.shard(out, "batch", "seq", None), aux
+
+
+def _moe_mlp_a2a(cfg: ModelConfig, lp: Dict, x: jax.Array):
+    """§Perf variant: explicit expert-parallel all-to-all dispatch.
+
+    The baseline keeps activations replicated over 'model' and lets the
+    combine scatter-add psum into an all-reduce of the full (B,S,d) stream.
+    Here the layer runs in shard_map: tokens sequence-sharded over 'model',
+    each shard routes ONLY its tokens, and two lax.all_to_all calls move just
+    the (E, C, d) expert buffers (≈ top_k/E of the activation bytes) to and
+    from the expert-owning shards.  Returns None if shapes don't divide
+    (falls back to the einsum path).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    m = dict(mesh.shape)["model"]
+    b, s, d = x.shape
+    bx = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = 1
+    for a in bx:
+        nb *= dict(mesh.shape)[a]
+    if m == 1 or cfg.n_experts % m or s % m or (bx and b % nb):
+        return None
+    b_spec = bx if bx else None
+    e_loc = cfg.n_experts // m
+
+    def local(x_l, router_w, wg, wu, wd):
+        # x_l: (B_l, S/m, d); wg/wu/wd: (E_loc, ...) — this shard's experts
+        xin, disp, gsel, aux = _dispatch(cfg, router_w, x_l)   # (B_l,E,C,d)
+        # send each expert's buffer to its owning shard
+        recv = jax.lax.all_to_all(xin, "model", split_axis=1, concat_axis=2,
+                                  tiled=True)                  # (B_l,e_loc,m*C,d)
+        h = jnp.einsum("becd,edf->becf", recv, wg)
+        u = jnp.einsum("becd,edf->becf", recv, wu)
+        eout = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u, wd)
+        back = jax.lax.all_to_all(eout, "model", split_axis=2, concat_axis=1,
+                                  tiled=True)                  # (B_l,E,C,d)
+        out = _combine(x_l, back, disp, gsel)
+        return out, jax.lax.pmean(aux, "model")
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(b_spec, "model", None), P(),
+                             P("model", None, None),
+                             P("model", None, None),
+                             P("model", None, None)),
+                   out_specs=(P(b_spec, "model", None), P()),
+                   check_rep=False)
+    out, aux = fn(x, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"])
+    return cm.shard(out, "batch", "seq", None), aux
+
+
+# ------------------------------------------------------------------- forward
+def _block(lp: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+           q_chunk: int, kv_chunk: int) -> Tuple[jax.Array, jax.Array]:
+    h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+    q, k, v = dense._project_qkv(lp, cfg, h, positions)
+    attn = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+    attn = attn.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ lp["wo"]
+    x = x + attn
+    h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+    mlp_out, aux = moe_mlp(cfg, lp, h2)
+    return cm.shard(x + mlp_out, "batch", "seq", None), aux
+
+
+def apply(params: Dict, cfg: ModelConfig, batch: Dict, *,
+          q_chunk: int = 1024, kv_chunk: int = 1024
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits, aux_loss)."""
+    x, positions = dense.embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    fn = functools.partial(_block, cfg=cfg, positions=positions,
+                           q_chunk=min(q_chunk, s), kv_chunk=min(kv_chunk, s))
+    body = jax.checkpoint(lambda carry, lp: fn(lp, x=carry))
+    x, auxes = jax.lax.scan(body, x, params["layers"],
+                            unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return dense.logits_of(params, cfg, x), jnp.mean(auxes)
+
+
+# --------------------------------------------------------------- decode path
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array
+                ) -> Tuple[jax.Array, Dict]:
+    x = jnp.take(params["embed"], token, axis=0)
+    length = cache["length"]
+
+    def step(x, xs):
+        lp, kc, vc = xs
+        b = x.shape[0]
+        cap = kc.shape[1]
+        h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+        pos = jnp.broadcast_to(length.reshape(1, 1), (b, 1))
+        q, k, v = dense._project_qkv(lp, cfg, h, pos)
+        slot = jnp.mod(length, cap)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        from repro.models.attention import decode_attention
+        attn = decode_attention(q, kc, vc, jnp.minimum(length + 1, cap))
+        attn = attn.reshape(b, 1, cfg.q_dim) @ lp["wo"]
+        x = x + attn
+        h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+        mlp_out, _ = moe_mlp(cfg, lp, h2)
+        return x + mlp_out, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return dense.logits_of(params, cfg, x), {"k": k_new, "v": v_new,
+                                             "length": length + 1}
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            q_chunk: int = 1024, kv_chunk: int = 1024,
+            capacity: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    x, positions = dense.embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    if cfg.sliding_window is None:
+        cap = max(s, capacity or s)
+    else:
+        cap = min(cfg.sliding_window, capacity or cfg.sliding_window)
+
+    def step(carry, lp):
+        x = carry
+        h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+        q, k, v = dense._project_qkv(lp, cfg, h, positions)
+        attn = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                               q_chunk=min(q_chunk, s), kv_chunk=min(kv_chunk, s))
+        attn = attn.reshape(b, s, cfg.q_dim) @ lp["wo"]
+        x = x + attn
+        h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+        mlp_out, _ = moe_mlp(cfg, lp, h2)
+        x = cm.shard(x + mlp_out, "batch", "seq", None)
+        if cap <= s:
+            kk = jnp.roll(k[:, -cap:], shift=s % cap, axis=1)
+            vv = jnp.roll(v[:, -cap:], shift=s % cap, axis=1)
+        else:
+            padw = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+            kk, vv = jnp.pad(k, padw), jnp.pad(v, padw)
+        return x, (kk, vv)
+
+    step = jax.checkpoint(step)
+    x, (ks, vs) = jax.lax.scan(step, x, params["layers"],
+                               unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = dense.logits_of(params, cfg, x[:, -1:])
+    return logits, {"k": ks, "v": vs, "length": jnp.asarray(s, jnp.int32)}
+
+
+init_cache = dense.init_cache

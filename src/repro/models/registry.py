@@ -1,0 +1,60 @@
+"""Family registry: uniform (init / apply / prefill / decode_step) interface."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, moe, rglru, whisper, xlstm
+from repro.models.config import ModelConfig
+
+
+class Family(NamedTuple):
+    init: Callable
+    apply: Callable          # full-sequence forward -> logits (or (logits, aux))
+    prefill: Callable        # -> (last logits, cache)
+    decode_step: Callable    # (params, cfg, cache, token) -> (logits, cache)
+    has_aux: bool = False
+
+
+FAMILIES: Dict[str, Family] = {
+    "dense": Family(dense.init, dense.apply, dense.prefill, dense.decode_step),
+    "vlm": Family(dense.init, dense.apply, dense.prefill, dense.decode_step),
+    "moe": Family(moe.init, moe.apply, moe.prefill, moe.decode_step,
+                  has_aux=True),
+    "hybrid": Family(rglru.init, rglru.apply, rglru.prefill, rglru.decode_step),
+    "ssm": Family(xlstm.init, xlstm.apply, xlstm.prefill, xlstm.decode_step),
+    "audio": Family(whisper.init, whisper.apply, whisper.prefill,
+                    whisper.decode_step),
+}
+
+
+def get_family(cfg: ModelConfig) -> Family:
+    return FAMILIES[cfg.family]
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    return get_family(cfg).init(key, cfg)
+
+
+def apply_logits(params, cfg: ModelConfig, batch: Dict, **kw) -> jax.Array:
+    """Forward pass returning logits only (aux dropped)."""
+    fam = get_family(cfg)
+    out = fam.apply(params, cfg, batch, **kw)
+    return out[0] if fam.has_aux else out
+
+
+def apply_with_aux(params, cfg: ModelConfig, batch: Dict, **kw
+                   ) -> Tuple[jax.Array, jax.Array]:
+    fam = get_family(cfg)
+    out = fam.apply(params, cfg, batch, **kw)
+    if fam.has_aux:
+        return out
+    return out, jnp.zeros((), jnp.float32)
+
+
+def params_shape(cfg: ModelConfig):
+    """Parameter pytree as ShapeDtypeStructs — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,343 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (paper arXiv:2402.19427): repeating (recurrent, recurrent,
+local-attention); every temporal block is followed by a gated-GeLU MLP.
+38 layers = 12 full groups + a 2-layer recurrent tail.
+
+The RG-LRU is a gated linear recurrence
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t),
+    a_t = exp(-c · softplus(Λ) · r_t),  r_t, i_t input-dependent sigmoids,
+computed with ``jax.lax.associative_scan`` for train/prefill (TPU-friendly
+parallel scan — our hardware adaptation of the paper's CUDA linear-scan
+kernel) and as a single-step update at decode.  Decode state is O(1) in
+sequence length, so `long_500k` runs natively (no KV cache growth).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import runtime
+from repro.models import dense
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ModelConfig
+
+C_RGLRU = 8.0
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def group_structure(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_groups = cfg.n_layers // len(pat)
+    tail = pat[: cfg.n_layers - n_groups * len(pat)]
+    return n_groups, tail
+
+
+# ------------------------------------------------------------------ params
+def _rec_params(key, cfg: ModelConfig, dt) -> Dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": cm.norm_params(d, cfg.norm_type, dt),
+        "w_y": cm.dense_init(ks[0], d, w, dt),         # gelu branch
+        "w_x": cm.dense_init(ks[1], d, w, dt),         # recurrent branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1
+                   ).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": cm.dense_init(ks[3], w, w, dt, scale=0.5),
+        "w_i": cm.dense_init(ks[4], w, w, dt, scale=0.5),
+        "lam": jnp.asarray(jax.random.uniform(ks[5], (w,), jnp.float32,
+                                              0.5, 2.0)),
+        "w_o": cm.dense_init(ks[6], w, d, dt),
+    }
+
+
+def _attn_params(key, cfg: ModelConfig, dt) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": cm.norm_params(d, cfg.norm_type, dt),
+        "wq": cm.dense_init(ks[0], d, cfg.q_dim, dt),
+        "wk": cm.dense_init(ks[1], d, cfg.kv_dim, dt),
+        "wv": cm.dense_init(ks[2], d, cfg.kv_dim, dt),
+        "wo": cm.dense_init(ks[3], cfg.q_dim, d, dt),
+    }
+
+
+def _mlp_params(key, cfg: ModelConfig, dt) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": cm.norm_params(d, cfg.norm_type, dt),
+        "w_gate": cm.dense_init(ks[0], d, f, dt),
+        "w_up": cm.dense_init(ks[1], d, f, dt),
+        "w_down": cm.dense_init(ks[2], f, d, dt),
+    }
+
+
+def _stack(fn, key, n: int):
+    ks = jax.random.split(key, n)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(k) for k in ks])
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = _dt(cfg)
+    n_groups, tail = group_structure(cfg)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    keys = jax.random.split(key, 8)
+    p: Dict = {
+        "embed": cm.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": cm.norm_params(cfg.d_model, cfg.norm_type, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_init(keys[5], cfg.d_model, cfg.padded_vocab, dt)
+    group: Dict = {}
+    for i, kind in enumerate(pat):
+        sub = jax.random.fold_in(keys[1], i)
+        mk = (functools.partial(_rec_params, cfg=cfg, dt=dt) if kind == "rec"
+              else functools.partial(_attn_params, cfg=cfg, dt=dt))
+        group[f"blk{i}"] = _stack(mk, sub, n_groups)
+        group[f"mlp{i}"] = _stack(
+            functools.partial(_mlp_params, cfg=cfg, dt=dt),
+            jax.random.fold_in(keys[2], i), n_groups)
+    p["groups"] = group
+    tail_p: Dict = {}
+    for i, kind in enumerate(tail):
+        sub = jax.random.fold_in(keys[3], i)
+        mk = (functools.partial(_rec_params, cfg=cfg, dt=dt) if kind == "rec"
+              else functools.partial(_attn_params, cfg=cfg, dt=dt))
+        tail_p[f"blk{i}"] = mk(sub)
+        tail_p[f"mlp{i}"] = _mlp_params(jax.random.fold_in(keys[4], i), cfg, dt)
+    p["tail"] = tail_p
+    return p
+
+
+# ------------------------------------------------------------------ RG-LRU
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B,T,W); w: (cw, W)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(u, shape=u.shape)
+    for j in range(cw):
+        shifted = jnp.pad(u, [(0, 0), (j, 0), (0, 0)])[:, : u.shape[1]]
+        out = out + shifted * w[j]
+    return out + b
+
+
+def _rglru_gates(rp: Dict, u: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (a, beta·i·u) — the linear-recurrence coefficients, fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ rp["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ rp["w_i"].astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(rp["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * uf
+
+
+def rglru_scan(rp: Dict, u: jax.Array, h0: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Parallel associative scan over time. u: (B,T,W) -> (h (B,T,W), h_T)."""
+    a, b = _rglru_gates(rp, u)
+    if h0 is not None:
+        # fold the incoming state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(rp: Dict, u: jax.Array, h_prev: jax.Array) -> jax.Array:
+    """Single decode step. u: (B,1,W), h_prev: (B,W) -> h (B,W)."""
+    a, b = _rglru_gates(rp, u)
+    return a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
+
+
+# ------------------------------------------------------------------ blocks
+def _rec_block(rp: Dict, cfg: ModelConfig, x: jax.Array,
+               h0: Optional[jax.Array] = None,
+               conv_state: Optional[jax.Array] = None, decode: bool = False):
+    """Griffin recurrent temporal block.  Returns (out, h_T, conv_state)."""
+    h = cm.apply_norm(x, rp["ln"], cfg.norm_type)
+    y = cm.gelu(h @ rp["w_y"])
+    u = h @ rp["w_x"]
+    cw = cfg.conv_width
+    if decode:
+        # conv over the last cw inputs: state holds previous cw-1 u's
+        hist = jnp.concatenate([conv_state, u], axis=1)     # (B, cw, W)
+        # hist[-1] is u_t and the train conv is out_t = Σ_j w[j]·u_{t-j},
+        # so the kernel applies reversed over the history window.
+        conv = (hist * rp["conv_w"][::-1][None]).sum(axis=1, keepdims=True) \
+            + rp["conv_b"]
+        new_conv_state = hist[:, 1:]
+        h_new = rglru_step(rp, conv, h0)
+        out = (y * h_new[:, None].astype(y.dtype)) @ rp["w_o"]
+        return x + out, h_new, new_conv_state
+    conv = _causal_conv(u, rp["conv_w"], rp["conv_b"])
+    rec, h_last = rglru_scan(rp, conv, h0)
+    out = (y * rec) @ rp["w_o"]
+    # conv state for subsequent decode: last cw-1 raw inputs
+    new_conv_state = u[:, -(cw - 1):]
+    return x + out, h_last, new_conv_state
+
+
+def _attn_block_train(ap: Dict, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, q_chunk: int, kv_chunk: int):
+    b, s, _ = x.shape
+    h = cm.apply_norm(x, ap["ln"], cfg.norm_type)
+    q = cm.shard(h @ ap["wq"], "batch", None, "model")
+    k = h @ ap["wk"]
+    v = h @ ap["wv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    attn = flash_attention(q, k, v, causal=True, window=cfg.local_window,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = attn.reshape(b, s, cfg.q_dim) @ ap["wo"]
+    return x + out, k, v
+
+
+def _attn_block_decode(ap: Dict, cfg: ModelConfig, x: jax.Array,
+                       kc: jax.Array, vc: jax.Array, length: jax.Array):
+    b = x.shape[0]
+    cap = kc.shape[1]
+    h = cm.apply_norm(x, ap["ln"], cfg.norm_type)
+    pos = jnp.broadcast_to(length.reshape(1, 1), (b, 1))
+    q = (h @ ap["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (h @ ap["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ ap["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = cm.apply_rope(q, pos, cfg.rope_theta)
+    k = cm.apply_rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(length, cap)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    attn = decode_attention(q, kc, vc, jnp.minimum(length + 1, cap))
+    out = attn.reshape(b, 1, cfg.q_dim) @ ap["wo"]
+    return x + out, kc, vc
+
+
+def _mlp_block(mp: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = cm.apply_norm(x, mp["ln"], cfg.norm_type)
+    g = cm.shard(h @ mp["w_gate"], "batch", None, "model")
+    u = cm.shard(h @ mp["w_up"], "batch", None, "model")
+    return x + (cm.gelu(g) * u) @ mp["w_down"]
+
+
+# ------------------------------------------------------------------ forward
+def apply(params: Dict, cfg: ModelConfig, batch: Dict, *,
+          q_chunk: int = 1024, kv_chunk: int = 1024) -> jax.Array:
+    logits, _ = _forward(params, cfg, batch, q_chunk, kv_chunk,
+                         want_cache=False)
+    return logits
+
+
+def _forward(params: Dict, cfg: ModelConfig, batch: Dict, q_chunk: int,
+             kv_chunk: int, want_cache: bool, capacity: Optional[int] = None):
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    _, tail = group_structure(cfg)
+    x, positions = dense.embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    qc, kc_ = min(q_chunk, s), min(kv_chunk, s)
+    win = min(cfg.local_window, capacity or cfg.local_window)
+
+    def run_block(x, bp, mp, kind):
+        """Returns (x, state_tuple) — state pieces padded to a uniform pytree."""
+        if kind == "rec":
+            x, h_last, conv_st = _rec_block(bp, cfg, x)
+            st = {"h": h_last, "conv": conv_st}
+        else:
+            x, k, v = _attn_block_train(bp, cfg, x, positions, qc, kc_)
+            if win <= s:
+                k = jnp.roll(k[:, -win:], shift=s % win, axis=1)
+                v = jnp.roll(v[:, -win:], shift=s % win, axis=1)
+            else:
+                padw = [(0, 0), (0, win - s), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+            st = {"k": k, "v": v}
+        x = _mlp_block(mp, cfg, x)
+        return x, st
+
+    def group_step(x, gp):
+        states = {}
+        for i, kind in enumerate(pat):
+            x, st = run_block(x, gp[f"blk{i}"], gp[f"mlp{i}"], kind)
+            states[f"blk{i}"] = st
+        return x, states
+
+    body = jax.checkpoint(group_step)
+    x, group_states = jax.lax.scan(body, x, params["groups"],
+                                   unroll=runtime.scan_unroll())
+    tail_states = []
+    for i, kind in enumerate(tail):
+        x, st = run_block(x, params["tail"][f"blk{i}"],
+                          params["tail"][f"mlp{i}"], kind)
+        tail_states.append(st)
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    if want_cache:
+        logits = dense.logits_of(params, cfg, x[:, -1:])
+        cache = {"groups": group_states, "tail": tail_states,
+                 "length": jnp.asarray(s, jnp.int32)}
+        return logits, cache
+    return dense.logits_of(params, cfg, x), None
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            q_chunk: int = 1024, kv_chunk: int = 1024,
+            capacity: Optional[int] = None):
+    return _forward(params, cfg, batch, q_chunk, kv_chunk, want_cache=True,
+                    capacity=capacity)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array):
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    _, tail = group_structure(cfg)
+    x = jnp.take(params["embed"], token, axis=0)
+    length = cache["length"]
+
+    def run_block_decode(x, bp, mp, st, kind):
+        if kind == "rec":
+            x, h_new, conv_new = _rec_block(bp, cfg, x, h0=st["h"],
+                                            conv_state=st["conv"], decode=True)
+            st = {"h": h_new, "conv": conv_new}
+        else:
+            x, kc, vc = _attn_block_decode(bp, cfg, x, st["k"], st["v"], length)
+            st = {"k": kc, "v": vc}
+        return _mlp_block(mp, cfg, x), st
+
+    def group_step(x, xs):
+        gp, gst = xs
+        new = {}
+        for i, kind in enumerate(pat):
+            x, st = run_block_decode(x, gp[f"blk{i}"], gp[f"mlp{i}"],
+                                     gst[f"blk{i}"], kind)
+            new[f"blk{i}"] = st
+        return x, new
+
+    x, new_groups = jax.lax.scan(group_step, x,
+                                 (params["groups"], cache["groups"]),
+                                 unroll=runtime.scan_unroll())
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, st = run_block_decode(x, params["tail"][f"blk{i}"],
+                                 params["tail"][f"mlp{i}"],
+                                 cache["tail"][i], kind)
+        new_tail.append(st)
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = dense.logits_of(params, cfg, x)
+    return logits, {"groups": new_groups, "tail": new_tail,
+                    "length": length + 1}

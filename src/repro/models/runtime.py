@@ -1,0 +1,109 @@
+"""Lowering-mode switches for the dry-run roofline analysis.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, so a scan-over-layers
+model under-reports FLOPs/bytes by the trip count.  For the ROOFLINE lowering
+we therefore unroll the structural loops (layer scans, attention block loops,
+mLSTM chunk scans) so the compiled artifact's op counts are exact; the FIT
+lowering (memory analysis, multi-pod proof) keeps the production scan
+structure.  ``roofline_mode()`` is consulted at every scan site.
+
+The one loop that cannot be unrolled at 4k+ steps is the sLSTM time scan
+(true sequential dependence).  In roofline mode it is replaced by a
+flops-equivalent parallel surrogate: identical matmul/elementwise op counts
+per timestep, recurrent inputs taken from the (precomputed) input stream
+instead of h_{t-1}.  This changes VALUES, never op counts — and the roofline
+only reads op counts.  Documented in EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+_ROOFLINE: ContextVar[bool] = ContextVar("repro_roofline_mode", default=False)
+
+
+def roofline_mode() -> bool:
+    return _ROOFLINE.get()
+
+
+@contextlib.contextmanager
+def roofline_lowering():
+    tok = _ROOFLINE.set(True)
+    try:
+        yield
+    finally:
+        _ROOFLINE.reset(tok)
+
+
+def scan_unroll():
+    """unroll parameter for structural lax.scans."""
+    return True if _ROOFLINE.get() else 1
+
+
+def attn_chunk(default: int) -> int:
+    """Bigger attention chunks in roofline mode keep the unrolled block count
+    small (the block loop is python-unrolled there)."""
+    return 4096 if _ROOFLINE.get() else default
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants (EXPERIMENTS.md): beyond-paper sharding options.
+# ---------------------------------------------------------------------------
+
+_SEQ_PARALLEL: ContextVar[bool] = ContextVar("repro_seq_parallel",
+                                             default=False)
+_DECODE_SEQ_SHARD: ContextVar[bool] = ContextVar("repro_decode_seq_shard",
+                                                 default=False)
+_ATTN_BATCH_ONLY: ContextVar[bool] = ContextVar("repro_attn_batch_only",
+                                                default=False)
+_GQA_NATIVE: ContextVar[bool] = ContextVar("repro_gqa_native", default=False)
+_MOE_A2A: ContextVar[bool] = ContextVar("repro_moe_a2a", default=False)
+
+
+def moe_a2a() -> bool:
+    """Explicit expert-parallel all-to-all MoE dispatch (see moe.py)."""
+    return _MOE_A2A.get()
+
+
+def gqa_native() -> bool:
+    """GQA-native flash attention: K/V stay at n_kv_heads (no expanded
+    copies) — the rep query heads of a group share kv tiles."""
+    return _GQA_NATIVE.get()
+
+
+def seq_parallel() -> bool:
+    """Megatron-style sequence parallelism: residual activations sharded over
+    'model' along the sequence dim (reduce-scatter/all-gather replace the TP
+    all-reduces, and per-device activation memory drops by the TP degree)."""
+    return _SEQ_PARALLEL.get()
+
+
+def decode_seq_shard() -> bool:
+    """shard_map flash-decode: KV sequence-sharded over 'model' with an
+    explicit log-sum-exp combine (psum of (B,H,dh) partials) instead of
+    whatever GSPMD infers for the sharded softmax."""
+    return _DECODE_SEQ_SHARD.get()
+
+
+def attn_batch_only() -> bool:
+    """Skip the 'model' constraint on q/k/v projections (attention data-
+    parallel only) — for head counts that don't divide the model axis."""
+    return _ATTN_BATCH_ONLY.get()
+
+
+@contextlib.contextmanager
+def perf_flags(seq_parallel_: bool = False, decode_seq_shard_: bool = False,
+               attn_batch_only_: bool = False, gqa_native_: bool = False,
+               moe_a2a_: bool = False):
+    pairs = [(_SEQ_PARALLEL, seq_parallel_),
+             (_DECODE_SEQ_SHARD, decode_seq_shard_),
+             (_ATTN_BATCH_ONLY, attn_batch_only_),
+             (_GQA_NATIVE, gqa_native_),
+             (_MOE_A2A, moe_a2a_)]
+    toks = [(var, var.set(val)) for var, val in pairs]
+    try:
+        yield
+    finally:
+        for var, tok in toks:
+            var.reset(tok)

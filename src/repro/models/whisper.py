@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The mel-spectrogram + conv2 frontend is a STUB per the assignment carve-out:
+``input_specs`` feeds precomputed frame embeddings (B, encoder_seq, d) — the
+transformer encoder, the decoder (self + cross attention), and the serving /
+training substrate around them are fully implemented.
+
+Uses learned positional embeddings, LayerNorm, GeLU MLPs, biased projections
+(as in the original).  Decode caches: per-layer self-attention KV ring plus
+per-layer cross-attention K/V computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import runtime
+from repro.models import dense
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ModelConfig
+
+MAX_TARGET_POS = 4096   # learned decoder positions (real Whisper: 448)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = _dt(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+    keys = jax.random.split(key, 12)
+
+    def attn(k, kv_dim):
+        ks = jax.random.split(k, 4)
+        return {
+            "ln": cm.norm_params(d, "layernorm", dt),
+            "wq": cm.dense_init(ks[0], d, cfg.q_dim, dt),
+            "bq": jnp.zeros((cfg.q_dim,), dt),
+            "wk": cm.dense_init(ks[1], d, kv_dim, dt),
+            "wv": cm.dense_init(ks[2], d, kv_dim, dt),
+            "bv": jnp.zeros((kv_dim,), dt),
+            "wo": cm.dense_init(ks[3], cfg.q_dim, d, dt),
+            "bo": jnp.zeros((d,), dt),
+        }
+
+    def mlp(k):
+        ks = jax.random.split(k, 2)
+        return {
+            "ln": cm.norm_params(d, "layernorm", dt),
+            "w_up": cm.dense_init(ks[0], d, f, dt),
+            "b_up": jnp.zeros((f,), dt),
+            "w_down": cm.dense_init(ks[1], f, d, dt),
+            "b_down": jnp.zeros((d,), dt),
+        }
+
+    def stack(fn, k, n):
+        ks = jax.random.split(k, n)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(kk) for kk in ks])
+
+    return {
+        "enc_pos": (jax.random.normal(keys[0], (cfg.encoder_seq, d)) * 0.01
+                    ).astype(dt),
+        "enc_attn": stack(lambda k: attn(k, cfg.kv_dim), keys[1], Le),
+        "enc_mlp": stack(mlp, keys[2], Le),
+        "enc_norm": cm.norm_params(d, "layernorm", dt),
+        "embed": cm.embed_init(keys[3], cfg.padded_vocab, d, dt),
+        "dec_pos": (jax.random.normal(keys[4], (MAX_TARGET_POS, d)) * 0.01
+                    ).astype(dt),
+        "dec_self": stack(lambda k: attn(k, cfg.kv_dim), keys[5], Ld),
+        "dec_cross": stack(lambda k: attn(k, cfg.kv_dim), keys[6], Ld),
+        "dec_mlp": stack(mlp, keys[7], Ld),
+        "dec_norm": cm.norm_params(d, "layernorm", dt),
+    }   # lm head is tied to the token embedding (as in Whisper)
+
+
+def _heads(cfg, x, n):
+    return x.reshape(x.shape[0], x.shape[1], n, cfg.head_dim)
+
+
+def _attn_proj(ap, cfg, hq, hkv):
+    q = _heads(cfg, hq @ ap["wq"] + ap["bq"], cfg.n_heads)
+    k = _heads(cfg, hkv @ ap["wk"], cfg.n_kv_heads)
+    v = _heads(cfg, hkv @ ap["wv"] + ap["bv"], cfg.n_kv_heads)
+    return q, k, v
+
+
+def encode(params: Dict, cfg: ModelConfig, embeds: jax.Array) -> jax.Array:
+    """embeds: (B, encoder_seq, d) frame embeddings from the (stub) frontend."""
+    x = embeds.astype(_dt(cfg)) + params["enc_pos"][None, : embeds.shape[1]]
+    x = cm.shard(x, "batch", "seq", None)
+    s = x.shape[1]
+
+    def step(x, lp):
+        ap, mp = lp
+        h = cm.apply_norm(x, ap["ln"], "layernorm")
+        q, k, v = _attn_proj(ap, cfg, h, h)
+        a = flash_attention(q, k, v, causal=False,
+                            q_chunk=min(512, s), kv_chunk=min(512, s))
+        x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ ap["wo"] + ap["bo"]
+        h2 = cm.apply_norm(x, mp["ln"], "layernorm")
+        x = x + (cm.gelu(h2 @ mp["w_up"] + mp["b_up"]) @ mp["w_down"]
+                 + mp["b_down"])
+        return cm.shard(x, "batch", "seq", None), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(step), x,
+                        (params["enc_attn"], params["enc_mlp"]),
+                        unroll=runtime.scan_unroll())
+    return cm.apply_norm(x, params["enc_norm"], "layernorm")
+
+
+def _decoder_block(lp, cfg, x, enc_out, positions, q_chunk):
+    sp, cp, mp = lp
+    s = x.shape[1]
+    h = cm.apply_norm(x, sp["ln"], "layernorm")
+    q, k, v = _attn_proj(sp, cfg, h, h)
+    a = flash_attention(q, k, v, causal=True, q_chunk=min(q_chunk, s),
+                        kv_chunk=min(q_chunk, s))
+    x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ sp["wo"] + sp["bo"]
+    h = cm.apply_norm(x, cp["ln"], "layernorm")
+    q, k, v = _attn_proj(cp, cfg, h, enc_out)
+    a = flash_attention(q, k, v, causal=False, q_chunk=min(q_chunk, s),
+                        kv_chunk=min(512, enc_out.shape[1]))
+    x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ cp["wo"] + cp["bo"]
+    h = cm.apply_norm(x, mp["ln"], "layernorm")
+    x = x + cm.gelu(h @ mp["w_up"] + mp["b_up"]) @ mp["w_down"] + mp["b_down"]
+    return cm.shard(x, "batch", "seq", None)
+
+
+def apply(params: Dict, cfg: ModelConfig, batch: Dict, *,
+          q_chunk: int = 1024, **_) -> jax.Array:
+    """batch: {"encoder_embeds": (B,Se,d), "tokens": (B,St)} -> logits."""
+    enc_out = encode(params, cfg, batch["encoder_embeds"])
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    pos = jnp.arange(s) % MAX_TARGET_POS
+    x = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][pos][None]
+    x = cm.shard(x, "batch", "seq", None)
+    fn = functools.partial(_decoder_block, cfg=cfg, enc_out=enc_out,
+                           positions=pos, q_chunk=q_chunk)
+    body = jax.checkpoint(lambda c, lp: (fn(lp, x=c), None))
+    x, _ = jax.lax.scan(body, x, (params["dec_self"], params["dec_cross"],
+                                  params["dec_mlp"]),
+                        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["dec_norm"], "layernorm")
+    return cm.shard(x @ params["embed"].T, "batch", None, "model")
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            q_chunk: int = 1024, capacity: Optional[int] = None, **_):
+    """Encode audio + run the decoder prompt; build self/cross caches."""
+    enc_out = encode(params, cfg, batch["encoder_embeds"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cap = max(s, capacity or s)
+    pos = jnp.arange(s) % MAX_TARGET_POS
+    x = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][pos][None]
+
+    def step(x, lp):
+        sp, cp, mp = lp
+        h = cm.apply_norm(x, sp["ln"], "layernorm")
+        q, k, v = _attn_proj(sp, cfg, h, h)
+        a = flash_attention(q, k, v, causal=True, q_chunk=min(q_chunk, s),
+                            kv_chunk=min(q_chunk, s))
+        x = x + a.reshape(b, s, cfg.q_dim) @ sp["wo"] + sp["bo"]
+        h = cm.apply_norm(x, cp["ln"], "layernorm")
+        qc, kc, vc = _attn_proj(cp, cfg, h, enc_out)
+        a = flash_attention(qc, kc, vc, causal=False, q_chunk=min(q_chunk, s),
+                            kv_chunk=min(512, enc_out.shape[1]))
+        x = x + a.reshape(b, s, cfg.q_dim) @ cp["wo"] + cp["bo"]
+        h = cm.apply_norm(x, mp["ln"], "layernorm")
+        x = x + cm.gelu(h @ mp["w_up"] + mp["b_up"]) @ mp["w_down"] + mp["b_down"]
+        padw = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+        return x, (jnp.pad(k, padw), jnp.pad(v, padw), kc, vc)
+
+    x, (ks, vs, kcs, vcs) = jax.lax.scan(
+        jax.checkpoint(step), x,
+        (params["dec_self"], params["dec_cross"], params["dec_mlp"]),
+        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["dec_norm"], "layernorm")
+    logits = (x[:, -1:] @ params["embed"].T)
+    cache = {"k": ks, "v": vs, "cross_k": kcs, "cross_v": vcs,
+             "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array):
+    length = cache["length"]
+    x = (jnp.take(params["embed"], token, axis=0)
+         + params["dec_pos"][jnp.mod(length, MAX_TARGET_POS)][None, None])
+
+    def step(x, xs):
+        (sp, cp, mp), kc, vc, ck, cv = xs
+        b = x.shape[0]
+        cap = kc.shape[1]
+        h = cm.apply_norm(x, sp["ln"], "layernorm")
+        q, k, v = _attn_proj(sp, cfg, h, h)
+        slot = jnp.mod(length, cap)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        a = decode_attention(q, kc, vc, jnp.minimum(length + 1, cap))
+        x = x + a.reshape(b, 1, cfg.q_dim) @ sp["wo"] + sp["bo"]
+        h = cm.apply_norm(x, cp["ln"], "layernorm")
+        q = _heads(cfg, h @ cp["wq"] + cp["bq"], cfg.n_heads)
+        a = decode_attention(q, ck, cv, jnp.asarray(ck.shape[1], jnp.int32))
+        x = x + a.reshape(b, 1, cfg.q_dim) @ cp["wo"] + cp["bo"]
+        h = cm.apply_norm(x, mp["ln"], "layernorm")
+        x = x + cm.gelu(h @ mp["w_up"] + mp["b_up"]) @ mp["w_down"] + mp["b_down"]
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, ((params["dec_self"], params["dec_cross"], params["dec_mlp"]),
+                  cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["dec_norm"], "layernorm")
+    logits = x @ params["embed"].T
+    return logits, {"k": k_new, "v": v_new, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "length": length + 1}

@@ -1,0 +1,425 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory).
+
+Block pattern per config (xLSTM-1.3b uses 7 mLSTM : 1 sLSTM).  d_ff = 0 —
+each block carries its own up/down projections.
+
+mLSTM is computed in **chunkwise-parallel form** for train/prefill — within a
+chunk an attention-like masked product, across chunks an O(1) recurrent state
+(C ∈ R^{dh×dh}, n ∈ R^{dh}, m ∈ R).  This is the TPU adaptation of the
+paper's fused CUDA recurrent kernel: the chunkwise form turns the sequential
+scan into MXU-friendly matmuls with a short lax.scan over chunks.  Decode is
+the exact recurrent form — O(1) state, so `long_500k` runs natively.
+
+sLSTM has genuine hidden-state feedback (h_{t-1} enters the gates) and cannot
+be parallelized over time; it runs as a lax.scan with per-head block-diagonal
+recurrent matrices, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import runtime
+from repro.models import dense
+from repro.models.config import ModelConfig
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def group_structure(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.xlstm_pattern or ("m", "s")
+    n_groups = cfg.n_layers // len(pat)
+    tail = pat[: cfg.n_layers - n_groups * len(pat)]
+    return n_groups, tail
+
+
+def _ud(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.xlstm_up_factor)
+
+
+# ------------------------------------------------------------------- params
+def _mlstm_params(key, cfg: ModelConfig, dt) -> Dict:
+    d, ud, H = cfg.d_model, _ud(cfg), cfg.n_heads
+    dh = ud // H
+    ks = jax.random.split(key, 10)
+    blockdiag = lambda k: (jax.random.normal(k, (H, dh, dh), jnp.float32)
+                           / dh ** 0.5).astype(dt)
+    return {
+        "ln": cm.norm_params(d, "rmsnorm", dt),
+        "w_up": cm.dense_init(ks[0], d, ud, dt),
+        "w_gate": cm.dense_init(ks[1], d, ud, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, ud)) * 0.1
+                   ).astype(dt),
+        "conv_b": jnp.zeros((ud,), dt),
+        "wq": blockdiag(ks[3]),
+        "wk": blockdiag(ks[4]),
+        "wv": blockdiag(ks[5]),
+        "w_i": cm.dense_init(ks[6], ud, H, jnp.float32, scale=0.3),
+        "w_f": cm.dense_init(ks[7], ud, H, jnp.float32, scale=0.3),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # forget bias: remember
+        "w_down": cm.dense_init(ks[8], ud, d, dt),
+    }
+
+
+def _slstm_params(key, cfg: ModelConfig, dt) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 12)
+    wx = lambda k: cm.dense_init(k, d, d, dt)
+    rr = lambda k: (jax.random.normal(k, (H, dh, dh), jnp.float32)
+                    / dh ** 0.5).astype(jnp.float32)
+    fup = int(d * 4 / 3)
+    return {
+        "ln": cm.norm_params(d, "rmsnorm", dt),
+        "w_z": wx(ks[0]), "r_z": rr(ks[1]),
+        "w_i": wx(ks[2]), "r_i": rr(ks[3]),
+        "w_f": wx(ks[4]), "r_f": rr(ks[5]),
+        "w_o": wx(ks[6]), "r_o": rr(ks[7]),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "w_up1": cm.dense_init(ks[8], d, fup, dt),
+        "w_up2": cm.dense_init(ks[9], d, fup, dt),
+        "w_down": cm.dense_init(ks[10], fup, d, dt),
+    }
+
+
+def _stack(fn, key, n: int):
+    ks = jax.random.split(key, n)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(k) for k in ks])
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = _dt(cfg)
+    pat = cfg.xlstm_pattern or ("m", "s")
+    n_groups, tail = group_structure(cfg)
+    keys = jax.random.split(key, 8)
+    p: Dict = {
+        "embed": cm.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": cm.norm_params(cfg.d_model, "rmsnorm", dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_init(keys[5], cfg.d_model, cfg.padded_vocab, dt)
+    group: Dict = {}
+    for i, kind in enumerate(pat):
+        sub = jax.random.fold_in(keys[1], i)
+        mk = (functools.partial(_mlstm_params, cfg=cfg, dt=dt) if kind == "m"
+              else functools.partial(_slstm_params, cfg=cfg, dt=dt))
+        group[f"blk{i}"] = _stack(mk, sub, n_groups)
+    p["groups"] = group
+    tail_p: Dict = {}
+    for i, kind in enumerate(tail):
+        sub = jax.random.fold_in(keys[2], i)
+        tail_p[f"blk{i}"] = (_mlstm_params(sub, cfg, dt) if kind == "m"
+                             else _slstm_params(sub, cfg, dt))
+    p["tail"] = tail_p
+    return p
+
+
+# ------------------------------------------------------------- mLSTM cell
+def _mlstm_qkvif(mp: Dict, cfg: ModelConfig, x: jax.Array):
+    """x: (B,T,d) -> q,k,v (B,T,H,dh) fp32; i,f pre-activations (B,T,H)."""
+    b, t, _ = x.shape
+    H = cfg.n_heads
+    ud = _ud(cfg)
+    dh = ud // H
+    h = cm.apply_norm(x, mp["ln"], "rmsnorm")
+    u = h @ mp["w_up"]
+    g = h @ mp["w_gate"]
+    cw = mp["conv_w"].shape[0]
+    conv = jnp.zeros_like(u)
+    for j in range(cw):
+        shifted = jnp.pad(u, [(0, 0), (j, 0), (0, 0)])[:, :t]
+        conv = conv + shifted * mp["conv_w"][j]
+    conv = jax.nn.silu(conv + mp["conv_b"])
+    ch = conv.reshape(b, t, H, dh).astype(jnp.float32)
+    uh = u.reshape(b, t, H, dh).astype(jnp.float32)
+    q = jnp.einsum("bthd,hde->bthe", ch, mp["wq"].astype(jnp.float32))
+    k = jnp.einsum("bthd,hde->bthe", ch, mp["wk"].astype(jnp.float32)) / dh ** 0.5
+    v = jnp.einsum("bthd,hde->bthe", uh, mp["wv"].astype(jnp.float32))
+    it = conv.astype(jnp.float32) @ mp["w_i"]                    # (B,T,H)
+    ft = conv.astype(jnp.float32) @ mp["w_f"] + mp["b_f"]
+    return q, k, v, it, ft, g, u
+
+
+def mlstm_chunkwise(q, k, v, it, ft, state=None, chunk: int = 64):
+    """Chunkwise-parallel mLSTM. q,k,v: (B,T,H,dh); it,ft: (B,T,H).
+
+    Returns (h (B,T,H,dh), final_state (C (B,H,dh,dh), n (B,H,dh), m (B,H))).
+    """
+    b, t, H, dh = q.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        z4 = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(a, z4) for a in (q, k, v))
+        # padded steps must be identity updates: i = -inf (no write, and no
+        # influence on the stabilizer), f -> 1 (no decay of the final state)
+        it = jnp.pad(it, [(0, 0), (0, pad), (0, 0)], constant_values=-1e30)
+        ft = jnp.pad(ft, [(0, 0), (0, pad), (0, 0)], constant_values=30.0)
+    tp = t + pad
+    nc = tp // chunk
+    # (B, nc, c, H, dh) -> scan over nc
+    rs = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic, fc = rs(it), rs(ft)
+
+    if state is None:
+        C0 = jnp.zeros((b, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, H, dh), jnp.float32)
+        m0 = jnp.full((b, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, ij, fj = xs               # (B,c,H,dh) / (B,c,H)
+        logf = jax.nn.log_sigmoid(fj)         # (B,c,H)
+        cumf = jnp.cumsum(logf, axis=1)       # (B,c,H)
+        bb = ij - cumf                        # b_s = i_s - cumlogf_s
+        M = jnp.maximum(jax.lax.cummax(bb, axis=1), m[:, None])   # (B,c,H)
+        m_t = cumf + M
+        # intra-chunk: w_ts = exp(b_s - M_t) for s <= t
+        w = jnp.exp(bb[:, None, :, :] - M[:, :, None, :])         # (B,c_t,c_s,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qj, kj)            # (B,c,c,H)
+        intra_num = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, vj)
+        intra_den = jnp.einsum("btsh,btsh->bth", scores, w)
+        # inter-chunk: decay from incoming state
+        inter_scale = jnp.exp(m[:, None] - M)                     # (B,c,H)
+        inter_num = jnp.einsum("bthd,bhde->bthe", qj, C) * inter_scale[..., None]
+        inter_den = jnp.einsum("bthd,bhd->bth", qj, n) * inter_scale
+        num = intra_num + inter_num
+        den = intra_den + inter_den
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to the next chunk
+        total_f = cumf[:, -1]                                     # (B,H)
+        Mc = M[:, -1]                                             # (B,H)
+        m_next = total_f + Mc
+        sc = jnp.exp(ij - cumf + total_f[:, None] - m_next[:, None])  # (B,c,H)
+        C_next = (C * jnp.exp(m + total_f - m_next)[..., None, None]
+                  + jnp.einsum("bshd,bsh,bshe->bhde", kj, sc, vj))
+        n_next = (n * jnp.exp(m + total_f - m_next)[..., None]
+                  + jnp.einsum("bshd,bsh->bhd", kj, sc))
+        return (C_next, n_next, m_next), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0),
+                                 (qc, kc, vc, ic, fc),
+                                 unroll=runtime.scan_unroll())
+    h = hs.swapaxes(0, 1).reshape(b, tp, H, dh)[:, :t]
+    return h, (C, n, m)
+
+
+def mlstm_recurrent_step(q, k, v, it, ft, state):
+    """Exact recurrent mLSTM step. q,k,v: (B,1,H,dh); it,ft: (B,1,H)."""
+    C, n, m = state
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]                        # (B,H,dh)
+    logf = jax.nn.log_sigmoid(ft[:, 0])                           # (B,H)
+    i1 = it[:, 0]
+    m_new = jnp.maximum(logf + m, i1)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(i1 - m_new)
+    C = C * fp[..., None, None] + ip[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k1, v1)
+    n = n * fp[..., None] + ip[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, C)
+    den = jnp.einsum("bhd,bhd->bh", q1, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h[:, None], (C, n, m_new)
+
+
+def _mlstm_block(mp: Dict, cfg: ModelConfig, x: jax.Array, state=None,
+                 conv_state=None, decode: bool = False, chunk: int = 64):
+    b, t, d = x.shape
+    ud = _ud(cfg)
+    if decode:
+        h_in = cm.apply_norm(x, mp["ln"], "rmsnorm")
+        u = h_in @ mp["w_up"]
+        g = h_in @ mp["w_gate"]
+        hist = jnp.concatenate([conv_state, u], axis=1)           # (B,cw,ud)
+        conv = (hist * mp["conv_w"][::-1][None]).sum(1, keepdims=True) \
+            + mp["conv_b"]
+        conv = jax.nn.silu(conv)
+        H = cfg.n_heads
+        dh = ud // H
+        ch = conv.reshape(b, 1, H, dh).astype(jnp.float32)
+        uh = u.reshape(b, 1, H, dh).astype(jnp.float32)
+        q = jnp.einsum("bthd,hde->bthe", ch, mp["wq"].astype(jnp.float32))
+        k = jnp.einsum("bthd,hde->bthe", ch, mp["wk"].astype(jnp.float32)) / dh ** 0.5
+        v = jnp.einsum("bthd,hde->bthe", uh, mp["wv"].astype(jnp.float32))
+        it = conv.astype(jnp.float32) @ mp["w_i"]
+        ft = conv.astype(jnp.float32) @ mp["w_f"] + mp["b_f"]
+        hseq, new_state = mlstm_recurrent_step(q, k, v, it, ft, state)
+        new_conv = hist[:, 1:]
+    else:
+        q, k, v, it, ft, g, u = _mlstm_qkvif(mp, cfg, x)
+        hseq, new_state = mlstm_chunkwise(q, k, v, it, ft, state, chunk)
+        new_conv = u[:, -(cfg.conv_width - 1):]
+    hflat = hseq.reshape(b, hseq.shape[1], ud).astype(x.dtype)
+    out = (hflat * jax.nn.silu(g)) @ mp["w_down"]
+    return x + out, new_state, new_conv
+
+
+# ------------------------------------------------------------- sLSTM cell
+def _slstm_block(sp: Dict, cfg: ModelConfig, x: jax.Array, state=None):
+    """Sequential sLSTM.  x: (B,T,d).  state: (c, n, m, h) each (B,d)."""
+    b, t, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xin = cm.apply_norm(x, sp["ln"], "rmsnorm").astype(jnp.float32)
+    # precompute input contributions for all t
+    zx = xin @ sp["w_z"].astype(jnp.float32)
+    ix = xin @ sp["w_i"].astype(jnp.float32)
+    fx = xin @ sp["w_f"].astype(jnp.float32) + sp["b_f"]
+    ox = xin @ sp["w_o"].astype(jnp.float32)
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, d), -1e30, jnp.float32), zeros)
+
+    rmat = {k: sp[k].astype(jnp.float32) for k in ("r_z", "r_i", "r_f", "r_o")}
+
+    def rdot(r, h):
+        hh = h.reshape(b, H, dh)
+        return jnp.einsum("bhd,hde->bhe", hh, r).reshape(b, d)
+
+    if runtime.roofline_mode() and t > 1:
+        # FLOPs-equivalent parallel surrogate (see runtime.py): identical op
+        # counts per timestep, h_{t-1} feedback replaced by the shifted input
+        # stream so the T-step while-loop disappears from the HLO and
+        # cost_analysis counts every timestep.  Values differ; counts don't.
+        hprev = jnp.pad(zx, [(0, 0), (1, 0), (0, 0)])[:, :t]
+        rdot_t = lambda r: jnp.einsum(
+            "bthd,hde->bthe", hprev.reshape(b, t, H, dh), r).reshape(b, t, d)
+        z = jnp.tanh(zx + rdot_t(rmat["r_z"]))
+        i_pre = ix + rdot_t(rmat["r_i"])
+        f_pre = fx + rdot_t(rmat["r_f"])
+        o = jax.nn.sigmoid(ox + rdot_t(rmat["r_o"]))
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_sur = jnp.maximum(jnp.cumsum(logf, 1), i_pre)
+        fp, ip = jnp.exp(logf), jnp.exp(i_pre - m_sur)
+        c_sur = jnp.cumsum(fp * z * ip, 1)
+        n_sur = jnp.cumsum(fp * ip, 1)
+        h = (o * c_sur / jnp.maximum(n_sur, 1.0)).astype(x.dtype)
+        ff = (cm.gelu(h @ sp["w_up1"]) * (h @ sp["w_up2"])) @ sp["w_down"]
+        state = (c_sur[:, -1], n_sur[:, -1], m_sur[:, -1], h[:, -1]
+                 .astype(jnp.float32))
+        return x + ff, state
+
+    def step(carry, xs):
+        c, n, m, h = carry
+        zt, itt, ftt, ot = xs
+        z = jnp.tanh(zt + rdot(rmat["r_z"], h))
+        i_pre = itt + rdot(rmat["r_i"], h)
+        f_pre = ftt + rdot(rmat["r_f"], h)
+        o = jax.nn.sigmoid(ot + rdot(rmat["r_o"], h))
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(i_pre - m_new)
+        c = fp * c + ip * z
+        n = fp * n + ip
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    xs = (zx.swapaxes(0, 1), ix.swapaxes(0, 1), fx.swapaxes(0, 1),
+          ox.swapaxes(0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.swapaxes(0, 1).astype(x.dtype)                         # (B,T,d)
+    # post-up-projection FFN (factor 4/3, gated)
+    ff = (cm.gelu(h @ sp["w_up1"]) * (h @ sp["w_up2"])) @ sp["w_down"]
+    return x + ff, state
+
+
+# ------------------------------------------------------------------ forward
+def _forward(params: Dict, cfg: ModelConfig, batch: Dict, want_cache: bool,
+             chunk: int = 64):
+    if runtime.roofline_mode():
+        chunk = max(chunk, 1024)   # few, unrolled chunk-scan steps
+    pat = cfg.xlstm_pattern or ("m", "s")
+    _, tail = group_structure(cfg)
+    x, _ = dense.embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+
+    def run(x, bp, kind, st=None):
+        if kind == "m":
+            x, state, conv = _mlstm_block(bp, cfg, x, chunk=chunk)
+            return x, {"C": state[0], "n": state[1], "m": state[2],
+                       "conv": conv}
+        x, state = _slstm_block(bp, cfg, x)
+        return x, {"c": state[0], "n": state[1], "m": state[2],
+                   "h": state[3]}
+
+    def group_step(x, gp):
+        states = {}
+        for i, kind in enumerate(pat):
+            x, st = run(x, gp[f"blk{i}"], kind)
+            states[f"blk{i}"] = st
+        return x, states
+
+    body = jax.checkpoint(group_step)
+    x, group_states = jax.lax.scan(body, x, params["groups"],
+                                   unroll=runtime.scan_unroll())
+    tail_states = []
+    for i, kind in enumerate(tail):
+        x, st = run(x, params["tail"][f"blk{i}"], kind)
+        tail_states.append(st)
+    x = cm.apply_norm(x, params["final_norm"], "rmsnorm")
+    if want_cache:
+        logits = dense.logits_of(params, cfg, x[:, -1:])
+        return logits, {"groups": group_states, "tail": tail_states,
+                        "length": jnp.asarray(s, jnp.int32)}
+    return dense.logits_of(params, cfg, x), None
+
+
+def apply(params: Dict, cfg: ModelConfig, batch: Dict, *,
+          chunk: int = 64, **_) -> jax.Array:
+    return _forward(params, cfg, batch, want_cache=False, chunk=chunk)[0]
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            chunk: int = 64, capacity: Optional[int] = None, **_):
+    return _forward(params, cfg, batch, want_cache=True, chunk=chunk)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array):
+    pat = cfg.xlstm_pattern or ("m", "s")
+    _, tail = group_structure(cfg)
+    x = jnp.take(params["embed"], token, axis=0)
+    length = cache["length"]
+
+    def run(x, bp, st, kind):
+        if kind == "m":
+            x, state, conv = _mlstm_block(
+                bp, cfg, x, state=(st["C"], st["n"], st["m"]),
+                conv_state=st["conv"], decode=True)
+            return x, {"C": state[0], "n": state[1], "m": state[2],
+                       "conv": conv}
+        x, state = _slstm_block(bp, cfg, x,
+                                state=(st["c"], st["n"], st["m"], st["h"]))
+        return x, {"c": state[0], "n": state[1], "m": state[2],
+                   "h": state[3]}
+
+    def group_step(x, xs):
+        gp, gst = xs
+        new = {}
+        for i, kind in enumerate(pat):
+            x, st = run(x, gp[f"blk{i}"], gst[f"blk{i}"], kind)
+            new[f"blk{i}"] = st
+        return x, new
+
+    x, new_groups = jax.lax.scan(group_step, x,
+                                 (params["groups"], cache["groups"]),
+                                 unroll=runtime.scan_unroll())
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, st = run(x, params["tail"][f"blk{i}"], cache["tail"][i], kind)
+        new_tail.append(st)
+    x = cm.apply_norm(x, params["final_norm"], "rmsnorm")
+    return dense.logits_of(params, cfg, x), {
+        "groups": new_groups, "tail": new_tail, "length": length + 1}

@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, EngineStats, GenRequest
+from repro.serving.sampling import sample

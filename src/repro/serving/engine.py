@@ -1,0 +1,126 @@
+"""A small batched serving engine — the node's Model Manager backend.
+
+Real (not simulated) JAX inference: requests queue up, the engine prefills a
+batch together (padded to a bucket), then decodes all active sequences in
+lock-step until each hits EOS or its token budget.  This is the backend used
+by the runnable examples and the end-to-end decentralized serving driver
+(``repro.launch.serve``); the large-scale scheduling benchmarks use the
+analytic service model instead (see DESIGN.md §6.1).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.serving.sampling import sample
+
+
+@dataclass
+class GenRequest:
+    rid: str
+    tokens: np.ndarray            # (S,) prompt token ids
+    max_new: int = 32
+    temperature: float = 0.0
+    result: Optional[np.ndarray] = None
+    # engine metrics
+    enqueued_at: float = 0.0
+    finished_at: float = 0.0
+
+
+@dataclass
+class EngineStats:
+    served: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    batches: int = 0
+
+
+class Engine:
+    """Batched prefill + lock-step decode with a jitted step per bucket."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 bucket: int = 64, seed: int = 0) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.bucket = bucket
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = EngineStats()
+        fam = registry.get_family(cfg)
+        self._prefill = jax.jit(
+            lambda p, b, cap: fam.prefill(p, cfg, b, q_chunk=256,
+                                          kv_chunk=256, capacity=cap),
+            static_argnums=(2,))
+        self._decode = jax.jit(lambda p, c, t: fam.decode_step(p, cfg, c, t))
+        self.eos_id = 1
+
+    def _pad_bucket(self, n: int) -> int:
+        b = self.bucket
+        return max(b, (n + b - 1) // b * b)
+
+    def generate_batch(self, reqs: List[GenRequest]) -> List[GenRequest]:
+        """Serve up to max_batch requests together; returns them completed."""
+        assert len(reqs) <= self.max_batch
+        t0 = time.perf_counter()
+        max_prompt = max(len(r.tokens) for r in reqs)
+        plen = self._pad_bucket(max_prompt)
+        max_new = max(r.max_new for r in reqs)
+        toks = np.full((len(reqs), plen), self.eos_id, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.tokens):] = r.tokens     # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        cap = plen + self._pad_bucket(max_new)
+        logits, cache = self._prefill(self.params, batch, cap)
+        self.stats.prefill_tokens += plen * len(reqs)
+
+        out = np.zeros((len(reqs), max_new), np.int32)
+        done = np.zeros(len(reqs), bool)
+        cur = None
+        for step in range(max_new):
+            self.key, sk = jax.random.split(self.key)
+            temp = max(r.temperature for r in reqs)
+            cur = sample(sk, logits, temperature=temp,
+                         vocab_size=self.cfg.vocab_size)
+            out[:, step] = np.asarray(cur[:, 0])
+            done |= out[:, step] == self.eos_id
+            done |= np.array([step >= r.max_new for r in reqs])
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, cur)
+            self.stats.decode_tokens += int((~done).sum())
+        for i, r in enumerate(reqs):
+            end = np.argmax(out[i] == self.eos_id) if (out[i] ==
+                                                       self.eos_id).any() \
+                else r.max_new
+            r.result = out[i, : max(int(end), 1)]
+            r.finished_at = time.perf_counter()
+        self.stats.served += len(reqs)
+        self.stats.batches += 1
+        return reqs
+
+    def serve(self, reqs: List[GenRequest]) -> List[GenRequest]:
+        """FIFO continuous batching: group the queue into max_batch waves."""
+        out: List[GenRequest] = []
+        for i in range(0, len(reqs), self.max_batch):
+            out.extend(self.generate_batch(reqs[i: i + self.max_batch]))
+        return out
+
+    def logprob_of(self, tokens: np.ndarray) -> float:
+        """Sequence log-likelihood under this engine's model — used by the
+        real-engine duel judges (DESIGN.md §6.2)."""
+        t = jnp.asarray(tokens[None, :])
+        logits = registry.apply_logits(self.params, self.cfg,
+                                       {"tokens": t[:, :-1]},
+                                       q_chunk=256, kv_chunk=256)
+        logits = logits.astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        gold = jnp.take_along_axis(lp, t[:, 1:, None], axis=-1)
+        return float(jnp.sum(gold))

@@ -1,0 +1,28 @@
+"""Token sampling: greedy / temperature / top-p (nucleus)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key: jax.Array, logits: jax.Array, temperature: float = 0.0,
+           top_p: float = 1.0, vocab_size: int | None = None) -> jax.Array:
+    """logits: (B, 1, V) -> tokens (B, 1) int32."""
+    logits = logits[:, -1].astype(jnp.float32)
+    if vocab_size is not None and vocab_size < logits.shape[-1]:
+        # mask padded vocab entries
+        pad_mask = jnp.arange(logits.shape[-1]) >= vocab_size
+        logits = jnp.where(pad_mask[None], -1e30, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,80 @@
+"""Piecewise-Poisson request workloads (paper Table 3).
+
+Each node's user traffic is a piecewise-homogeneous Poisson process: a list of
+``(t_start, t_end, mean_interarrival_s)`` intervals.  Request lengths are drawn
+from a seeded lognormal-ish distribution mimicking OpenR1-Math-220k reasoning
+prompts (long outputs, max_tokens 8192 per paper Appendix C).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: str
+    origin: str            # node id where the user submitted it
+    arrival: float         # sim time of user submission
+    prompt_tokens: int
+    output_tokens: int
+    slo_s: float           # latency threshold for SLO attainment
+    is_duel_extra: bool = False   # challenger / judge traffic (excluded from SLO)
+
+
+@dataclass(frozen=True)
+class ArrivalPhase:
+    t_start: float
+    t_end: float
+    mean_interarrival: float   # 1/lambda, seconds
+
+
+@dataclass
+class WorkloadSpec:
+    """Per-node arrival schedule, as in paper Table 3."""
+
+    node_id: str
+    phases: Sequence[ArrivalPhase]
+    prompt_mean: int = 512
+    output_mean: int = 2048       # reasoning traces are long
+    max_tokens: int = 8192        # paper: max token length 8192
+    slo_s: float = 300.0
+
+    def arrivals(self, rng: np.random.Generator) -> List[Tuple[float, int, int]]:
+        """Materialize (time, prompt_tokens, output_tokens) arrivals."""
+        out: List[Tuple[float, int, int]] = []
+        for ph in self.phases:
+            t = ph.t_start
+            while True:
+                t += rng.exponential(ph.mean_interarrival)
+                if t >= ph.t_end:
+                    break
+                p = int(np.clip(rng.lognormal(np.log(self.prompt_mean), 0.6), 16, 4096))
+                o = int(np.clip(rng.lognormal(np.log(self.output_mean), 0.7), 32, self.max_tokens))
+                out.append((t, p, o))
+        out.sort(key=lambda x: x[0])
+        return out
+
+
+def make_requests(specs: Sequence[WorkloadSpec], seed: int) -> List[Request]:
+    """Materialize the full multi-node workload deterministically."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for spec in specs:
+        for i, (t, p, o) in enumerate(spec.arrivals(rng)):
+            reqs.append(Request(
+                rid=f"{spec.node_id}-r{i}", origin=spec.node_id, arrival=t,
+                prompt_tokens=p, output_tokens=o, slo_s=spec.slo_s))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+def uniform_phases(t_end: float, mean_interarrival: float) -> List[ArrivalPhase]:
+    return [ArrivalPhase(0.0, t_end, mean_interarrival)]
+
+
+def two_phase(split: float, t_end: float, ia1: float, ia2: float) -> List[ArrivalPhase]:
+    return [ArrivalPhase(0.0, split, ia1), ArrivalPhase(split, t_end, ia2)]

@@ -1,0 +1,3 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from repro.training.train_step import (cross_entropy, init_state, loss_fn,
+                                       make_train_step, state_shape)

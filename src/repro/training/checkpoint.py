@@ -1,0 +1,47 @@
+"""Msgpack + raw-numpy checkpointing (no orbax in this container)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    flat, _ = _flatten(tree)
+    payload = {
+        "step": step,
+        "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                       "data": v.tobytes()} for k, v in flat.items()},
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)       # atomic
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays/structs)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    for i, ref in enumerate(leaves):
+        rec = payload["leaves"][f"leaf_{i}"]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        arr = arr.reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != "
+                             f"expected {tuple(ref.shape)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), payload["step"]

@@ -1,0 +1,94 @@
+"""Cross-entropy train step, generic over the model registry.
+
+Supports microbatch gradient accumulation via an inner ``lax.scan`` — this is
+how the 100B+ configs keep per-layer activation memory bounded on v5e (see
+EXPERIMENTS.md §Perf), and it also bounds MoE dispatch buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean CE over (B, S); labels < vocab_size; padded classes never appear."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, aux_weight: float = 0.01,
+            **apply_kw) -> Tuple[jax.Array, Dict]:
+    logits, aux = registry.apply_with_aux(params, cfg, batch, **apply_kw)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def _split_microbatch(batch: Dict, n: int, i: jax.Array) -> Dict:
+    def slc(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(slc, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, **apply_kw):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}; batch contains "labels" plus model
+    inputs.  With microbatches > 1, gradients are accumulated over equal
+    slices of the (global) batch dimension inside a lax.scan.
+    """
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, **apply_kw)
+        return loss, parts, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss, parts, grads = grads_of(params, batch)
+        else:
+            def mb_step(carry, i):
+                acc, loss_acc = carry
+                mb = _split_microbatch(batch, microbatches, i)
+                loss, _, g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (zero, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads,
+                                               state["opt"])
+        metrics = {"loss": loss, **parts, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    params = registry.init(key, cfg)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def state_shape(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the train state — dry-run path."""
+    return jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,70 @@
+"""§5 game-theory module: Prop 5.6 verification + Thm 5.8 convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.creditsim import CreditSimParams, simulate
+from repro.core.gametheory import (GameParams, group_share, integrate,
+                                   payoff_delta, share_rhs,
+                                   verify_proposition_56)
+
+
+def _params(q, p_d=0.3):
+    q = jnp.asarray(q)
+    return GameParams(q=q, c=jnp.full(q.shape, 0.3), p_d=p_d,
+                      R_add=1.0, P=1.0)
+
+
+class TestLemma55:
+    def test_payoff_formula(self):
+        p = _params([0.8, 0.2])
+        s = jnp.array([1.0, 1.0])
+        d = payoff_delta(p, s)
+        # Q̄ = 0.5; Q_hi = 0.5(1+0.8-0.5)=0.65; Δ = (1-0.3)+0.3(0.65-0.35)
+        assert float(d[0]) == pytest.approx(0.7 + 0.3 * (0.65 - 0.35))
+        assert float(d[1]) == pytest.approx(0.7 + 0.3 * (0.35 - 0.65))
+
+
+class TestProp56:
+    @given(st.lists(st.floats(0.05, 0.95), min_size=2, max_size=8),
+           st.floats(0.5, 5.0))
+    @settings(max_examples=25, deadline=None)
+    def test_analytic_equals_finite_difference(self, qs, s0):
+        p = _params(qs)
+        err = verify_proposition_56(p, jnp.full((len(qs),), s0))
+        assert err < 1e-2
+
+    def test_shares_sum_invariant(self):
+        p = _params([0.9, 0.5, 0.1])
+        rhs = share_rhs(p, jnp.array([1.0, 2.0, 3.0]))
+        assert float(jnp.sum(rhs)) == pytest.approx(0.0, abs=1e-7)
+
+
+class TestThm58:
+    def test_high_quality_group_share_increases(self):
+        p = _params([0.9, 0.8, 0.2, 0.1], p_d=0.5)
+        _, shares = integrate(p, jnp.ones(4), dt=0.1, steps=5000)
+        hi = p.q > 0.5
+        traj = [float(group_share(shares[i], hi))
+                for i in range(0, 5000, 250)]
+        assert all(np.diff(traj) > -1e-6)
+        assert traj[-1] > 0.8
+
+    def test_equal_quality_stays_balanced(self):
+        p = _params([0.5, 0.5, 0.5, 0.5])
+        _, shares = integrate(p, jnp.ones(4), steps=1000)
+        np.testing.assert_allclose(np.asarray(shares[-1]), 0.25, atol=1e-4)
+
+    def test_montecarlo_agrees_with_ode(self):
+        q = jnp.array([0.85, 0.75, 0.25, 0.15])
+        cp = CreditSimParams(q=q, c=jnp.full((4,), 0.3), p_d=0.5,
+                             R_add=1.0, P=1.0)
+        traj, wins, duels = simulate(cp, jnp.ones(4) * 10.0,
+                                     jax.random.PRNGKey(0), steps=1200)
+        sh = np.asarray(traj[-1] / traj[-1].sum())
+        assert sh[:2].sum() > 0.75
+        wr = np.asarray(wins) / np.maximum(np.asarray(duels), 1)
+        assert wr[0] > wr[3]

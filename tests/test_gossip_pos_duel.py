@@ -1,0 +1,118 @@
+"""Gossip convergence, PoS sampling statistics, duel-and-judge behaviour."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.duel import DuelParams, expected_extra_requests, run_duel
+from repro.core.gossip import PeerView, gossip_round, rounds_to_convergence
+from repro.core.pos import pos_sample, pos_sample_one, selection_probs
+
+
+class TestGossip:
+    def test_pairwise_merge_reconciles(self):
+        a = PeerView("a", "tcp://a")
+        b = PeerView("b", "tcp://b")
+        a.heartbeat(1.0)
+        b.set_addr("tcp://b2", 1.0)
+        gossip_round(a, b)
+        assert a.records["b"].addr == "tcp://b2"
+        assert b.records["a"].version == a.records["a"].version
+
+    def test_offline_then_revive_wins_by_version(self):
+        a = PeerView("a", "tcp://a")
+        b = PeerView("b", "tcp://b")
+        gossip_round(a, b)
+        a.set_offline(2.0)
+        gossip_round(a, b)
+        assert not b.records["a"].online
+        a.go = None
+        a.heartbeat(3.0)       # revive bumps version again
+        gossip_round(a, b)
+        assert b.records["a"].online
+
+    def test_failure_suspicion_is_local_not_viral(self):
+        a = PeerView("a", "tcp://a")
+        b = PeerView("b", "tcp://b")
+        c = PeerView("c", "tcp://c")
+        for v in (a, b, c):
+            for w in (a, b, c):
+                if v is not w:
+                    gossip_round(v, w)
+        # b stops heartbeating; a suspects after timeout
+        a.suspect_failures(100.0, suspect_after=5.0)
+        assert not a.records["b"].online
+        # ... but a live b's next heartbeat re-wins on merge
+        b.heartbeat(101.0)
+        gossip_round(a, b)
+        assert a.records["b"].online
+
+    @given(st.integers(3, 12), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_convergence_within_log_rounds(self, n, seed):
+        rng = np.random.default_rng(seed)
+        views = [PeerView(f"n{i}", f"tcp://n{i}") for i in range(n)]
+        # bootstrap: ring introduction
+        for i in range(n):
+            gossip_round(views[i], views[(i + 1) % n])
+        for v in views:
+            v.heartbeat(1.0)
+        rounds = rounds_to_convergence(views, rng, fanout=2)
+        assert rounds <= 2 * int(np.ceil(np.log2(n))) + 3
+
+
+class TestPoS:
+    def test_probs_proportional_to_stake(self):
+        stakes = {"a": 1.0, "b": 3.0, "c": 6.0}
+        p = selection_probs(stakes, ["a", "b", "c"])
+        assert p["c"] == pytest.approx(0.6)
+        assert p["b"] == pytest.approx(0.3)
+
+    def test_zero_stake_uniform_fallback(self):
+        p = selection_probs({}, ["a", "b"])
+        assert p["a"] == pytest.approx(0.5)
+
+    def test_empirical_selection_frequency(self):
+        rng = np.random.default_rng(0)
+        stakes = {"a": 1.0, "b": 2.0, "c": 4.0}
+        counts = {"a": 0, "b": 0, "c": 0}
+        for _ in range(4000):
+            counts[pos_sample_one(stakes, list(stakes), rng)] += 1
+        assert counts["c"] / 4000 == pytest.approx(4 / 7, abs=0.03)
+        assert counts["b"] / 4000 == pytest.approx(2 / 7, abs=0.03)
+
+    @given(st.integers(1, 5), st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_sample_without_replacement(self, k, seed):
+        rng = np.random.default_rng(seed)
+        stakes = {f"n{i}": float(i + 1) for i in range(6)}
+        got = pos_sample(stakes, list(stakes), k, rng, exclude=["n0"])
+        assert len(got) == k
+        assert len(set(got)) == k
+        assert "n0" not in got
+
+
+class TestDuel:
+    def test_outcome_credit_flow(self):
+        rng = np.random.default_rng(0)
+        params = DuelParams(r_add=2.0, penalty=1.5, judge_fee=0.25)
+        out = run_duel("d0", "hi", "lo", ["j1", "j2"],
+                       {"hi": 0.95, "lo": 0.05}, params, rng)
+        kinds = [op.kind for op in out.ops]
+        assert kinds.count("transfer") == 3       # winner + 2 judges
+        assert kinds.count("slash") == 1
+        total_minted = sum(op.amount for op in out.ops
+                           if op.kind == "transfer")
+        assert total_minted == pytest.approx(2.0 + 2 * 0.25)
+
+    def test_quality_wins_statistically(self):
+        rng = np.random.default_rng(1)
+        params = DuelParams(judge_accuracy=0.9)
+        wins = sum(run_duel(f"d{i}", "hi", "lo", ["j1", "j2", "j3"],
+                            {"hi": 0.8, "lo": 0.3}, params, rng).winner == "hi"
+                   for i in range(500))
+        # P(hi true-wins) = 0.75; judges 90% accurate majority-of-3
+        assert 0.6 < wins / 500 < 0.9
+
+    def test_overhead_formula(self):
+        assert expected_extra_requests(1000, 0.5, 0.1, 2) == pytest.approx(150)

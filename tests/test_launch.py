@@ -1,0 +1,133 @@
+"""Launch layer: sharding rules, input specs, HLO collective parsing.
+
+The full 512-device lower+compile proof runs via
+``python -m repro.launch.dryrun --all`` (results in experiments/*.jsonl);
+here we unit-test the pieces on a small in-process mesh.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, grid
+from repro.launch import sharding as sh
+from repro.launch.specs import (batch_struct, input_specs, n_groups_of,
+                                reduced_depth)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single CPU device, but axis NAMES match production (sizes 1)
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class TestShardingRules:
+    def test_param_spec_roles(self, mesh):
+        assert sh.param_spec("layers/wq", (32, 4096, 4096), mesh) == \
+            P(None, "data", "model")
+        assert sh.param_spec("layers/wo", (32, 4096, 4096), mesh) == \
+            P(None, "model", "data")
+        assert sh.param_spec("embed", (151936, 4096), mesh) == \
+            P("model", "data")
+        assert sh.param_spec("layers/we_gate", (40, 16, 6144, 10752),
+                             mesh) == P(None, "model", "data", None)
+        assert sh.param_spec("final_norm/scale", (4096,), mesh) == P()
+
+    def test_indivisible_axes_dropped(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # 7 not divisible by any >1 axis — on a 1x1 mesh everything divides,
+        # so exercise _trim directly with a fake 16-wide axis
+        big = jax.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        assert sh._fits(36, big, "model")     # 36 % 1 == 0
+        assert sh._trim((("data",), None), (7, 8), big) == P(("data",), None)
+
+    def test_cache_spec_seq_sharded(self, mesh):
+        spec = sh.cache_spec("k", (36, 128, 32768, 8, 128), mesh)
+        assert spec == P(None, ("data",), "model", None, None)
+        assert sh.cache_spec("length", (), mesh) == P()
+        assert sh.cache_spec("C", (6, 1, 4, 1024, 1024), mesh)[0] is None
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch,shape", [
+        ("qwen3-8b", "train_4k"), ("dbrx-132b", "decode_32k"),
+        ("whisper-base", "prefill_32k"), ("xlstm-1.3b", "long_500k"),
+        ("qwen2-vl-7b", "train_4k"), ("recurrentgemma-9b", "decode_32k"),
+    ])
+    def test_struct_shapes(self, arch, shape):
+        specs = input_specs(arch, shape)
+        shp = INPUT_SHAPES[shape]
+        cfg = specs["cfg"]
+        if shp.kind == "train":
+            b = specs["batch"]
+            lead = (b.get("tokens") or b.get("embeds")).shape[0]
+            assert lead == shp.global_batch
+            assert b["labels"].shape[1] == shp.seq_len
+            assert "state" in specs
+        elif shp.kind == "decode":
+            assert specs["token"].shape == (shp.global_batch, 1)
+            assert "cache" in specs
+            leaves = jax.tree.leaves(specs["cache"])
+            assert all(hasattr(x, "shape") for x in leaves)
+
+    def test_long500k_dense_gets_window(self):
+        cfg = get_config("qwen3-8b", "long_500k")
+        assert cfg.sliding_window == 4096
+        specs = input_specs("qwen3-8b", "long_500k")
+        # window ring cache, not a 500k dense cache
+        assert specs["cache"]["k"].shape[2] == 4096
+
+    def test_long500k_ssm_native(self):
+        cfg = get_config("xlstm-1.3b", "long_500k")
+        assert cfg.sliding_window is None
+        specs = input_specs("xlstm-1.3b", "long_500k")
+        n = sum(x.size for x in jax.tree.leaves(specs["cache"])
+                if hasattr(x, "size"))
+        assert n < 1e9          # O(1)-in-seq state, not a 500k KV cache
+
+    def test_grid_is_40(self):
+        assert len(grid()) == 40
+
+    def test_reduced_depth_groups(self):
+        for arch in ("qwen3-32b", "recurrentgemma-9b", "xlstm-1.3b",
+                     "whisper-base"):
+            cfg = get_config(arch)
+            r1 = reduced_depth(cfg, 1)
+            r2 = reduced_depth(cfg, 2)
+            assert r2.n_layers > r1.n_layers
+            assert n_groups_of(cfg) >= 2
+
+
+class TestCollectiveParser:
+    def test_shapes_and_kinds(self):
+        from repro.launch.dryrun import collective_bytes, _shape_bytes
+        assert _shape_bytes("bf16[16,4096]") == 16 * 4096 * 2
+        assert _shape_bytes("(f32[8,8], u32[4])") == 8 * 8 * 4 + 4 * 4
+        hlo = """
+  %ag = bf16[32,1024]{1,0} all-gather(bf16[2,1024]{1,0} %p), dimensions={0}
+  %ar.1 = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%sum
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %y), source_target_pairs={{0,1}}
+  %dot.3 = f32[16,16]{1,0} dot(f32[16,8] %a, f32[8,16] %b)
+"""
+        got = collective_bytes(hlo)
+        assert got["all-gather"] == 32 * 1024 * 2
+        assert got["all-reduce"] == 128 * 4
+        assert got["collective-permute"] == 64 * 4
+        assert got["all-to-all"] == 0
+
+    def test_hbm_parser_skips_elementwise(self):
+        from repro.launch.dryrun import hbm_traffic_bytes
+        hlo = """
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %p1 = f32[128,128]{1,0} parameter(1)
+  %add.0 = f32[128,128]{1,0} add(f32[128,128] %p0, f32[128,128] %p1)
+  %dot.0 = f32[128,128]{1,0} dot(%add.0, %p1), lhs_contracting_dims={1}
+"""
+        got = hbm_traffic_bytes(hlo)
+        # only the dot counts: result + both operands = 3 * 128*128*4
+        assert got == 3 * 128 * 128 * 4

@@ -1,0 +1,130 @@
+"""Credit block chain: hash links, signatures, double-spend, conservation."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ledger import (BalanceView, CreditBlock, CreditChain,
+                               CreditOp, LedgerError, SharedLedger, sign)
+
+
+def _chain_with_funds(owner="a", amount=100.0):
+    c = CreditChain(owner)
+    c.append(c.propose([CreditOp("mint", "", owner, amount)], 0.0, b"s"))
+    return c
+
+
+class TestChain:
+    def test_append_and_balances(self):
+        c = _chain_with_funds()
+        c.append(c.propose([CreditOp("stake", "a", "", 30.0)], 1.0, b"s"))
+        assert c.balance_of("a") == pytest.approx(70.0)
+        assert c.stake_of("a") == pytest.approx(30.0)
+        assert c.verify_chain()
+
+    def test_double_spend_rejected(self):
+        c = _chain_with_funds(amount=10.0)
+        ok, why = c.validate(c.propose(
+            [CreditOp("transfer", "a", "b", 8.0),
+             CreditOp("transfer", "a", "b", 8.0)], 1.0, b"s"))
+        assert not ok and "double-spend" in why
+
+    def test_tamper_detection(self):
+        c = _chain_with_funds()
+        blk = c.propose([CreditOp("transfer", "a", "b", 5.0)], 1.0, b"s")
+        bad = dataclasses.replace(
+            blk, operations=(CreditOp("transfer", "a", "b", 50.0),))
+        ok, why = c.validate(bad)
+        assert not ok and "tamper" in why
+
+    def test_wrong_parent_rejected(self):
+        c = _chain_with_funds()
+        blk = c.propose([CreditOp("transfer", "a", "b", 5.0)], 1.0, b"s")
+        c.append(blk)
+        ok, why = c.validate(blk)          # replay: parent no longer head
+        assert not ok
+
+    def test_signature_verification(self):
+        c = _chain_with_funds()
+        blk = c.propose([CreditOp("transfer", "a", "b", 1.0)], 1.0, b"secret")
+        assert c.validate(blk, proposer_secret=b"secret")[0]
+        assert not c.validate(blk, proposer_secret=b"other")[0]
+
+    def test_full_chain_audit_catches_mutation(self):
+        c = _chain_with_funds()
+        for i in range(5):
+            c.append(c.propose([CreditOp("transfer", "a", f"b{i}", 1.0)],
+                               float(i), b"s"))
+        assert c.verify_chain()
+        c.blocks[2] = dataclasses.replace(
+            c.blocks[2], operations=(CreditOp("mint", "", "evil", 1e6),))
+        assert not c.verify_chain()
+
+    def test_slash_cannot_exceed_stake(self):
+        c = _chain_with_funds()
+        c.append(c.propose([CreditOp("stake", "a", "", 5.0)], 1.0, b"s"))
+        ok, _ = c.validate(c.propose([CreditOp("slash", "a", "", 9.0)],
+                                     2.0, b"s"))
+        assert not ok
+
+
+@st.composite
+def op_sequences(draw):
+    nodes = ["a", "b", "c"]
+    ops = [CreditOp("mint", "", n, 100.0) for n in nodes]
+    for _ in range(draw(st.integers(0, 30))):
+        kind = draw(st.sampled_from(["transfer", "stake", "unstake", "slash",
+                                     "reward"]))
+        src = draw(st.sampled_from(nodes))
+        dst = draw(st.sampled_from(nodes))
+        amt = draw(st.floats(0.0, 20.0, allow_nan=False))
+        ops.append(CreditOp(kind, src, dst, amt))
+    return ops
+
+
+class TestConservation:
+    @given(op_sequences())
+    @settings(max_examples=60, deadline=None)
+    def test_total_credit_conserved_minus_slashes(self, ops):
+        """Invariant: total(balance+stake) == mints - slashes applied."""
+        v = BalanceView()
+        minted = slashed = 0.0
+        for op in ops:
+            try:
+                before = v.total()
+                v.apply(op)
+            except LedgerError:
+                continue
+            if op.kind == "mint":
+                minted += op.amount
+            elif op.kind == "slash":
+                slashed += op.amount
+        assert v.total() == pytest.approx(minted - slashed, abs=1e-6)
+        assert all(b > -1e-9 for b in v.balance.values())
+        assert all(s > -1e-9 for s in v.stake.values())
+
+    @given(op_sequences())
+    @settings(max_examples=30, deadline=None)
+    def test_chain_replay_equals_view(self, ops):
+        """Appending op-by-op == full replay from genesis."""
+        c = CreditChain("prop")
+        for i, op in enumerate(ops):
+            blk = c.propose([op], float(i), b"s")
+            ok, _ = c.validate(blk)
+            if ok:
+                c.append(blk)
+        assert c.verify_chain()
+
+
+class TestSharedLedger:
+    def test_atomic_application(self):
+        sl = SharedLedger()
+        sl.apply([CreditOp("mint", "", "a", 10.0)])
+        with pytest.raises(LedgerError):
+            sl.apply([CreditOp("transfer", "a", "b", 6.0),
+                      CreditOp("transfer", "a", "b", 6.0)])
+        # first op must NOT have been applied
+        assert sl.balance_of("a") == pytest.approx(10.0)
+        assert sl.balance_of("b") == pytest.approx(0.0)

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (reduced configs) + cross-path consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+
+def _batch(cfg: ModelConfig, key, b=2, s=64):
+    batch = {}
+    if cfg.family == "audio":
+        batch["encoder_embeds"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model))
+        batch["tokens"] = jax.random.randint(key, (b, 16), 0, cfg.vocab_size)
+    elif cfg.embeds_input:
+        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+class TestSmoke:
+    """Reduced variant of each assigned architecture: one forward + one
+    decode step on CPU; output shapes + no NaNs."""
+
+    def test_forward_shapes_and_finite(self, arch, key):
+        cfg = get_config(arch).smoke().replace(dtype="float32")
+        assert cfg.d_model <= 512 and (not cfg.is_moe or cfg.n_experts <= 4)
+        params = registry.init(key, cfg)
+        batch = _batch(cfg, key)
+        logits = registry.apply_logits(params, cfg, batch,
+                                       q_chunk=32, kv_chunk=32)
+        b = batch.get("tokens", batch.get("embeds")).shape[0]
+        s = (batch["tokens"].shape[1] if "tokens" in batch
+             else batch["embeds"].shape[1])
+        assert logits.shape == (b, s, cfg.padded_vocab)
+        assert not bool(jnp.isnan(logits).any())
+
+    def test_train_step_finite(self, arch, key):
+        from repro.training import AdamWConfig, init_state, make_train_step
+        cfg = get_config(arch).smoke().replace(dtype="float32")
+        state = init_state(key, cfg)
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                       q_chunk=32, kv_chunk=32))
+        batch = _batch(cfg, key, b=2, s=32)
+        s_len = (batch["tokens"].shape[1] if "tokens" in batch
+                 else batch["embeds"].shape[1])
+        batch["labels"] = jax.random.randint(key, (2, s_len), 0,
+                                             cfg.vocab_size)
+        state, m = step(state, batch)
+        assert np.isfinite(float(m["loss"]))
+        assert float(m["grad_norm"]) > 0
+
+    def test_prefill_decode_matches_apply(self, arch, key):
+        cfg = get_config(arch).smoke().replace(dtype="float32")
+        if cfg.is_moe:
+            # capacity drops are position-dependent in token-choice MoE;
+            # disable dropping so the two paths are comparable
+            cfg = cfg.replace(capacity_factor=8.0)
+        fam = registry.get_family(cfg)
+        params = registry.init(key, cfg)
+        batch = _batch(cfg, key)
+        lg, cache = fam.prefill(params, cfg, batch, q_chunk=32, kv_chunk=32,
+                                capacity=96)
+        nt = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg2, cache = fam.decode_step(params, cfg, cache, nt)
+        full = dict(batch)
+        if cfg.embeds_input:
+            # vlm: decode continues in token space; consistency is covered by
+            # the dense-family test below, just check finiteness here
+            assert not bool(jnp.isnan(lg2).any())
+            return
+        full["tokens"] = jnp.concatenate([batch["tokens"], nt], axis=1)
+        ref = registry.apply_logits(params, cfg, full, q_chunk=32,
+                                    kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(lg2), np.asarray(ref[:, -1:]),
+                                   atol=2e-4, rtol=2e-3)
+
+
+class TestFamilies:
+    def test_sliding_window_variant_long_decode(self, key):
+        cfg = get_config("qwen3-8b", "long_500k")
+        assert cfg.sliding_window is not None
+        sm = cfg.smoke().replace(dtype="float32")
+        assert sm.sliding_window == 64
+        fam = registry.get_family(sm)
+        params = registry.init(key, sm)
+        toks = jax.random.randint(key, (1, 200), 0, sm.vocab_size)
+        lg, cache = fam.prefill(params, sm, {"tokens": toks},
+                                q_chunk=32, kv_chunk=32)
+        assert cache["k"].shape[2] == sm.sliding_window   # ring cache
+        for _ in range(3):
+            nt = jnp.argmax(lg, -1).astype(jnp.int32)
+            lg, cache = fam.decode_step(params, sm, cache, nt)
+        assert not bool(jnp.isnan(lg).any())
+
+    def test_ssm_decode_state_is_constant_size(self, key):
+        cfg = get_config("xlstm-1.3b").smoke().replace(dtype="float32")
+        fam = registry.get_family(cfg)
+        params = registry.init(key, cfg)
+        toks = jax.random.randint(key, (1, 32), 0, cfg.vocab_size)
+        _, c1 = fam.prefill(params, cfg, {"tokens": toks})
+        toks2 = jax.random.randint(key, (1, 128), 0, cfg.vocab_size)
+        _, c2 = fam.prefill(params, cfg, {"tokens": toks2})
+        sz = lambda c: sum(x.size for x in jax.tree.leaves(c))
+        assert sz(c1) == sz(c2)          # O(1) in sequence length
+
+    def test_moe_load_balance_loss_positive(self, key):
+        cfg = get_config("granite-moe-1b-a400m").smoke().replace(
+            dtype="float32")
+        params = registry.init(key, cfg)
+        toks = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
+        _, aux = registry.apply_with_aux(params, cfg, {"tokens": toks},
+                                         q_chunk=32, kv_chunk=32)
+        assert float(aux) >= 1.0 - 1e-3   # E * Σ f·P >= 1 by Cauchy-Schwarz
+
+    def test_full_configs_match_assignment(self):
+        spec = {
+            "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+            "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+            "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+            "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+            "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+            "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+            "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+            "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+            "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+            "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        }
+        for arch, (L, d, h, kv, f, v) in spec.items():
+            cfg = get_config(arch)
+            got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                   cfg.d_ff, cfg.vocab_size)
+            assert got == (L, d, h, kv, f, v), arch
+
+    def test_moe_extras(self):
+        g = get_config("granite-moe-1b-a400m")
+        assert (g.n_experts, g.top_k) == (32, 8)
+        d = get_config("dbrx-132b")
+        assert (d.n_experts, d.top_k) == (16, 4)

@@ -1,0 +1,136 @@
+"""Network integration: routing workflow, modes, churn, chain consensus."""
+
+import numpy as np
+import pytest
+
+from repro.core import DuelParams, Network, Node, NodePolicy
+from repro.sim import (WorkloadSpec, make_profile, make_requests, two_phase,
+                       uniform_phases)
+
+
+def _specs(t_end=400.0, hot_ia=3.0):
+    return [
+        WorkloadSpec("node1", two_phase(t_end / 2, t_end, hot_ia, 20),
+                     output_mean=4096, slo_s=300),
+        WorkloadSpec("node2", uniform_phases(t_end, 20), output_mean=4096,
+                     slo_s=300),
+        WorkloadSpec("node3", uniform_phases(t_end, 20), output_mean=4096,
+                     slo_s=300),
+        WorkloadSpec("node4", uniform_phases(t_end, 20), output_mean=4096,
+                     slo_s=300),
+    ]
+
+
+def _net(mode, ledger="shared", seed=0, p_d=0.1):
+    net = Network(mode=mode, seed=seed, ledger_mode=ledger,
+                  duel=DuelParams(p_d=p_d, k_judges=2), init_balance=100.0)
+    for i in range(4):
+        net.add_node(Node(f"node{i+1}", make_profile(quality=0.5 + 0.1 * i),
+                          policy=NodePolicy(offload_util_threshold=0.8)))
+    return net
+
+
+class TestModes:
+    def test_all_requests_complete_every_mode(self):
+        reqs = make_requests(_specs(), seed=1)
+        for mode in ("single", "centralized", "decentralized"):
+            m = _net(mode).run(reqs, until=400.0)
+            user = [c for c in m.completed if not c.is_duel_extra]
+            assert len(user) == len(reqs), mode
+
+    def test_single_never_delegates(self):
+        m = _net("single").run(make_requests(_specs(), seed=1), until=400.0)
+        assert m.delegation_rate() == 0.0
+
+    def test_decentralized_beats_single_under_skew(self):
+        reqs = make_requests(_specs(hot_ia=2.0), seed=2)
+        lat = {}
+        for mode in ("single", "decentralized"):
+            m = _net(mode).run(reqs, until=400.0)
+            lat[mode] = m.avg_latency()
+        assert lat["decentralized"] < lat["single"]
+
+    def test_centralized_at_least_as_good_as_single(self):
+        reqs = make_requests(_specs(hot_ia=2.0), seed=3)
+        m_s = _net("single").run(reqs, until=400.0)
+        m_c = _net("centralized").run(reqs, until=400.0)
+        assert m_c.avg_latency() <= m_s.avg_latency() * 1.05
+
+
+class TestEconomics:
+    def test_credit_conservation(self):
+        """Mint - slashes == total credit across nodes + treasury."""
+        net = _net("decentralized", p_d=0.3)
+        reqs = make_requests(_specs(hot_ia=2.0), seed=4)
+        net.run(reqs, until=400.0)
+        view = net.shared_ledger.view
+        slashed = sum(op.amount for op in net.shared_ledger.history
+                      if op.kind == "slash")
+        minted = sum(op.amount for op in net.shared_ledger.history
+                     if op.kind == "mint")
+        assert view.total() == pytest.approx(minted - slashed, rel=1e-9)
+
+    def test_executors_earn(self):
+        net = _net("decentralized")
+        reqs = make_requests(_specs(hot_ia=2.0), seed=5)
+        net.run(reqs, until=400.0)
+        served_delegated = {n.id: n.served_delegated
+                            for n in net.nodes.values()}
+        assert sum(served_delegated.values()) > 0
+
+    def test_chain_mode_matches_shared_mode_balances(self):
+        reqs = make_requests(_specs(), seed=6)
+        n1 = _net("decentralized", ledger="shared")
+        n1.run(reqs, until=400.0)
+        n2 = _net("decentralized", ledger="chain")
+        n2.run(reqs, until=400.0)
+        for nid in n1.nodes:
+            assert n1.ledger_balance(nid) == pytest.approx(
+                n2.ledger_balance(nid), abs=1e-6)
+        assert all(c.verify_chain() for c in n2.chains.values())
+        # majority confirmations on every finalized block
+        assert all(k * 2 > len(n2.chains) for k in
+                   n2.block_confirmations[len(n2.chains):])
+
+
+class TestChurn:
+    def test_offline_node_gets_no_new_work(self):
+        net = _net("decentralized")
+        net.loop.schedule(50.0, lambda: net.nodes["node4"].go_offline())
+        reqs = make_requests(_specs(hot_ia=2.0), seed=7)
+        net.run(reqs, until=400.0)
+        late = [c for c in net.metrics.completed
+                if c.executor == "node4" and c.finish > 200.0
+                and c.delegated]
+        assert len(late) == 0
+
+    def test_user_traffic_rerouted_from_offline_origin(self):
+        net = _net("decentralized")
+        net.loop.schedule(10.0, lambda: net.nodes["node1"].go_offline())
+        reqs = make_requests(_specs(), seed=8)
+        m = net.run(reqs, until=400.0)
+        user = [c for c in m.completed if not c.is_duel_extra]
+        assert len(user) == len(reqs)
+
+    def test_rejoin_serves_again(self):
+        net = _net("decentralized")
+        net.loop.schedule(20.0, lambda: net.nodes["node4"].go_offline())
+        net.loop.schedule(120.0, lambda: net.nodes["node4"].go_online())
+        reqs = make_requests(_specs(hot_ia=2.0), seed=9)
+        net.run(reqs, until=400.0)
+        served_after = [c for c in net.metrics.completed
+                        if c.executor == "node4" and c.finish > 150.0]
+        assert len(served_after) > 0
+
+
+class TestChainResync:
+    def test_offline_node_misses_blocks_then_catches_up(self):
+        net = _net("decentralized", ledger="chain")
+        net.loop.schedule(30.0, lambda: net.nodes["node4"].go_offline())
+        net.loop.schedule(250.0, lambda: net.nodes["node4"].go_online())
+        reqs = make_requests(_specs(hot_ia=2.0), seed=11)
+        net.run(reqs, until=400.0)
+        lens = {nid: len(c.blocks) for nid, c in net.chains.items()}
+        # after resync all online chains converge and verify
+        assert len(set(lens.values())) == 1, lens
+        assert all(c.verify_chain() for c in net.chains.values())
