@@ -3,16 +3,134 @@
 Prints ``name,us_per_call,derived`` CSV (one row per artifact).  Roofline
 numbers come from ``repro.launch.dryrun`` (see EXPERIMENTS.md §Roofline) —
 that path needs 512 host devices and therefore runs as its own process.
+
+``--smoke`` instead runs a <60s end-to-end sanity pass (model forward,
+prefill/decode consistency, real engine generation, Pallas kernel vs
+oracle, mesh-context sharding) so regressions in the tier-1 command are
+caught before a full pytest run::
+
+    PYTHONPATH=src python benchmarks/run.py --smoke
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 from typing import List
 
 
-def main() -> None:
+def _smoke() -> int:
+    """End-to-end sanity: fail fast and loudly, return a shell exit code."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    t_start = time.perf_counter()
+    failures: List[str] = []
+
+    def check(name, fn):
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"  ok   {name} ({time.perf_counter() - t0:.1f}s)",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — collect, report all
+            failures.append(name)
+            print(f"  FAIL {name}: {e!r}", flush=True)
+
+    def model_roundtrip():
+        from repro.configs import get_config
+        from repro.models import registry
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                  cfg.vocab_size)
+        fam = registry.get_family(cfg)
+        lg, cache = fam.prefill(params, cfg, {"tokens": toks}, q_chunk=32,
+                                kv_chunk=32, capacity=48)
+        assert not bool(jnp.isnan(lg).any())
+        nt = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg2, _ = fam.decode_step(params, cfg, cache, nt)
+        full = jnp.concatenate([toks, nt], axis=1)
+        ref = registry.apply_logits(params, cfg, {"tokens": full},
+                                    q_chunk=32, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(lg2),
+                                   np.asarray(ref[:, -1:]),
+                                   atol=2e-4, rtol=2e-3)
+
+    def engine_generates():
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serving import Engine, GenRequest
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, max_batch=2, bucket=16)
+        prompt = np.arange(2, 14).astype(np.int32)
+        done = eng.serve([GenRequest(rid="a", tokens=prompt, max_new=4),
+                          GenRequest(rid="b", tokens=prompt, max_new=2,
+                                     temperature=1.0)])
+        assert len(done[0].result) <= 4 and len(done[1].result) <= 2
+
+    def pallas_kernel_matches_oracle():
+        from repro.kernels.flash_attention import flash_attention_tpu
+        from repro.kernels.ref import reference_attention
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 128, 4, 64))
+        k = jax.random.normal(ks[1], (1, 128, 2, 64))
+        v = jax.random.normal(ks[2], (1, 128, 2, 64))
+        out = flash_attention_tpu(q, k, v, causal=True, block_q=64,
+                                  block_k=64, interpret=True)
+        ref = reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=1e-3)
+
+    def mesh_context_sharding():
+        from repro.compat import meshenv
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import common as cm
+        mesh = make_host_mesh()
+        with meshenv.mesh_context(mesh):
+            assert meshenv.axis_names() == ("data", "model")
+            y = jax.jit(lambda a: cm.shard(a, "batch", "model"))(
+                jnp.ones((2, 4)))
+            assert y.shape == (2, 4)
+        assert meshenv.current_mesh() is None
+
+    def protocol_sim():
+        from repro.core import DuelParams, Network, Node, NodePolicy
+        from repro.sim import make_profile
+        from repro.sim.workload import Request
+        net = Network(mode="decentralized", seed=0,
+                      duel=DuelParams(p_d=0.1, k_judges=1),
+                      init_balance=100.0)
+        for i in range(3):
+            net.add_node(Node(f"n{i}", make_profile("qwen3-8b", "RTX3090",
+                                                    "sglang", quality=0.5),
+                              policy=NodePolicy()))
+        reqs = [Request(rid=f"r{i}", origin="n0", arrival=0.05 * i,
+                        prompt_tokens=16, output_tokens=8, slo_s=30.0)
+                for i in range(20)]
+        m = net.run(reqs, until=300.0)
+        assert len(m.completed) >= 20
+
+    print("smoke: end-to-end sanity pass", flush=True)
+    check("model forward + prefill/decode consistency", model_roundtrip)
+    check("serving engine generation", engine_generates)
+    check("pallas flash kernel vs oracle (interpret)",
+          pallas_kernel_matches_oracle)
+    check("mesh context + sharding constraint", mesh_context_sharding)
+    check("decentralized protocol sim", protocol_sim)
+    dt = time.perf_counter() - t_start
+    if failures:
+        print(f"smoke FAILED ({len(failures)}): {failures} in {dt:.1f}s",
+              flush=True)
+        return 1
+    print(f"smoke OK in {dt:.1f}s", flush=True)
+    return 0
+
+
+def _full() -> int:
     rows: List[str] = ["name,us_per_call,derived"]
     from benchmarks import (duel_overhead, dynamic, gametheory, kernels,
                             policies, protocol, quality, scheduling)
@@ -29,7 +147,17 @@ def main() -> None:
         dt = time.perf_counter() - t0
         print(f"# {label}: {dt:.1f}s", file=sys.stderr, flush=True)
     print("\n".join(rows))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="benchmark harness")
+    ap.add_argument("--smoke", action="store_true",
+                    help="<60s end-to-end sanity pass instead of the full "
+                         "benchmark sweep")
+    args = ap.parse_args(argv)
+    return _smoke() if args.smoke else _full()
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Root pytest conftest: path bootstrap + offline property-test support.
+
+Two jobs, both before any test module is imported:
+
+1.  Make ``repro`` importable even when the caller forgot
+    ``PYTHONPATH=src`` (the tier-1 command sets it; IDEs often don't).
+2.  If the real ``hypothesis`` package is not installed (this container is
+    offline), install the deterministic shim from
+    ``repro.compat.hypothesis_shim`` under the ``hypothesis`` /
+    ``hypothesis.strategies`` module names.  When hypothesis IS installed
+    it is preferred untouched — delete the shim entries from
+    ``sys.modules`` and re-run to compare engines.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+# benchmarks/ is imported as a package by test_sim_and_engine
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+try:
+    import hypothesis  # noqa: F401 — real package wins when present
+except ImportError:
+    from repro.compat import hypothesis_shim as _shim
+
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies

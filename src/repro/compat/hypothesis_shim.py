@@ -1,0 +1,194 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API.
+
+The offline test container cannot ``pip install hypothesis``; six test
+modules use a small slice of its API (``@given``, ``@settings`` and the
+``integers / floats / booleans / lists / sampled_from / composite``
+strategies).  This module implements exactly that slice with seeded
+pseudo-random example generation, so the property tests still run many
+distinct examples — reproducibly, since the seed is derived from the test's
+qualified name rather than wall clock.
+
+The root ``conftest.py`` installs this module into ``sys.modules`` as
+``hypothesis`` ONLY when the real package is absent; installing hypothesis
+in the environment transparently switches the suite back to the real
+engine (shrinking, the full strategy library, and all).
+
+Intentional differences from real hypothesis:
+
+* no shrinking — a failing example is re-raised with the drawn values
+  attached to the assertion message instead;
+* no coverage-guided generation — plain uniform draws;
+* ``deadline`` / unknown ``settings`` kwargs are accepted and ignored.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+__version__ = "0.0-repro-shim"
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class SearchStrategy:
+    """A strategy is just a named wrapper around ``draw(rng) -> value``."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any], label: str):
+        self._draw = draw_fn
+        self._label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover — debug aid
+        return self._label
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, *,
+           allow_nan: bool = False, allow_infinity: bool = False
+           ) -> SearchStrategy:
+    # boundary values are disproportionately bug-prone; visit them sometimes
+    def draw(rng: random.Random) -> float:
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+
+    return SearchStrategy(draw, f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))],
+                          f"sampled_from({elements!r})")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: Optional[int] = None) -> SearchStrategy:
+    hi = min_size + 10 if max_size is None else max_size
+
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, hi)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw, f"lists({elements!r})")
+
+
+def composite(fn: Callable) -> Callable[..., SearchStrategy]:
+    """``@composite`` — ``fn(draw, *args)`` builds one example."""
+
+    @functools.wraps(fn)
+    def builder(*args: Any, **kwargs: Any) -> SearchStrategy:
+        def draw_example(rng: random.Random) -> Any:
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+
+        return SearchStrategy(draw_example, f"composite({fn.__name__})")
+
+    return builder
+
+
+class _StrategiesModule:
+    """Attribute bag standing in for the ``hypothesis.strategies`` module."""
+
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    composite = staticmethod(composite)
+    SearchStrategy = SearchStrategy
+
+
+strategies = _StrategiesModule()
+
+
+# ---------------------------------------------------------------------------
+# settings / given
+# ---------------------------------------------------------------------------
+
+class settings:  # noqa: N801 — mirrors the hypothesis name
+    """Decorator recording per-test run options (``max_examples`` only)."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline: Any = None, **_ignored: Any):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._shim_settings = self  # read by @given, whichever wraps whichever
+        return fn
+
+
+def _seed_for(fn: Callable) -> int:
+    name = getattr(fn, "__qualname__", getattr(fn, "__name__", "test"))
+    return zlib.crc32(name.encode("utf-8"))
+
+
+def given(*strat_args: SearchStrategy, **strat_kwargs: SearchStrategy):
+    """Run the test once per drawn example (deterministic per-test seed)."""
+
+    def decorate(fn: Callable) -> Callable:
+
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            opts: settings = (getattr(wrapper, "_shim_settings", None)
+                              or getattr(fn, "_shim_settings", None)
+                              or settings())
+            rng = random.Random(_seed_for(fn))
+            for i in range(opts.max_examples):
+                ex_args = tuple(s.draw(rng) for s in strat_args)
+                ex_kwargs = {k: s.draw(rng) for k, s in strat_kwargs.items()}
+                try:
+                    fn(*args, *ex_args, **kwargs, **ex_kwargs)
+                except _UnsatisfiedAssumption:
+                    continue
+                except Exception as e:  # noqa: BLE001 — annotate + re-raise
+                    detail = (f"[hypothesis-shim] falsifying example "
+                              f"#{i + 1}: args={ex_args!r} "
+                              f"kwargs={ex_kwargs!r}")
+                    try:
+                        annotated = type(e)(f"{e}\n{detail}")
+                    except TypeError:  # exotic exception signature
+                        raise e
+                    raise annotated.with_traceback(
+                        e.__traceback__) from None
+
+        # pytest introspects signatures through __wrapped__ and would treat
+        # the strategy-supplied parameters as fixtures; hide them.  (pytest
+        # also special-cases a ``hypothesis`` attribute — don't set one.)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def assume(condition: bool) -> bool:
+    """Real hypothesis aborts the example; the shim just skips via raise."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass

@@ -1,0 +1,19 @@
+"""Pallas-TPU API compatibility.
+
+The TPU compiler-params dataclass was renamed across JAX versions:
+``pltpu.TPUCompilerParams`` (0.4.x–0.6) became ``pltpu.CompilerParams``
+(0.7+).  Kernels route through :func:`tpu_compiler_params` so they lower on
+whichever name the installed toolchain provides.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under its current name."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

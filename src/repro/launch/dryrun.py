@@ -16,6 +16,7 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
 
+from repro.compat import meshenv                             # noqa: E402
 from repro.configs import INPUT_SHAPES, get_config, grid     # noqa: E402
 from repro.launch import sharding as sh                      # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
@@ -133,7 +134,7 @@ def _lower(arch: str, shape_name: str, mesh, kw: Dict, *,
     if roofline:
         kw["microbatches"] = 1
     ctx = runtime.roofline_lowering() if roofline else _nullctx()
-    with runtime.perf_flags(**flags), ctx, jax.sharding.set_mesh(mesh):
+    with runtime.perf_flags(**flags), ctx, meshenv.mesh_context(mesh):
         if shp.kind == "train":
             step = build_train_step(cfg, shp, **kw)
             pshard = sh.params_shardings(specs["state"]["params"], mesh,
@@ -251,6 +252,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rc, rcfg, _ = _lower(arch, shape_name, mesh, kw, roofline=True,
                              k_groups=k_groups)
         cost = rc.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # older JAX: one dict per device
+            cost = cost[0] if cost else {}
         hlo = rc.as_text()
         return {"flops": float(cost.get("flops", 0.0)),
                 "hbm": hbm_traffic_bytes(hlo),

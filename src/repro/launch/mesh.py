@@ -6,21 +6,19 @@ never touches JAX device state.
 
 from __future__ import annotations
 
-import jax
+from repro.compat import meshenv
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return meshenv.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for smoke tests / examples on this CPU container."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return meshenv.make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip)

@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import meshenv
+
 NEG_INF = -1e30
 
 
@@ -258,7 +260,7 @@ def decode_attention_seqsharded(q: jax.Array, k_cache: jax.Array,
     quant = scales is not None
     if quant:
         ks_cache, vs_cache, kn_scale, vn_scale = scales
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = meshenv.current_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         dus = lambda c, n: jax.lax.dynamic_update_slice(c, n, (0, slot, 0, 0))
         kc, vc = dus(k_cache, k_new), dus(v_cache, v_new)
@@ -269,11 +271,11 @@ def decode_attention_seqsharded(q: jax.Array, k_cache: jax.Array,
                                    cache_len)
             return out, kc, vc, ks_c, vs_c
         return decode_attention(q, kc, vc, cache_len), kc, vc
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    from repro.models.common import BATCH_AXES
+    batch_ax = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
     b_spec = batch_ax if (batch_ax and q.shape[0] %
-                          _mesh_size(mesh, batch_ax) == 0) else None
+                          meshenv.mesh_size(mesh, batch_ax) == 0) else None
     h = q.shape[2]
 
     def local(q_l, k_l, v_l, kn, vn, scalars, *scl):
@@ -334,21 +336,9 @@ def decode_attention_seqsharded(q: jax.Array, k_cache: jax.Array,
         in_specs += [seq_spec, seq_spec, rep_spec, rep_spec]
         out_specs += [seq_spec, seq_spec]
         args += [ks_cache, vs_cache, kn_scale, vn_scale]
-    fn = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
-                   out_specs=tuple(out_specs), check_rep=False)
+    fn = meshenv.shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                           out_specs=tuple(out_specs), check_rep=False)
     return fn(*args)
-
-
-def _mesh_size(mesh, axes) -> int:
-    n = 1
-    for a in axes:
-        n *= dict(mesh.shape)[a]
-    return n
-
-
-def _concrete_mesh(abstract_mesh):
-    """shard_map accepts the abstract mesh directly in recent JAX."""
-    return abstract_mesh
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

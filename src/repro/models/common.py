@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import meshenv
+
 # ---------------------------------------------------------------------------
 # logical sharding: annotate intermediates; the mesh context resolves axes.
 # data-parallel batch spans ("pod", "data"); tensor-parallel spans "model".
@@ -17,11 +19,7 @@ BATCH_AXES = ("pod", "data")
 
 
 def _mesh_axes() -> Tuple[str, ...]:
-    env = jax.sharding.get_abstract_mesh()
-    try:
-        return tuple(env.axis_names) if env is not None else ()
-    except Exception:
-        return ()
+    return meshenv.axis_names()
 
 
 def logical(*axes: Optional[str]) -> P:
@@ -53,7 +51,7 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """with_sharding_constraint under the ambient mesh (no-op without mesh)."""
     if not _mesh_axes():
         return x
-    return jax.lax.with_sharding_constraint(x, logical(*axes))
+    return meshenv.with_sharding_constraint(x, logical(*axes))
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import meshenv
 from repro.models import common as cm
 from repro.models import runtime
 from repro.models import dense
@@ -157,17 +158,14 @@ def _moe_mlp_a2a(cfg: ModelConfig, lp: Dict, x: jax.Array):
     from the expert-owning shards.  Returns None if shapes don't divide
     (falls back to the einsum path).
     """
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = meshenv.current_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return None
-    m = dict(mesh.shape)["model"]
+    m = meshenv.mesh_size(mesh, "model")
     b, s, d = x.shape
-    bx = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    nb = 1
-    for a in bx:
-        nb *= dict(mesh.shape)[a]
+    bx = tuple(a for a in cm.BATCH_AXES if a in mesh.axis_names)
+    nb = meshenv.mesh_size(mesh, bx)
     if m == 1 or cfg.n_experts % m or s % m or (bx and b % nb):
         return None
     b_spec = bx if bx else None
@@ -187,13 +185,13 @@ def _moe_mlp_a2a(cfg: ModelConfig, lp: Dict, x: jax.Array):
         out = _combine(x_l, back, disp, gsel)
         return out, jax.lax.pmean(aux, "model")
 
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(b_spec, "model", None), P(),
-                             P("model", None, None),
-                             P("model", None, None),
-                             P("model", None, None)),
-                   out_specs=(P(b_spec, "model", None), P()),
-                   check_rep=False)
+    fn = meshenv.shard_map(local, mesh=mesh,
+                           in_specs=(P(b_spec, "model", None), P(),
+                                     P("model", None, None),
+                                     P("model", None, None),
+                                     P("model", None, None)),
+                           out_specs=(P(b_spec, "model", None), P()),
+                           check_rep=False)
     out, aux = fn(x, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"])
     return cm.shard(out, "batch", "seq", None), aux
 

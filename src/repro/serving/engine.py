@@ -83,24 +83,29 @@ class Engine:
 
         out = np.zeros((len(reqs), max_new), np.int32)
         done = np.zeros(len(reqs), bool)
+        temps_np = np.array([r.temperature for r in reqs], np.float32)
+        # all-greedy batches (the default) keep the scalar fast path in
+        # sample(), skipping the per-step Gumbel draw over the vocab
+        temps = 0.0 if (temps_np <= 0.0).all() else jnp.asarray(temps_np)
+        budgets = np.array([r.max_new for r in reqs])
         cur = None
         for step in range(max_new):
             self.key, sk = jax.random.split(self.key)
-            temp = max(r.temperature for r in reqs)
-            cur = sample(sk, logits, temperature=temp,
+            cur = sample(sk, logits, temperature=temps,
                          vocab_size=self.cfg.vocab_size)
             out[:, step] = np.asarray(cur[:, 0])
             done |= out[:, step] == self.eos_id
-            done |= np.array([step >= r.max_new for r in reqs])
+            done |= step + 1 >= budgets
             if done.all():
                 break
             logits, cache = self._decode(self.params, cache, cur)
             self.stats.decode_tokens += int((~done).sum())
         for i, r in enumerate(reqs):
-            end = np.argmax(out[i] == self.eos_id) if (out[i] ==
-                                                       self.eos_id).any() \
+            row = out[i, : r.max_new]
+            end = np.argmax(row == self.eos_id) if (row ==
+                                                    self.eos_id).any() \
                 else r.max_new
-            r.result = out[i, : max(int(end), 1)]
+            r.result = row[: max(int(end), 1)]
             r.finished_at = time.perf_counter()
         self.stats.served += len(reqs)
         self.stats.batches += 1

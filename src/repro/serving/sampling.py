@@ -6,17 +6,28 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(key: jax.Array, logits: jax.Array, temperature: float = 0.0,
+def sample(key: jax.Array, logits: jax.Array,
+           temperature: float | jax.Array = 0.0,
            top_p: float = 1.0, vocab_size: int | None = None) -> jax.Array:
-    """logits: (B, 1, V) -> tokens (B, 1) int32."""
+    """logits: (B, 1, V) -> tokens (B, 1) int32.
+
+    ``temperature`` may be a scalar (whole batch) or a (B,) vector — batched
+    serving mixes requests with different temperatures, and rows with
+    temperature <= 0 decode greedily.
+    """
     logits = logits[:, -1].astype(jnp.float32)
     if vocab_size is not None and vocab_size < logits.shape[-1]:
         # mask padded vocab entries
         pad_mask = jnp.arange(logits.shape[-1]) >= vocab_size
         logits = jnp.where(pad_mask[None], -1e30, logits)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    logits = logits / temperature
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    if isinstance(temperature, (int, float)):
+        if temperature <= 0.0:
+            return greedy
+        temperature = jnp.full((logits.shape[0],), temperature, jnp.float32)
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(-1)
+    is_greedy = temperature <= 0.0
+    logits = logits / jnp.where(is_greedy, 1.0, temperature)[:, None]
     if top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_logits, axis=-1)
@@ -25,4 +36,5 @@ def sample(key: jax.Array, logits: jax.Array, temperature: float = 0.0,
         cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -1e30, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)[:, None]
+    drawn = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)[:, None]
+    return jnp.where(is_greedy[:, None], greedy, drawn)

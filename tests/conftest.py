@@ -1,0 +1,37 @@
+"""Collection guard: fail fast, with an actionable message, before pytest
+prints 10 modules' worth of identical ImportError tracebacks.
+
+The root ``conftest.py`` bootstraps ``sys.path`` and the hypothesis shim;
+this file verifies the environment actually works (repro importable, jax
+present, property-test API available) and aborts collection with one clear
+diagnostic when it doesn't.
+"""
+
+import pytest
+
+
+def _guard() -> None:
+    problems = []
+    try:
+        import repro  # noqa: F401
+    except ImportError as e:
+        problems.append(
+            f"cannot import 'repro' ({e}); run tests from the repo root "
+            f"(root conftest.py adds src/ to sys.path) or set "
+            f"PYTHONPATH=src")
+    try:
+        import jax  # noqa: F401
+    except ImportError as e:
+        problems.append(f"jax is required for the test suite: {e}")
+    try:
+        from hypothesis import given, settings, strategies  # noqa: F401
+    except ImportError as e:
+        problems.append(
+            f"hypothesis API unavailable ({e}); the root conftest.py "
+            f"should have installed repro.compat.hypothesis_shim")
+    if problems:
+        raise pytest.UsageError(
+            "test environment broken:\n  - " + "\n  - ".join(problems))
+
+
+_guard()

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import meshenv
 from repro.configs import INPUT_SHAPES, get_config, grid
 from repro.launch import sharding as sh
 from repro.launch.specs import (batch_struct, input_specs, n_groups_of,
@@ -20,8 +21,7 @@ from repro.launch.specs import (batch_struct, input_specs, n_groups_of,
 @pytest.fixture(scope="module")
 def mesh():
     # single CPU device, but axis NAMES match production (sizes 1)
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return meshenv.make_mesh((1, 1), ("data", "model"))
 
 
 class TestShardingRules:
@@ -37,12 +37,9 @@ class TestShardingRules:
         assert sh.param_spec("final_norm/scale", (4096,), mesh) == P()
 
     def test_indivisible_axes_dropped(self):
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
         # 7 not divisible by any >1 axis — on a 1x1 mesh everything divides,
         # so exercise _trim directly with a fake 16-wide axis
-        big = jax.make_mesh((1, 1), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        big = meshenv.make_mesh((1, 1), ("data", "model"))
         assert sh._fits(36, big, "model")     # 36 % 1 == 0
         assert sh._trim((("data",), None), (7, 8), big) == P(("data",), None)
 

@@ -125,3 +125,27 @@ class TestEngine:
         assert eng.stats.served == 3
         lp = eng.logprob_of(np.arange(2, 20).astype(np.int32))
         assert np.isfinite(lp) and lp < 0
+
+    def test_per_request_temperature_and_budget(self):
+        """A hot request in the batch must not heat up its greedy neighbour,
+        and each request stops at ITS max_new, not the batch max."""
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serving import Engine, GenRequest
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+        prompt = np.random.default_rng(7).integers(
+            2, 400, size=12).astype(np.int32)
+        eng = Engine(cfg, params, max_batch=2, bucket=16)
+        done = eng.serve([
+            GenRequest(rid="greedy", tokens=prompt, max_new=6,
+                       temperature=0.0),
+            GenRequest(rid="hot", tokens=prompt, max_new=3,
+                       temperature=5.0),
+        ])
+        assert len(done[0].result) <= 6
+        assert len(done[1].result) <= 3          # own budget, not batch max
+        solo = Engine(cfg, params, max_batch=2, bucket=16, seed=99).serve(
+            [GenRequest(rid="solo", tokens=prompt, max_new=6,
+                        temperature=0.0)])
+        np.testing.assert_array_equal(done[0].result, solo[0].result)
