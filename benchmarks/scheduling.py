@@ -26,6 +26,8 @@ def run_setting(setting: str, seed: int = 0) -> Dict:
             "slo_curve": m.slo_curve(SLO_SCALES),
             "avg_latency": m.avg_latency(),
             "p90_latency": m.latency_percentile(90),
+            "p95_latency": m.latency_percentile(95),
+            "avg_ttft": m.avg_ttft(),
             "delegation_rate": m.delegation_rate(),
             "n": len([c for c in m.completed if not c.is_duel_extra]),
             "wall_s": time.perf_counter() - t0,

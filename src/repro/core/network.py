@@ -88,6 +88,7 @@ class Network:
     # ------------------------------------------------------------- membership
     def add_node(self, node: Node) -> None:
         node.network = self
+        node.bind_executor(self.loop)
         self.nodes[node.id] = node
         if self.ledger_mode == "chain":
             chain = CreditChain(node.id)
@@ -185,18 +186,23 @@ class Network:
             self.loop.schedule(5.0, lambda: self.resubmit_elsewhere(req))
             return
         pick = online[int(self.rng.integers(len(online)))]
-        pick.enqueue(QueuedRequest(req, self.loop.now, delegated=False,
+        # executing another node's traffic is delegation even when it got
+        # here via churn rerouting: keep the flag (and the credit transfer
+        # at completion) truthful
+        pick.enqueue(QueuedRequest(req, self.loop.now,
+                                   delegated=pick.id != req.origin,
                                    origin_node=req.origin))
 
     def _est_wait(self, node: Node, req: Request) -> float:
-        """Omniscient load estimate for the centralized baseline."""
+        """Omniscient load estimate for the centralized baseline, built from
+        the executor's load snapshot (queued + in-flight token backlog)."""
+        ld = node.executor.load()
         backlog = sum(q.req.output_tokens for q in
                       node.local_queue + node.delegated_queue)
+        backlog += ld.pending_decode_tokens
         cap = node.profile.decode_tps * node.profile.saturation
-        queued_s = backlog / cap
-        active_s = node.n_active / max(1, node.profile.saturation) * 30.0
-        return queued_s + active_s + node.profile.service_time(
-            req.prompt_tokens, req.output_tokens, node.n_active + 1)
+        return backlog / cap + node.executor.estimate(
+            req.prompt_tokens, req.output_tokens)
 
     def _dispatch_centralized(self, req: Request) -> None:
         online = [n for n in self.nodes.values() if n.online]
@@ -253,6 +259,34 @@ class Network:
                 return True
         return False
 
+    def on_queued_dropped(self, node: Node, qr: QueuedRequest) -> None:
+        """A node went offline with ``qr`` still queued (never admitted).
+
+        Plain user traffic is resubmitted to an online peer.  Duel legs are
+        instead marked finished-without-response so the duel still resolves,
+        and judge evaluations are counted done — resubmitting either would
+        double-record the user request or run a judge against the wrong
+        model.
+        """
+        if qr.duel_id is None:
+            self.resubmit_elsewhere(qr.req)
+            return
+        if qr.duel_id.endswith(":judging"):
+            st = self._duels.get(qr.duel_id.rsplit(":", 1)[0])
+            if st is not None:
+                self._on_judge_done(st)
+            return
+        st = self._duels.get(qr.duel_id)
+        if st is not None:
+            st.finished.append(node.id)
+            if len(st.finished) == 2:
+                if not st.user_served:
+                    # both legs lost to churn: nobody will ever respond, so
+                    # the user's request re-enters the network as plain work
+                    st.user_served = True
+                    self.resubmit_elsewhere(st.req)
+                self._dispatch_judges(st)
+
     def _start_duel(self, origin: Node, req: Request, stakes: Dict[str, float],
                     eligible: Sequence[str]) -> bool:
         execs = pos_sample(stakes, eligible, 2, self.rng)
@@ -279,14 +313,26 @@ class Network:
         return True
 
     # ------------------------------------------------------------ completion
+    @staticmethod
+    def _timings(qr: QueuedRequest) -> Tuple[float, float]:
+        """(ttft, queue_wait) from the executor's completion timestamps."""
+        nan = float("nan")
+        ttft = (qr.first_token_at - qr.req.arrival
+                if qr.first_token_at is not None else nan)
+        wait = (qr.started_at - qr.enqueue_time
+                if qr.started_at is not None else nan)
+        return ttft, wait
+
     def on_request_finished(self, executor: Node, qr: QueuedRequest) -> None:
         now = self.loop.now
+        ttft, queue_wait = self._timings(qr)
         if qr.duel_id is not None:
             if qr.duel_id.endswith(":judging"):
                 self.metrics.record(CompletedRequest(
                     rid=qr.req.rid, origin=qr.origin_node, executor=executor.id,
                     arrival=qr.req.arrival, finish=now, slo_s=qr.req.slo_s,
-                    delegated=True, is_duel_extra=True))
+                    delegated=True, is_duel_extra=True,
+                    ttft=ttft, queue_wait=queue_wait))
                 st = self._duels.get(qr.duel_id.rsplit(":", 1)[0])
                 if st is not None:
                     self._on_judge_done(st)
@@ -297,7 +343,8 @@ class Network:
         self.metrics.record(CompletedRequest(
             rid=qr.req.rid, origin=qr.origin_node, executor=executor.id,
             arrival=qr.req.arrival, finish=finish, slo_s=qr.req.slo_s,
-            delegated=qr.delegated, is_duel_extra=qr.req.is_duel_extra))
+            delegated=qr.delegated, is_duel_extra=qr.req.is_duel_extra,
+            ttft=ttft, queue_wait=queue_wait))
         if qr.delegated and not qr.req.is_duel_extra:
             price = self.nodes[qr.origin_node].policy.offload_price \
                 if qr.origin_node in self.nodes else 1.0
@@ -310,13 +357,15 @@ class Network:
         if st is None:
             return
         st.finished.append(executor.id)
+        ttft, queue_wait = self._timings(qr)
         if not st.user_served:
             # the first response back serves the user
             st.user_served = True
             self.metrics.record(CompletedRequest(
                 rid=st.req.rid, origin=st.origin, executor=executor.id,
                 arrival=st.req.arrival, finish=self.loop.now + self.msg_latency,
-                slo_s=st.req.slo_s, delegated=True, is_duel_extra=False))
+                slo_s=st.req.slo_s, delegated=True, is_duel_extra=False,
+                ttft=ttft, queue_wait=queue_wait))
             price = self.nodes[st.origin].policy.offload_price \
                 if st.origin in self.nodes else 1.0
             self._apply_ops([CreditOp("transfer", st.origin, executor.id,

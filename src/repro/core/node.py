@@ -5,8 +5,12 @@ Each node bundles the five managers:
 * **Request Manager** — local + delegated queues, admission timestamps.
 * **Policy Manager**  — ``NodePolicy`` decisions (offload / accept / priority).
 * **Ledger Manager**  — either a shared ledger handle or a local CreditChain.
-* **Model Manager**   — backend-agnostic execution: an analytic
-  ``BackendProfile`` (simulation) or a real JAX serving engine callback.
+* **Model Manager**   — a pluggable ``Executor`` backend (DESIGN.md §6.1).
+  Inside the event-loop simulation this is the continuous-batching
+  ``TokenBucketExecutor`` (default).  The real JAX ``EngineExecutor``
+  implements the same contract but runs in wall-clock time on
+  ``GenRequest`` payloads, so it is pumped by the serving driver
+  (``repro.launch.serve``) rather than scheduled by the sim loop.
 * **Communication Manager** — message send via the network bus (latency
   injected by the event loop; ZeroMQ ROUTER in the paper).
 """
@@ -20,6 +24,7 @@ import numpy as np
 
 from repro.core.gossip import PeerView
 from repro.core.policy import NodePolicy
+from repro.sim.executor import Executor, TokenBucketExecutor
 from repro.sim.servicemodel import BackendProfile
 from repro.sim.workload import Request
 
@@ -34,12 +39,16 @@ class QueuedRequest:
     delegated: bool
     origin_node: str              # who the response must be returned to
     duel_id: Optional[str] = None # set if this execution is part of a duel
+    started_at: Optional[float] = None      # executor admission time
+    first_token_at: Optional[float] = None  # prefill done, first decode token
 
 
 class Node:
     def __init__(self, node_id: str, profile: BackendProfile,
                  policy: Optional[NodePolicy] = None,
-                 quality: Optional[float] = None) -> None:
+                 quality: Optional[float] = None,
+                 executor_factory: Optional[Callable[["Node"], Executor]] = None
+                 ) -> None:
         self.id = node_id
         self.profile = profile
         self.policy = policy or NodePolicy()
@@ -51,7 +60,12 @@ class Node:
         # Request Manager state
         self.local_queue: List[QueuedRequest] = []
         self.delegated_queue: List[QueuedRequest] = []
-        self.n_active = 0
+
+        # Model Manager: the executor is bound when the node joins a network
+        # (it needs the network's clock)
+        self._executor_factory = executor_factory or (
+            lambda node: TokenBucketExecutor(node.profile))
+        self.executor: Optional[Executor] = None
 
         # stats
         self.served_total = 0
@@ -61,13 +75,22 @@ class Node:
 
         self.network: Optional["Network"] = None  # set on Network.add_node
 
+    def bind_executor(self, loop) -> None:
+        self.executor = self._executor_factory(self)
+        self.executor.bind(loop, self._on_exec_complete)
+
     # ------------------------------------------------------------------ utils
+    @property
+    def n_active(self) -> int:
+        return self.executor.n_active if self.executor is not None else 0
+
     @property
     def queue_len(self) -> int:
         return len(self.local_queue) + len(self.delegated_queue)
 
     def utilization(self) -> float:
-        return self.n_active / max(1, self.profile.saturation)
+        return self.executor.load().active_streams / max(
+            1, self.profile.saturation)
 
     def balance(self) -> float:
         return self.network.ledger_balance(self.id)
@@ -92,6 +115,12 @@ class Node:
                                    origin_node=self.id))
 
     def enqueue(self, qr: QueuedRequest) -> None:
+        if not self.online:
+            # delegation/duel deliveries race with churn: the message was in
+            # flight when this node went offline, so bounce it back to the
+            # network instead of re-stranding it in a drained queue
+            self.network.on_queued_dropped(self, qr)
+            return
         (self.delegated_queue if qr.delegated else self.local_queue).append(qr)
         self._maybe_start()
 
@@ -109,20 +138,21 @@ class Node:
         return qr
 
     def _maybe_start(self) -> None:
-        net = self.network
-        while (self.online and self.n_active < self.profile.max_concurrency
-               and self.queue_len > 0):
+        while self.online and self.queue_len > 0:
             qr = self._pop_next()
             if qr is None:
                 break
-            self.n_active += 1
-            st = self.profile.service_time(qr.req.prompt_tokens,
-                                           qr.req.output_tokens,
-                                           self.n_active)
-            net.loop.schedule(st, lambda qr=qr: self._finish(qr))
+            if not self.executor.admit(qr):
+                # KV headroom exhausted: put it back at the head of its queue
+                # and retry when a completion frees budget
+                q = self.delegated_queue if qr.delegated else self.local_queue
+                q.insert(0, qr)
+                break
 
-    def _finish(self, qr: QueuedRequest) -> None:
-        self.n_active -= 1
+    def _on_exec_complete(self, qr: QueuedRequest, started_at: float,
+                          first_token_at: float) -> None:
+        qr.started_at = started_at
+        qr.first_token_at = first_token_at
         self.served_total += 1
         if qr.delegated:
             self.served_delegated += 1
@@ -133,6 +163,13 @@ class Node:
     def go_offline(self) -> None:
         self.online = False
         self.view.set_offline(self.network.loop.now)
+        # in-flight streams drain to completion, but queued (not yet started)
+        # requests would otherwise be stranded until this node happens to
+        # rejoin — hand them back to the network (paper Fig 5 churn)
+        stranded = self.local_queue + self.delegated_queue
+        self.local_queue, self.delegated_queue = [], []
+        for qr in stranded:
+            self.network.on_queued_dropped(self, qr)
 
     def go_online(self) -> None:
         self.online = True

@@ -3,9 +3,12 @@
 Spins up N WWW.Serve nodes, each backed by a REAL JAX engine serving a small
 model; users submit batched requests to hot nodes; the decentralized protocol
 (PoS routing, credit ledger, duels judged by sequence log-likelihood under
-the judges' own models) redistributes them.  Wall-clock generation time of
-the engines drives the simulated clock, so this is genuine serving — not the
-analytic model used by the large-scale benchmarks.
+the judges' own models) redistributes them.  The protocol's executor
+assignments are then replayed on real slot-based continuous-batching engines
+behind the ``EngineExecutor`` interface (DESIGN.md §6.1): all engines are
+pumped step-by-step in round-robin, so admissions interleave with decode
+exactly as they would under live traffic, and per-node load is reported from
+``Executor.load()`` snapshots.
 
     PYTHONPATH=src python -m repro.launch.serve --nodes 4 --requests 24
 """
@@ -22,7 +25,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import DuelParams, Network, Node, NodePolicy
 from repro.models import registry
-from repro.serving import Engine, GenRequest
+from repro.serving import Engine, EngineExecutor, GenRequest
 from repro.sim import make_profile
 from repro.sim.workload import Request
 
@@ -44,13 +47,14 @@ def main(argv=None) -> int:
     net = Network(mode="decentralized", seed=args.seed,
                   duel=DuelParams(p_d=args.duel_rate, k_judges=1),
                   init_balance=100.0)
-    engines: Dict[str, Engine] = {}
+    executors: Dict[str, EngineExecutor] = {}
     for i in range(args.nodes):
         nid = f"node{i+1}"
         # heterogeneous quality: deeper-trained nodes get lower-temperature
         # params (stand-in for better models)
         params = registry.init(jax.random.PRNGKey(i), cfg)
-        engines[nid] = Engine(cfg, params, max_batch=4, bucket=32, seed=i)
+        executors[nid] = EngineExecutor(
+            Engine(cfg, params, max_batch=4, bucket=32, seed=i))
         prof = make_profile("qwen3-8b", "RTX3090", "sglang",
                             quality=0.4 + 0.15 * i)
         pol = NodePolicy(offload_util_threshold=0.15,
@@ -66,26 +70,44 @@ def main(argv=None) -> int:
                         slo_s=60.0) for i in range(args.requests)]
     m = net.run(sim_reqs, until=600.0)
 
-    # replay the protocol's executor assignments on the real engines
+    # replay the protocol's executor assignments on the real engines:
+    # admit through the Executor interface, then pump all engines in
+    # round-robin so slot admissions interleave with decode steps
     by_exec: Dict[str, List[int]] = {}
     for c in m.completed:
         if not c.is_duel_extra:
             by_exec.setdefault(c.executor, []).append(int(c.rid[1:]))
     print(f"protocol assigned: { {k: len(v) for k, v in by_exec.items()} }")
-    total_tokens = 0
+    done_by_node: Dict[str, List[GenRequest]] = {nid: [] for nid in by_exec}
     for nid, idxs in by_exec.items():
-        eng = engines[nid]
-        reqs = [GenRequest(rid=f"r{i}", tokens=prompts[i],
-                           max_new=args.max_new) for i in idxs]
-        done = eng.serve(reqs)
+        ex = executors[nid]
+        ex.bind(None, lambda r, st, ft, nid=nid:
+                done_by_node[nid].append(r))
+        for i in idxs:
+            ex.admit(GenRequest(rid=f"r{i}", tokens=prompts[i],
+                                max_new=args.max_new))
+    busy = {nid for nid in by_exec if executors[nid].engine.has_work()}
+    while busy:
+        for nid in sorted(busy):
+            executors[nid].step()
+        busy = {nid for nid in busy if executors[nid].engine.has_work()}
+    total_tokens = 0
+    for nid in sorted(by_exec):
+        ex, done = executors[nid], done_by_node[nid]
+        ld = ex.load()
         total_tokens += sum(len(r.result) for r in done)
         print(f"  {nid}: served {len(done)} requests "
-              f"({eng.stats.decode_tokens} decode tokens)")
+              f"({ex.engine.stats.decode_tokens} decode tokens in "
+              f"{ex.engine.stats.decode_steps} steps; load: "
+              f"{ld.active_streams} active / {ld.queued_streams} queued, "
+              f"kv headroom {ld.kv_headroom:.2f})")
     dt = time.time() - t_wall
     print(f"generated {total_tokens} tokens across {len(by_exec)} nodes "
           f"in {dt:.1f}s wall")
     print(f"sim SLO attainment: {m.slo_attainment():.3f}; "
-          f"delegation rate: {m.delegation_rate():.2f}")
+          f"delegation rate: {m.delegation_rate():.2f}; "
+          f"avg TTFT: {m.avg_ttft():.2f}s; "
+          f"avg queue wait: {m.avg_queue_wait():.2f}s")
     print(f"credit balances: "
           f"{ {n: round(net.ledger_balance(n), 1) for n in net.nodes} }")
     return 0

@@ -189,14 +189,19 @@ def _block_decode(lp: Dict, cfg: ModelConfig, x: jax.Array, kv: Dict,
                   length: jax.Array, position: jax.Array
                   ) -> Tuple[jax.Array, Dict]:
     """One layer, one token.  x: (B,1,d); kv holds this layer's cache slices
-    (B,C,Hkv,dh) (+ per-token scales when cfg.kv_quant)."""
+    (B,C,Hkv,dh) (+ per-token scales when cfg.kv_quant).
+
+    ``length``/``position`` are () for lock-step decode or (B,) for
+    slot-based continuous batching, where each row sits at its own depth
+    (the serving engine admits new requests into freed slots mid-decode).
+    """
     from repro.models.attention import kv_dequantize, kv_quantize
     b = x.shape[0]
     cap = kv["k"].shape[1]
     h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
-    pos = jnp.broadcast_to(position.reshape(1, 1), (b, 1))
+    pos = jnp.broadcast_to(jnp.reshape(position, (-1, 1)), (b, 1))
     if cfg.mrope:
-        pos = jnp.broadcast_to(position.reshape(1, 1, 1), (b, 1, 3))
+        pos = jnp.broadcast_to(jnp.reshape(position, (-1, 1, 1)), (b, 1, 3))
     q, k, v = _project_qkv(lp, cfg, h, pos)
     slot = jnp.mod(length, cap)                      # ring write (window cache)
     n_valid = jnp.minimum(length + 1, cap)
@@ -204,7 +209,19 @@ def _block_decode(lp: Dict, cfg: ModelConfig, x: jax.Array, kv: Dict,
     if cfg.kv_quant:
         writes["k"], writes["k_scale"] = kv_quantize(k)
         writes["v"], writes["v_scale"] = kv_quantize(v)
-    if runtime.decode_seq_shard():
+    if jnp.ndim(length) > 0:
+        # per-row depths: scatter each row's token at its own slot, attend
+        # its own valid prefix (decode_attention takes (B,) cache lengths)
+        rows = jnp.arange(b)
+        kv = {name: kv[name].at[rows, slot].set(w[:, 0])
+              for name, w in writes.items()}
+        if cfg.kv_quant:
+            kf = kv_dequantize(kv["k"], kv["k_scale"], _dt(cfg))
+            vf = kv_dequantize(kv["v"], kv["v_scale"], _dt(cfg))
+        else:
+            kf, vf = kv["k"], kv["v"]
+        attn = decode_attention(q, kf, vf, n_valid)
+    elif runtime.decode_seq_shard():
         # §Perf: shard-local ring write + LSE-combined partial attention —
         # avoids GSPMD's cache-sized collectives for the seq-sharded update
         from repro.models.attention import decode_attention_seqsharded
@@ -240,8 +257,10 @@ def _block_decode(lp: Dict, cfg: ModelConfig, x: jax.Array, kv: Dict,
 
 def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array
                 ) -> Tuple[jax.Array, Dict]:
-    """cache: {"k": (L,B,C,Hkv,dh), "v": ..., "length": ()} ; token: (B,1).
-    With cfg.kv_quant the caches are int8 plus "k_scale"/"v_scale"."""
+    """cache: {"k": (L,B,C,Hkv,dh), "v": ..., "length": () or (B,)} ;
+    token: (B,1).  A (B,) length decodes each row at its own depth (slot
+    continuous batching).  With cfg.kv_quant the caches are int8 plus
+    "k_scale"/"v_scale"."""
     x = jnp.take(params["embed"], token, axis=0)
     length = cache["length"]
     kv_names = [n for n in ("k", "v", "k_scale", "v_scale") if n in cache]
@@ -270,7 +289,9 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> Dict:
 
 def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
             q_chunk: int = 1024, kv_chunk: int = 1024,
-            capacity: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+            capacity: Optional[int] = None,
+            last_positions: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Dict]:
     """Run the prompt, build the KV cache, return last-position logits.
 
     ``capacity`` is the cache size to allocate (>= prompt length for full
@@ -278,6 +299,11 @@ def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
     the serving engine passes prompt+max_new).  Sliding-window configs use a
     ring cache of size ``sliding_window`` with the invariant
     ``slot(position p) = p % window``.
+
+    ``last_positions`` ((B,) int32) extracts each row's logits at its own
+    final *real* token instead of the batch's last column — the slot engine
+    right-pads mixed-length prompts, which causal masking keeps inert, so a
+    row's true continuation point is ``len(prompt_i) - 1``.
     """
     x, positions = embed_inputs(params, cfg, batch)
     b, s = x.shape[:2]
@@ -321,6 +347,10 @@ def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
     x, kvs = jax.lax.scan(step, x, params["layers"],
                           unroll=runtime.scan_unroll())
     x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
-    logits = logits_of(params, cfg, x[:, -1:])
+    if last_positions is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = x[jnp.arange(b), last_positions][:, None]
+    logits = logits_of(params, cfg, x_last)
     cache = {**kvs, "length": jnp.asarray(s, jnp.int32)}
     return logits, cache

@@ -17,11 +17,15 @@ class Family(NamedTuple):
     prefill: Callable        # -> (last logits, cache)
     decode_step: Callable    # (params, cfg, cache, token) -> (logits, cache)
     has_aux: bool = False
+    slot_decode: bool = False  # per-row cache lengths + prefill last_positions
+                               # (slot-based continuous batching, DESIGN.md §6.1)
 
 
 FAMILIES: Dict[str, Family] = {
-    "dense": Family(dense.init, dense.apply, dense.prefill, dense.decode_step),
-    "vlm": Family(dense.init, dense.apply, dense.prefill, dense.decode_step),
+    "dense": Family(dense.init, dense.apply, dense.prefill, dense.decode_step,
+                    slot_decode=True),
+    "vlm": Family(dense.init, dense.apply, dense.prefill, dense.decode_step,
+                  slot_decode=True),
     "moe": Family(moe.init, moe.apply, moe.prefill, moe.decode_step,
                   has_aux=True),
     "hybrid": Family(rglru.init, rglru.apply, rglru.prefill, rglru.decode_step),

@@ -1,2 +1,3 @@
 from repro.serving.engine import Engine, EngineStats, GenRequest
+from repro.serving.executor import EngineExecutor
 from repro.serving.sampling import sample

@@ -1,11 +1,20 @@
 """A small batched serving engine — the node's Model Manager backend.
 
-Real (not simulated) JAX inference: requests queue up, the engine prefills a
-batch together (padded to a bucket), then decodes all active sequences in
-lock-step until each hits EOS or its token budget.  This is the backend used
-by the runnable examples and the end-to-end decentralized serving driver
-(``repro.launch.serve``); the large-scale scheduling benchmarks use the
-analytic service model instead (see DESIGN.md §6.1).
+Real (not simulated) JAX inference with **slot-based continuous batching**
+(DESIGN.md §6.1): the engine keeps a persistent decode cache with
+``max_batch`` row slots, each resident sequence decoding at its own depth
+(per-row cache lengths).  After every decode step finished sequences are
+evicted and queued requests are prefilled into the freed slots — a short
+request no longer holds the batch hostage for the longest request's budget.
+Prompts are right-padded, which causal attention keeps inert, so a request's
+greedy output is independent of what it happens to be batched with (wave
+batching, ``continuous=False``, produces bit-identical greedy results in
+more decode steps).
+
+This is the backend used by the runnable examples and the end-to-end
+decentralized serving driver (``repro.launch.serve``, via
+``repro.serving.executor.EngineExecutor``); the large-scale scheduling
+benchmarks use the simulated executor instead (see DESIGN.md §6.1).
 """
 
 from __future__ import annotations
@@ -30,8 +39,10 @@ class GenRequest:
     max_new: int = 32
     temperature: float = 0.0
     result: Optional[np.ndarray] = None
-    # engine metrics
+    # engine metrics (wall-clock)
     enqueued_at: float = 0.0
+    started_at: float = 0.0       # admitted into a slot (prefill)
+    first_token_at: float = 0.0   # first output token sampled
     finished_at: float = 0.0
 
 
@@ -40,36 +51,266 @@ class EngineStats:
     served: int = 0
     prefill_tokens: int = 0
     decode_tokens: int = 0
-    batches: int = 0
+    batches: int = 0              # prefill batches
+    decode_steps: int = 0         # batched decode_step invocations
+    prefill_wall_s: float = 0.0   # wall time inside prefill calls
+    decode_wall_s: float = 0.0    # wall time inside decode_step calls
+
+
+class _Slot:
+    """One resident sequence: its request, sampled tokens, cache depth."""
+
+    __slots__ = ("req", "out")
+
+    def __init__(self, req: GenRequest) -> None:
+        self.req = req
+        self.out: List[int] = []
 
 
 class Engine:
-    """Batched prefill + lock-step decode with a jitted step per bucket."""
+    """Persistent-slot continuous batching with a jitted step per bucket."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 bucket: int = 64, seed: int = 0) -> None:
+                 bucket: int = 64, seed: int = 0,
+                 capacity: Optional[int] = None,
+                 continuous: bool = True) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.bucket = bucket
+        self.continuous = continuous
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
         fam = registry.get_family(cfg)
-        self._prefill = jax.jit(
-            lambda p, b, cap: fam.prefill(p, cfg, b, q_chunk=256,
-                                          kv_chunk=256, capacity=cap),
-            static_argnums=(2,))
+        # right-padding is only inert with a full cache: a sliding-window
+        # ring keeps the last `window` positions of the PADDED sequence, so
+        # trailing pads would evict real in-window KV — window configs stay
+        # on the left-padded lock-step wave path
+        self.slot_decode = fam.slot_decode and cfg.sliding_window is None
+        if self.slot_decode:
+            self._prefill = jax.jit(
+                lambda p, b, cap, lp: fam.prefill(p, cfg, b, q_chunk=256,
+                                                  kv_chunk=256, capacity=cap,
+                                                  last_positions=lp),
+                static_argnums=(2,))
+        else:
+            # families without per-row cache depths fall back to left-padded
+            # lock-step wave batching
+            self._prefill = jax.jit(
+                lambda p, b, cap: fam.prefill(p, cfg, b, q_chunk=256,
+                                              kv_chunk=256, capacity=cap),
+                static_argnums=(2,))
         self._decode = jax.jit(lambda p, c, t: fam.decode_step(p, cfg, c, t))
         self.eos_id = 1
+
+        # persistent slot state
+        self._queue: List[GenRequest] = []
+        self._slots: List[Optional[_Slot]] = [None] * max_batch
+        self._lengths = np.zeros(max_batch, np.int64)   # per-row cache depth
+        self._cache: Optional[Dict] = None
+        self._logits: Optional[jax.Array] = None
+        self._capacity = int(capacity or 0)
 
     def _pad_bucket(self, n: int) -> int:
         b = self.bucket
         return max(b, (n + b - 1) // b * b)
 
+    def _required(self, r: GenRequest) -> int:
+        return self._pad_bucket(len(r.tokens)) + self._pad_bucket(r.max_new)
+
+    # ------------------------------------------------------------- interface
+    def submit(self, r: GenRequest) -> None:
+        r.enqueued_at = time.perf_counter()
+        self._queue.append(r)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    def active_slots(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def load_snapshot(self) -> Dict[str, int]:
+        """Occupancy counts for Executor.load() — the supported view of the
+        slot/queue bookkeeping (token counts are *remaining* work)."""
+        active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        return dict(
+            active_streams=len(active),
+            queued_streams=len(self._queue),
+            queued_prompt_tokens=sum(len(r.tokens) for r in self._queue),
+            queued_new_tokens=sum(r.max_new for r in self._queue),
+            pending_decode_tokens=sum(s.req.max_new - len(s.out)
+                                      for _, s in active),
+            kv_used=int(sum(self._lengths[i] + s.req.max_new - len(s.out)
+                            for i, s in active)),
+            kv_budget=self.max_batch * max(self._capacity, 1))
+
+    def serve(self, reqs: List[GenRequest]) -> List[GenRequest]:
+        """Submit ``reqs`` and pump steps until the engine drains."""
+        if not self.slot_decode:
+            return self._serve_wave_legacy(reqs)
+        for r in reqs:
+            self.submit(r)
+        while self.has_work():
+            self.step()
+        return reqs
+
     def generate_batch(self, reqs: List[GenRequest]) -> List[GenRequest]:
         """Serve up to max_batch requests together; returns them completed."""
         assert len(reqs) <= self.max_batch
+        return self.serve(reqs)
+
+    # ------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        if not self._queue:
+            return
+        resident = any(s is not None for s in self._slots)
+        if not self.continuous and resident:
+            return                     # wave batching: refill only when empty
+        if resident and any(self._required(r) > self._capacity
+                            for r in self._queue):
+            # a queued request needs a bigger cache, which can only be
+            # allocated while nothing is resident: stop backfilling so the
+            # batch drains and the growth branch below runs (otherwise a
+            # steady stream of small requests starves the big one forever)
+            return
+        if not resident:
+            # grow the cache while nothing is resident (allocation is static
+            # under jit, so capacity only changes between generations)
+            needed = max(self._required(r)
+                         for r in self._queue[:self.max_batch])
+            if self._cache is None or needed > self._capacity:
+                self._capacity = max(self._capacity, needed)
+                self._cache = None
+                self._logits = None
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        take: List[Tuple[int, GenRequest]] = []
+        rest: List[GenRequest] = []
+        for r in self._queue:
+            # skip requests the current cache can't hold; they are admitted
+            # at the next idle point, when capacity can grow
+            if free and self._required(r) <= self._capacity:
+                take.append((free.pop(0), r))
+            else:
+                rest.append(r)
+        self._queue = rest
+        if take:
+            self._prefill_into(take)
+
+    def _prefill_into(self, take: List[Tuple[int, GenRequest]]) -> None:
+        n = len(take)
+        plen = self._pad_bucket(max(len(r.tokens) for _, r in take))
+        toks = np.full((n, plen), self.eos_id, np.int32)
+        last = np.zeros(n, np.int32)
+        for j, (_, r) in enumerate(take):
+            toks[j, : len(r.tokens)] = r.tokens      # right-pad (inert)
+            last[j] = len(r.tokens) - 1
         t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      self._capacity, jnp.asarray(last))
+        logits.block_until_ready()
+        self.stats.prefill_wall_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += plen * n
+        self.stats.batches += 1
+        kv = {k: v for k, v in cache.items() if k != "length"}
+        rows = jnp.asarray([i for i, _ in take])
+        if self._cache is None:
+            self._cache = jax.tree_util.tree_map(
+                lambda leaf: jnp.zeros(
+                    (leaf.shape[0], self.max_batch) + leaf.shape[2:],
+                    leaf.dtype), kv)
+            self._logits = jnp.zeros((self.max_batch, 1, logits.shape[-1]),
+                                     logits.dtype)
+        self._cache = jax.tree_util.tree_map(
+            lambda p, nw: p.at[:, rows].set(nw), self._cache, kv)
+        self._logits = self._logits.at[rows].set(logits)
+        now = time.perf_counter()
+        for i, r in take:
+            r.started_at = now
+            self._slots[i] = _Slot(r)
+            self._lengths[i] = len(r.tokens)
+
+    # ------------------------------------------------------------ decode step
+    def step(self) -> List[GenRequest]:
+        """One engine iteration: sample a token for every resident sequence,
+        retire finished ones, prefill admissions into freed slots, then run
+        one batched decode step for the sequences that continue."""
+        if not self.slot_decode:
+            return self._step_wave_legacy()
+        self._admit()
+        resident = [i for i, s in enumerate(self._slots) if s is not None]
+        if not resident:
+            return []
+        # 1. sample next token for all resident rows from their current logits
+        self.key, sk = jax.random.split(self.key)
+        temps_np = np.zeros(self.max_batch, np.float32)
+        for i in resident:
+            temps_np[i] = self._slots[i].req.temperature
+        temps = 0.0 if (temps_np <= 0.0).all() else jnp.asarray(temps_np)
+        cur = sample(sk, self._logits, temperature=temps,
+                     vocab_size=self.cfg.vocab_size)
+        cur_np = np.asarray(cur[:, 0])
+        now = time.perf_counter()
+        finished: List[GenRequest] = []
+        survivors: List[int] = []
+        for i in resident:
+            slot = self._slots[i]
+            slot.out.append(int(cur_np[i]))
+            if len(slot.out) == 1:
+                slot.req.first_token_at = now
+            hit_eos = cur_np[i] == self.eos_id
+            if hit_eos or len(slot.out) >= slot.req.max_new:
+                row = slot.out[:-1] if hit_eos and len(slot.out) > 1 \
+                    else slot.out
+                slot.req.result = np.asarray(row, np.int32)
+                slot.req.finished_at = now
+                finished.append(slot.req)
+                self._slots[i] = None
+                self.stats.served += 1
+            else:
+                survivors.append(i)
+        # 2. admit queued work into freed slots between decode steps
+        if self.continuous and finished:
+            self._admit()
+        # 3. one batched decode step advances the surviving rows; rows that
+        #    were empty or just prefilled ride along (static batch shape) —
+        #    their cache write lands at their own depth and is overwritten by
+        #    their first real decode, and their logits are kept, not replaced
+        if survivors:
+            cache = {**self._cache,
+                     "length": jnp.asarray(self._lengths, jnp.int32)}
+            t0 = time.perf_counter()
+            logits, cache = self._decode(self.params, cache, cur)
+            logits.block_until_ready()
+            self.stats.decode_wall_s += time.perf_counter() - t0
+            self._cache = {k: v for k, v in cache.items() if k != "length"}
+            keep = jnp.asarray(survivors)
+            self._logits = self._logits.at[keep].set(logits[keep])
+            self._lengths[survivors] += 1
+            self.stats.decode_tokens += len(survivors)
+            self.stats.decode_steps += 1
+        return finished
+
+    # ----------------------------------------------- legacy wave (non-dense)
+    def _step_wave_legacy(self) -> List[GenRequest]:
+        if not self._queue:
+            return []
+        wave, self._queue = (self._queue[: self.max_batch],
+                             self._queue[self.max_batch:])
+        return self._generate_wave(wave)
+
+    def _serve_wave_legacy(self, reqs: List[GenRequest]) -> List[GenRequest]:
+        out: List[GenRequest] = []
+        for i in range(0, len(reqs), self.max_batch):
+            out.extend(self._generate_wave(reqs[i: i + self.max_batch]))
+        return out
+
+    def _generate_wave(self, reqs: List[GenRequest]) -> List[GenRequest]:
+        """Left-padded lock-step decode for families without per-row cache
+        depths (shared scalar cache length)."""
+        assert len(reqs) <= self.max_batch
         max_prompt = max(len(r.tokens) for r in reqs)
         plen = self._pad_bucket(max_prompt)
         max_new = max(r.max_new for r in reqs)
@@ -78,8 +319,14 @@ class Engine:
             toks[i, plen - len(r.tokens):] = r.tokens     # left-pad
         batch = {"tokens": jnp.asarray(toks)}
         cap = plen + self._pad_bucket(max_new)
+        t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch, cap)
+        logits.block_until_ready()
+        self.stats.prefill_wall_s += time.perf_counter() - t0
         self.stats.prefill_tokens += plen * len(reqs)
+        self.stats.batches += 1
+        for r in reqs:
+            r.started_at = time.perf_counter()
 
         out = np.zeros((len(reqs), max_new), np.int32)
         done = np.zeros(len(reqs), bool)
@@ -88,18 +335,25 @@ class Engine:
         # sample(), skipping the per-step Gumbel draw over the vocab
         temps = 0.0 if (temps_np <= 0.0).all() else jnp.asarray(temps_np)
         budgets = np.array([r.max_new for r in reqs])
-        cur = None
         for step in range(max_new):
             self.key, sk = jax.random.split(self.key)
             cur = sample(sk, logits, temperature=temps,
                          vocab_size=self.cfg.vocab_size)
             out[:, step] = np.asarray(cur[:, 0])
+            if step == 0:
+                now = time.perf_counter()
+                for r in reqs:
+                    r.first_token_at = now
             done |= out[:, step] == self.eos_id
             done |= step + 1 >= budgets
             if done.all():
                 break
+            t0 = time.perf_counter()
             logits, cache = self._decode(self.params, cache, cur)
+            logits.block_until_ready()
+            self.stats.decode_wall_s += time.perf_counter() - t0
             self.stats.decode_tokens += int((~done).sum())
+            self.stats.decode_steps += 1
         for i, r in enumerate(reqs):
             row = out[i, : r.max_new]
             end = np.argmax(row == self.eos_id) if (row ==
@@ -108,15 +362,7 @@ class Engine:
             r.result = row[: max(int(end), 1)]
             r.finished_at = time.perf_counter()
         self.stats.served += len(reqs)
-        self.stats.batches += 1
         return reqs
-
-    def serve(self, reqs: List[GenRequest]) -> List[GenRequest]:
-        """FIFO continuous batching: group the queue into max_batch waves."""
-        out: List[GenRequest] = []
-        for i in range(0, len(reqs), self.max_batch):
-            out.extend(self.generate_batch(reqs[i: i + self.max_batch]))
-        return out
 
     def logprob_of(self, tokens: np.ndarray) -> float:
         """Sequence log-likelihood under this engine's model — used by the

@@ -1,0 +1,84 @@
+"""EngineExecutor: the real-engine backend behind the Executor contract.
+
+Wraps the slot-based continuous-batching ``Engine`` (DESIGN.md §6.1) so the
+end-to-end driver in ``repro.launch.serve`` can treat real JAX inference
+and the simulated ``TokenBucketExecutor`` uniformly: KV-budget-aware
+``admit``, step-driven progress, a ``load()`` snapshot (active slots /
+queued tokens / KV headroom), and a completion callback carrying
+wall-clock start and first-token times.
+
+Unlike the simulated backend there is no ambient event loop: the engine
+runs in wall-clock time, so callers pump ``step()`` (one engine iteration:
+sample, retire, admit, decode) or ``drain()`` themselves.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.serving.engine import Engine, GenRequest
+from repro.sim.executor import Executor, ExecutorLoad
+
+
+class EngineExecutor(Executor):
+    def __init__(self, engine: Engine,
+                 max_pending_tokens: Optional[int] = None) -> None:
+        self.engine = engine
+        # admission bound: queued-but-unstarted work the executor will hold
+        # before pushing back on the caller (None = unbounded)
+        self.max_pending_tokens = max_pending_tokens
+        self._loop = None
+        self._on_complete = None
+
+    # ------------------------------------------------------------- interface
+    @property
+    def n_active(self) -> int:
+        return self.engine.active_slots()
+
+    def admit(self, item: GenRequest) -> bool:
+        if self.max_pending_tokens is not None:
+            snap = self.engine.load_snapshot()
+            pending = snap["queued_prompt_tokens"] + snap["queued_new_tokens"]
+            if (snap["queued_streams"] > 0
+                    and pending + len(item.tokens) + item.max_new
+                    > self.max_pending_tokens):
+                return False
+        self.engine.submit(item)
+        return True
+
+    def load(self) -> ExecutorLoad:
+        snap = self.engine.load_snapshot()
+        return ExecutorLoad(
+            active_streams=snap["active_streams"],
+            queued_streams=snap["queued_streams"],
+            pending_prefill_tokens=snap["queued_prompt_tokens"],
+            pending_decode_tokens=(snap["pending_decode_tokens"]
+                                   + snap["queued_new_tokens"]),
+            kv_used=snap["kv_used"],
+            kv_budget=snap["kv_budget"])
+
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        """Expected service seconds from the engine's measured prefill and
+        decode throughput (wall time spent inside the respective jit calls,
+        so admission/sampling overhead does not skew the rates)."""
+        st = self.engine.stats
+        if st.decode_tokens == 0 or st.decode_wall_s <= 0:
+            return float("inf")      # no calibration data yet: probe-unknown
+        t = output_tokens / (st.decode_tokens / st.decode_wall_s)
+        if st.prefill_tokens > 0 and st.prefill_wall_s > 0:
+            t += prompt_tokens / (st.prefill_tokens / st.prefill_wall_s)
+        return t
+
+    # ---------------------------------------------------------------- driving
+    def step(self) -> List[GenRequest]:
+        finished = self.engine.step()
+        for r in finished:
+            if self._on_complete is not None:
+                self._on_complete(r, r.started_at, r.first_token_at)
+        return finished
+
+    def drain(self) -> List[GenRequest]:
+        done: List[GenRequest] = []
+        while self.engine.has_work():
+            done.extend(self.step())
+        return done

@@ -1,11 +1,13 @@
 from repro.sim.events import EventLoop
+from repro.sim.executor import Executor, ExecutorLoad, TokenBucketExecutor
 from repro.sim.metrics import CompletedRequest, MetricsCollector
 from repro.sim.servicemodel import BackendProfile, make_profile
 from repro.sim.workload import (ArrivalPhase, Request, WorkloadSpec,
                                 make_requests, two_phase, uniform_phases)
 
 __all__ = [
-    "EventLoop", "CompletedRequest", "MetricsCollector", "BackendProfile",
+    "EventLoop", "Executor", "ExecutorLoad", "TokenBucketExecutor",
+    "CompletedRequest", "MetricsCollector", "BackendProfile",
     "make_profile", "ArrivalPhase", "Request", "WorkloadSpec",
     "make_requests", "two_phase", "uniform_phases",
 ]

@@ -1,0 +1,228 @@
+"""Pluggable request-execution backends (the node's Model Manager core).
+
+The paper's nodes run vLLM/SGLang-style continuous-batching engines, so the
+latency a request sees depends on the *time-varying* batch it shares the
+accelerator with — not on a share frozen at admission.  This module defines
+the Executor contract both backends implement (DESIGN.md §6.1):
+
+* ``Executor``            — ``admit(item) -> bool`` (KV-budget gated),
+                            progress driven by events or steps, a ``load()``
+                            snapshot, and a completion callback that carries
+                            start/first-token times (TTFT, queue wait).
+* ``TokenBucketExecutor`` — the simulated backend: token-level prefill then
+                            decode progress integrated piecewise-linearly by
+                            the ``EventLoop``, with the decode share
+                            recomputed on every membership change and
+                            admission gated by a KV *token* budget rather
+                            than a stream count.  At steady state (constant
+                            occupancy) it reproduces the analytic
+                            ``BackendProfile.service_time`` exactly; under
+                            bursts and churn, in-flight requests slow down
+                            and speed up as the batch shifts.
+
+The real-engine counterpart (``EngineExecutor``, slot-based continuous
+batching over the JAX ``Engine``) lives in ``repro.serving.executor``.
+
+This module (plus ``servicemodel``) is the only sanctioned caller of
+``BackendProfile.service_time`` — a grep-guard in ``tests/test_compat.py``
+keeps frozen-share scheduling from creeping back in.
+"""
+
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+from repro.sim.events import EventLoop
+from repro.sim.servicemodel import KV_TOKENS_PER_STREAM, BackendProfile
+
+# completion callback: (item, started_at, first_token_at) in sim/wall time
+CompletionFn = Callable[[Any, float, float], None]
+
+# token-progress slack absorbing float error in rate*dt integration: 1e-6
+# tokens is ~1e-8 s of decode — far below any latency we report
+_EPS = 1e-6
+
+
+@dataclass(frozen=True)
+class ExecutorLoad:
+    """Point-in-time snapshot of an executor's occupancy.
+
+    ``active_streams`` are requests holding compute now; ``queued_streams``
+    are admitted but waiting for a slot (real engine only).  Token counts
+    are *remaining* work; ``kv_used``/``kv_budget`` express KV-memory
+    pressure in tokens.
+    """
+
+    active_streams: int
+    queued_streams: int
+    pending_prefill_tokens: int
+    pending_decode_tokens: int
+    kv_used: int
+    kv_budget: int
+
+    @property
+    def kv_headroom(self) -> float:
+        """Free fraction of the KV budget, in [0, 1]."""
+        if self.kv_budget <= 0:
+            return 1.0
+        return max(0.0, 1.0 - self.kv_used / self.kv_budget)
+
+
+class Executor(ABC):
+    """Backend-agnostic execution contract held by a Node's Model Manager."""
+
+    def bind(self, loop: Optional[EventLoop], on_complete: CompletionFn) -> None:
+        """Attach the driving clock and the completion callback."""
+        self._loop = loop
+        self._on_complete = on_complete
+
+    @property
+    @abstractmethod
+    def n_active(self) -> int:
+        """Number of streams currently holding compute."""
+
+    @abstractmethod
+    def admit(self, item: Any) -> bool:
+        """Start executing ``item`` if KV headroom allows; False = try later."""
+
+    @abstractmethod
+    def load(self) -> ExecutorLoad:
+        """Snapshot of current occupancy (routing / probing / rebalance)."""
+
+    @abstractmethod
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        """Expected service seconds for a hypothetical request admitted now."""
+
+
+class _Stream:
+    """One in-flight request inside the TokenBucketExecutor."""
+
+    __slots__ = ("item", "prompt_left", "output_left", "kv_tokens",
+                 "decoding", "started_at", "first_token_at")
+
+    def __init__(self, item: Any, prompt: int, output: int, now: float) -> None:
+        self.item = item
+        self.prompt_left = float(max(1, prompt))
+        self.output_left = float(max(1, output))
+        self.kv_tokens = max(1, prompt) + max(1, output)
+        self.decoding = False
+        self.started_at = now
+        self.first_token_at: Optional[float] = None
+
+
+class TokenBucketExecutor(Executor):
+    """Simulated continuous batching: exact event-driven token integration.
+
+    Between membership changes every stream progresses linearly (prefill at
+    ``prefill_tps`` unshared, decode at ``decode_tps / share`` with
+    ``share = max(1, n_active / saturation)``), so it suffices to advance
+    all streams to ``now`` and re-derive the next phase boundary whenever
+    the batch changes — no fixed tick quantum, no drift.
+    """
+
+    def __init__(self, profile: BackendProfile) -> None:
+        self.profile = profile
+        self.kv_budget = int(getattr(profile, "kv_token_budget", 0)
+                             or profile.max_concurrency * KV_TOKENS_PER_STREAM)
+        self._streams: List[_Stream] = []
+        self._last_t = 0.0
+        self._pending_ev = None
+        self._loop: Optional[EventLoop] = None
+        self._on_complete: Optional[CompletionFn] = None
+
+    # ------------------------------------------------------------- interface
+    @property
+    def n_active(self) -> int:
+        return len(self._streams)
+
+    def admit(self, item: Any) -> bool:
+        qr = item
+        kv = max(1, qr.req.prompt_tokens) + max(1, qr.req.output_tokens)
+        used = sum(s.kv_tokens for s in self._streams)
+        # token-budget admission; an empty backend always takes one request
+        # so oversized prompts cannot deadlock the queue
+        if self._streams and used + kv > self.kv_budget:
+            return False
+        self._advance()
+        self._streams.append(_Stream(qr, qr.req.prompt_tokens,
+                                     qr.req.output_tokens, self._loop.now))
+        self._reschedule()
+        return True
+
+    def load(self) -> ExecutorLoad:
+        self._advance()
+        return ExecutorLoad(
+            active_streams=len(self._streams),
+            queued_streams=0,
+            pending_prefill_tokens=int(sum(s.prompt_left
+                                           for s in self._streams
+                                           if not s.decoding)),
+            pending_decode_tokens=int(sum(s.output_left
+                                          for s in self._streams)),
+            kv_used=sum(s.kv_tokens for s in self._streams),
+            kv_budget=self.kv_budget)
+
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        return self.profile.service_time(prompt_tokens, output_tokens,
+                                         len(self._streams) + 1)
+
+    # -------------------------------------------------------------- dynamics
+    def _decode_rate(self) -> float:
+        share = max(1.0, len(self._streams) / self.profile.saturation)
+        return self.profile.decode_tps / share
+
+    def _rate(self, s: _Stream, decode_rate: float) -> float:
+        return decode_rate if s.decoding else self.profile.prefill_tps
+
+    def _advance(self) -> None:
+        """Integrate token progress from the last update to ``now``."""
+        now = self._loop.now
+        dt = now - self._last_t
+        self._last_t = now
+        if dt <= 0.0 or not self._streams:
+            return
+        dec = self._decode_rate()
+        for s in self._streams:
+            if s.decoding:
+                s.output_left -= dec * dt
+            else:
+                s.prompt_left -= self.profile.prefill_tps * dt
+
+    def _reschedule(self) -> None:
+        """Re-derive the earliest phase boundary and point one event at it.
+
+        Called after every membership change; also flips streams whose
+        boundary is (numerically) now, firing completions.
+        """
+        done: List[_Stream] = []
+        for s in self._streams:
+            if not s.decoding and s.prompt_left <= _EPS:
+                s.decoding = True
+                s.prompt_left = 0.0
+                s.first_token_at = self._loop.now
+            if s.decoding and s.output_left <= _EPS:
+                done.append(s)
+        if done:
+            for s in done:
+                self._streams.remove(s)
+        if self._pending_ev is not None:
+            self._loop.cancel(self._pending_ev)
+            self._pending_ev = None
+        if self._streams:
+            dec = self._decode_rate()
+            dt = min((s.output_left if s.decoding else s.prompt_left)
+                     / self._rate(s, dec) for s in self._streams)
+            self._pending_ev = self._loop.schedule(max(0.0, dt),
+                                                   self._on_boundary)
+        # completions fire after the reschedule: the callback may re-enter
+        # admit() (node pulls the next queued request) and reschedule again
+        for s in done:
+            self._on_complete(s.item, s.started_at,
+                              s.first_token_at or self._loop.now)
+
+    def _on_boundary(self) -> None:
+        self._pending_ev = None
+        self._advance()
+        self._reschedule()

@@ -18,6 +18,8 @@ class CompletedRequest:
     slo_s: float
     delegated: bool
     is_duel_extra: bool = False
+    ttft: float = float("nan")        # arrival -> first output token
+    queue_wait: float = float("nan")  # enqueue at executor -> admission
 
     @property
     def latency(self) -> float:
@@ -73,6 +75,18 @@ class MetricsCollector:
             if w:
                 out.append((t0 + window / 2, float(np.mean(w))))
         return out
+
+    def avg_ttft(self) -> float:
+        vals = [c.ttft for c in self._user() if np.isfinite(c.ttft)]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    def ttft_percentile(self, p: float) -> float:
+        vals = [c.ttft for c in self._user() if np.isfinite(c.ttft)]
+        return float(np.percentile(vals, p)) if vals else float("nan")
+
+    def avg_queue_wait(self) -> float:
+        vals = [c.queue_wait for c in self._user() if np.isfinite(c.queue_wait)]
+        return float(np.mean(vals)) if vals else float("nan")
 
     def delegation_rate(self) -> float:
         user = self._user()

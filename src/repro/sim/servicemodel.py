@@ -40,16 +40,28 @@ REF_PREFILL_TPS = 8000.0   # prompt tokens/s
 REF_DECODE_TPS = 95.0      # per-stream decode tokens/s at low batch
 REF_SATURATION = 24        # streams before decode throughput is shared
 
+# KV-memory admission is a TOKEN budget (prompt + output reserved per stream),
+# not a stream count; this converts the legacy max_concurrency stream limit
+# into tokens at the paper workload's mean footprint (~512 prompt + ~5k output)
+KV_TOKENS_PER_STREAM = 6144
+
 
 @dataclass(frozen=True)
 class BackendProfile:
-    """Resolved capability of one node's serving backend."""
+    """Resolved capability of one node's serving backend.
+
+    Execution itself lives in ``repro.sim.executor`` (TokenBucketExecutor);
+    ``service_time`` is the analytic steady-state formula the executor must
+    reduce to at constant occupancy, and may only be called from the
+    executor module (grep-guarded in ``tests/test_compat.py``).
+    """
 
     prefill_tps: float
     decode_tps: float          # per-stream, unsaturated
     saturation: int            # concurrent streams at the knee
-    max_concurrency: int       # admission limit (KV memory)
+    max_concurrency: int       # legacy stream-count admission limit
     quality: float             # latent response quality q_i in [0, 1]
+    kv_token_budget: int = 0   # KV admission budget in tokens (0 = derive)
 
     def service_time(self, prompt: int, output: int, n_active: int) -> float:
         """Expected generation wall time with ``n_active`` concurrent streams."""
@@ -69,7 +81,8 @@ def make_profile(model: str = "qwen3-8b", gpu: str = "A100", backend: str = "sgl
     sat = max(2, int(REF_SATURATION * g * size_scale))
     return BackendProfile(
         prefill_tps=prefill, decode_tps=decode, saturation=sat,
-        max_concurrency=4 * sat, quality=quality)
+        max_concurrency=4 * sat, quality=quality,
+        kv_token_budget=4 * sat * KV_TOKENS_PER_STREAM)
 
 
 # latent quality per model size / quantization, set to reproduce the paper's

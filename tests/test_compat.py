@@ -56,6 +56,30 @@ class TestVersionGateHygiene:
             + "\n  ".join(offenders))
 
 
+class TestExecutorLayerHygiene:
+    """Frozen-share scheduling must not creep back: only the executor layer
+    may call the analytic ``BackendProfile.service_time`` directly.  Nodes
+    route execution through ``Executor.admit``/``load``/``estimate``
+    (DESIGN.md §6.1)."""
+
+    SCAN_DIRS = ("src", "benchmarks", "examples", "experiments")
+    ALLOWED = ("src/repro/sim/executor.py", "src/repro/sim/servicemodel.py")
+
+    def test_service_time_only_called_from_executor_layer(self):
+        offenders = []
+        for d in self.SCAN_DIRS:
+            for path in sorted((REPO / d).rglob("*.py")):
+                rel = path.relative_to(REPO).as_posix()
+                if rel in self.ALLOWED:
+                    continue
+                if ".service_time(" in path.read_text():
+                    offenders.append(rel)
+        assert not offenders, (
+            "direct service_time calls outside the executor layer "
+            "(route through Executor.admit/load/estimate instead):\n  "
+            + "\n  ".join(offenders))
+
+
 # ---------------------------------------------------------------------------
 # 2. meshenv — legacy (0.4.x) path
 # ---------------------------------------------------------------------------
