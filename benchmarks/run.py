@@ -13,10 +13,14 @@ caught before a full pytest run::
 
 ``--bench`` emits a machine-readable ``BENCH_scheduling.json`` (SLO
 attainment per mode, avg/p95 latency, simulated requests/s, real-engine
-decode tokens/s for slot vs wave batching) so the performance trajectory is
-tracked PR over PR::
+decode tokens/s and admitted concurrency for paged vs slot vs wave
+batching) so the performance trajectory is tracked PR over PR::
 
     PYTHONPATH=src python benchmarks/run.py --bench
+
+The payload shape is pinned by ``check_bench_schema`` (validated here at
+write time and against the checked-in file by ``tests/test_compat.py``, so
+schema drift is caught in tier-1).
 """
 
 from __future__ import annotations
@@ -30,6 +34,37 @@ from typing import List
 # allow `python benchmarks/run.py` without the repo root on PYTHONPATH
 # (the sibling benchmark modules import as the ``benchmarks`` package)
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+BENCH_SCHEMA_VERSION = 2
+
+# required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
+SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
+                 "delegation_rate", "n")
+ENGINE_MODE_KEYS = ("decode_tokens", "decode_steps", "decode_tokens_per_s",
+                    "wall_s", "admitted_concurrency", "max_batch",
+                    "kv_budget_tokens")
+ENGINE_MODES = ("slot", "wave", "paged")
+
+
+def check_bench_schema(payload: dict) -> None:
+    """Raise AssertionError when ``payload`` drifts from the pinned shape."""
+    assert payload.get("schema") == BENCH_SCHEMA_VERSION, (
+        f"schema {payload.get('schema')} != {BENCH_SCHEMA_VERSION}")
+    assert payload.get("bench") == "scheduling"
+    sim = payload["sim"]
+    for k in ("setting", "wall_s", "requests_per_s", "modes"):
+        assert k in sim, f"sim.{k} missing"
+    for mode in ("single", "centralized", "decentralized"):
+        for k in SIM_MODE_KEYS:
+            assert k in sim["modes"][mode], f"sim.modes.{mode}.{k} missing"
+    eng = payload["engine"]
+    assert "model" in eng, "engine.model missing"
+    for mode in ENGINE_MODES:
+        assert mode in eng, f"engine.{mode} missing"
+        for k in ENGINE_MODE_KEYS:
+            assert k in eng[mode], f"engine.{mode}.{k} missing"
+    for k in ("page_size", "num_pages", "preempted"):
+        assert k in eng["paged"], f"engine.paged.{k} missing"
 
 
 def _smoke() -> int:
@@ -84,6 +119,28 @@ def _smoke() -> int:
                                      temperature=1.0)])
         assert len(done[0].result) <= 4 and len(done[1].result) <= 2
 
+    def paged_engine_matches_slot():
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serving import Engine, GenRequest
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+
+        def mk():
+            prompts = [np.random.default_rng(i).integers(2, 400, size=8 + 4 * i)
+                       .astype(np.int32) for i in range(3)]
+            return [GenRequest(rid=f"r{i}", tokens=prompts[i],
+                               max_new=[4, 10, 4][i]) for i in range(3)]
+
+        slot = Engine(cfg, params, max_batch=2, bucket=16)
+        paged = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                       page_size=16, num_pages=5)   # tight: preempts
+        rs, rp = slot.serve(mk()), paged.serve(mk())
+        for a, b in zip(rs, rp):
+            np.testing.assert_array_equal(a.result, b.result)
+        snap = paged.load_snapshot()
+        assert snap["pages_used"] == 0 and snap["free_pages"] == 5
+
     def pallas_kernel_matches_oracle():
         from repro.kernels.flash_attention import flash_attention_tpu
         from repro.kernels.ref import reference_attention
@@ -129,6 +186,7 @@ def _smoke() -> int:
     print("smoke: end-to-end sanity pass", flush=True)
     check("model forward + prefill/decode consistency", model_roundtrip)
     check("serving engine generation", engine_generates)
+    check("paged engine greedy-matches slot engine", paged_engine_matches_slot)
     check("pallas flash kernel vs oracle (interpret)",
           pallas_kernel_matches_oracle)
     check("mesh context + sharding constraint", mesh_context_sharding)
@@ -149,7 +207,7 @@ def _bench(out_path: str) -> int:
     import jax
     import numpy as np
 
-    payload = {"schema": 1, "bench": "scheduling"}
+    payload = {"schema": BENCH_SCHEMA_VERSION, "bench": "scheduling"}
 
     # --- simulated scheduling (paper Fig 4 / Table 2, setting1) -------------
     from benchmarks.scheduling import run_setting
@@ -186,17 +244,29 @@ def _bench(out_path: str) -> int:
         return [GenRequest(rid=f"r{i}", tokens=prompts[i], max_new=budgets[i])
                 for i in range(len(prompts))]
 
+    # slot/wave reserve pad(prompt)+pad(max_new) tokens per slot; the paged
+    # engine gets the slot engine's MEASURED kv budget as pages but admits
+    # on prompt pages only, so more requests are resident concurrently
+    # (admitted_concurrency) on the same memory
+    page_size = 16
+    engine_kw = {
+        "slot": dict(max_batch=2, continuous=True),
+        "wave": dict(max_batch=2, continuous=False),
+        "paged": dict(max_batch=4, paged=True, page_size=page_size),
+    }
     engine_out = {}
-    for label, continuous in (("slot", True), ("wave", False)):
+    for label in ("slot", "wave", "paged"):
         from repro.serving.engine import EngineStats
-        eng = Engine(cfg, params, max_batch=2, bucket=16,
-                     continuous=continuous)
+        eng = Engine(cfg, params, bucket=16, **engine_kw[label])
         eng.serve(mk())          # warm the per-instance jit caches
         eng.stats = EngineStats()
         t0 = time.perf_counter()
         eng.serve(mk())          # timed run reuses the compiled steps
         wall = time.perf_counter() - t0
+        snap = eng.load_snapshot()
         engine_out[label] = {
+            "max_batch": engine_kw[label]["max_batch"],
+            "kv_budget_tokens": snap["kv_budget"],
             "decode_tokens": eng.stats.decode_tokens,
             "decode_steps": eng.stats.decode_steps,
             # decode throughput over wall time spent inside decode_step, so
@@ -205,9 +275,18 @@ def _bench(out_path: str) -> int:
                 eng.stats.decode_tokens / max(eng.stats.decode_wall_s, 1e-9),
                 1),
             "wall_s": round(wall, 3),
+            "admitted_concurrency": eng.stats.peak_resident,
         }
-    payload["engine"] = {"model": cfg.name, "max_batch": 2, **engine_out}
+        if label == "slot":
+            # hand the paged engine exactly the slot engine's KV budget
+            engine_kw["paged"]["num_pages"] = snap["kv_budget"] // page_size
+        elif label == "paged":
+            engine_out[label].update(page_size=page_size,
+                                     num_pages=engine_kw[label]["num_pages"],
+                                     preempted=eng.stats.preempted)
+    payload["engine"] = {"model": cfg.name, **engine_out}
 
+    check_bench_schema(payload)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

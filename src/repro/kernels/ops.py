@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.flash_decode import flash_decode_tpu
-from repro.kernels.ref import decode_ref, flash_ref
+from repro.kernels.paged_decode import flash_paged_decode_tpu
+from repro.kernels.ref import decode_ref, flash_ref, paged_decode_ref
 
 
 def _on_tpu() -> bool:
@@ -44,3 +45,16 @@ def decode(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None,
         return flash_decode_tpu(q, k_cache, v_cache, cache_len, window=window,
                                 interpret=interpret and not _on_tpu())
     return decode_ref(q, k_cache, v_cache, cache_len, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
+                 backend: str = "auto", interpret: bool = True) -> jax.Array:
+    """Block-table paged decode. q: (B,1,H,D); pools: (P,page,Hkv,D);
+    block_tables: (B,maxp) int32; lengths: (B,) int32."""
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if use_pallas:
+        return flash_paged_decode_tpu(q, k_pool, v_pool, block_tables,
+                                      lengths,
+                                      interpret=interpret and not _on_tpu())
+    return paged_decode_ref(q, k_pool, v_pool, block_tables, lengths)

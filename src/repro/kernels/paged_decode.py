@@ -1,0 +1,126 @@
+"""Pallas TPU paged flash-decode: block-table attention over a KV page pool.
+
+The paged serving engine (DESIGN.md §6.1, paged backend) stores KV in a
+shared pool of fixed-size pages; each sequence owns a per-row *block table*
+mapping logical page index -> physical page.  Decode attention then has no
+contiguous cache to stream — the kernel walks a sequence's pages in logical
+order and resolves each one through the block table.
+
+The resolution happens in the BlockSpec ``index_map`` via scalar prefetch:
+the block table and per-row lengths are prefetched to SMEM before the body
+runs, so the pager can issue the HBM->VMEM DMA for physical page
+``bt[b, ip]`` while the previous page is still being processed — the same
+streaming shape as the contiguous kernel in ``flash_decode.py``, just with
+one indirection on the page address.  One grid step covers one page per
+(batch row × kv head); the online-softmax carry lives in VMEM scratch.
+
+Entries of the block table past a row's allocated pages may point anywhere
+(the engine points them at the scratch page 0); they are DMA'd but fully
+masked by ``lengths``.  The jnp oracle is ``ref.paged_decode_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.pallascompat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page: int, hkv: int,
+                  scale: float):
+    ip = pl.program_id(1)
+    np_ = pl.num_programs(1)
+    cache_len = len_ref[pl.program_id(0) // hkv]
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (rep, d)
+    k = k_ref[0].astype(jnp.float32)                   # (page, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    # logical token positions of this page; garbage pages (block-table
+    # entries past the row's allocation) mask out entirely here
+    k_pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(k_pos < cache_len, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_ref[...] = m_new
+
+    @pl.when(ip == np_ - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_paged_decode_tpu(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, 1, H, D); pools: (P, page, Hkv, D); block_tables: (B, maxp)
+    int32; lengths: (B,) int32 valid tokens per row.
+
+    Returns (B, 1, H, D).
+    """
+    b, _, h, d = q.shape
+    page, hkv = k_pool.shape[1], k_pool.shape[2]
+    maxp = block_tables.shape[1]
+    assert h % hkv == 0
+    rep = h // hkv
+
+    qr = q.reshape(b, hkv, rep, d).reshape(b * hkv, rep, d)
+    # (P, page, Hkv, D) -> (P*Hkv, page, D) so one block is one page of one
+    # kv head, addressable by a single leading block index
+    kr = k_pool.transpose(0, 2, 1, 3).reshape(-1, page, d)
+    vr = v_pool.transpose(0, 2, 1, 3).reshape(-1, page, d)
+    bt = block_tables.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    def kv_index(bh, ip, bt_ref, len_ref):
+        # physical page for (row bh//hkv, logical page ip), head bh%hkv
+        return (bt_ref[bh // hkv, ip] * hkv + bh % hkv, 0, 0)
+
+    grid = (b * hkv, maxp)
+    kernel = functools.partial(_paged_kernel, page=page, hkv=hkv,
+                               scale=d ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, rep, d), lambda bh, ip, bt, ln: (bh, 0, 0)),
+                pl.BlockSpec((1, page, d), kv_index),
+                pl.BlockSpec((1, page, d), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, rep, d),
+                                   lambda bh, ip, bt, ln: (bh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, d), jnp.float32),
+                pltpu.VMEM((rep,), jnp.float32),
+                pltpu.VMEM((rep,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, rep, d), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, lens, qr, kr, vr)
+    return out.reshape(b, hkv, rep, d).reshape(b, 1, h, d)

@@ -1,7 +1,35 @@
 """Pure-jnp oracles for the Pallas kernels (also the CPU/dry-run path)."""
 
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
 from repro.models.attention import (decode_attention as decode_ref,
                                     flash_attention as flash_ref,
                                     reference_attention)
 
-__all__ = ["decode_ref", "flash_ref", "reference_attention"]
+
+def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Oracle for block-table paged decode attention.
+
+    q: (B, 1, H, D); k_pool/v_pool: (P, page, Hkv, D) — a shared pool of
+    fixed-size KV pages; block_tables: (B, maxp) int32 mapping each row's
+    logical page index to a physical page (entries past a row's allocation
+    may point anywhere — typically the scratch page 0 — and are masked out
+    by ``lengths``); lengths: (B,) int32 valid-token counts per row.
+
+    Gathers each row's pages into a contiguous (B, maxp*page, Hkv, D) view
+    and defers to the dense per-row-length decode oracle.  Returns
+    (B, 1, H, D).
+    """
+    b, maxp = block_tables.shape
+    page, hkv, d = k_pool.shape[1:]
+    k = k_pool[block_tables].reshape(b, maxp * page, hkv, d)
+    v = v_pool[block_tables].reshape(b, maxp * page, hkv, d)
+    return decode_ref(q, k, v, lengths)
+
+
+__all__ = ["decode_ref", "flash_ref", "reference_attention",
+           "paged_decode_ref"]

@@ -38,6 +38,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--duel-rate", type=float, default=0.2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="back nodes with paged-KV engines "
+                         "(DESIGN.md §6.1, paged backend)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke().replace(dtype="float32")
@@ -54,7 +57,8 @@ def main(argv=None) -> int:
         # params (stand-in for better models)
         params = registry.init(jax.random.PRNGKey(i), cfg)
         executors[nid] = EngineExecutor(
-            Engine(cfg, params, max_batch=4, bucket=32, seed=i))
+            Engine(cfg, params, max_batch=4, bucket=32, seed=i,
+                   paged=args.paged))
         prof = make_profile("qwen3-8b", "RTX3090", "sglang",
                             quality=0.4 + 0.15 * i)
         pol = NodePolicy(offload_util_threshold=0.15,

@@ -60,6 +60,10 @@ class ModelConfig:
     # modality frontend stub (vlm / audio): inputs are embeddings, not tokens
     embeds_input: bool = False
 
+    # end-of-sequence token id: terminates decode in the serving engine and
+    # pads prompt batches (the pads are causally/length-masked inert)
+    eos_id: int = 1
+
     dtype: str = "bfloat16"
 
     # -- derived -------------------------------------------------------------

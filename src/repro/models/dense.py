@@ -278,6 +278,110 @@ def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array
     return logits, {**kv_new, "length": length + 1}
 
 
+# ---------------------------------------------------------------- paged decode
+def init_paged_pools(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None) -> Dict:
+    """Allocate the shared KV page pools: {"k_pool","v_pool"} each
+    (L, P, page, Hkv, dh).  Page 0 is conventionally the engine's scratch
+    page (writes for unallocated rows land there and are never attended)."""
+    dt = dtype or _dt(cfg)
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k_pool": jnp.zeros(shape, dt), "v_pool": jnp.zeros(shape, dt)}
+
+
+def prefill_to_pages(pools: Dict, kv: Dict, phys_pages: jax.Array) -> Dict:
+    """Scatter a contiguous prefill cache into pool pages.
+
+    pools: {"k_pool","v_pool"} (L, P, page, Hkv, dh); kv: {"k","v"}
+    (L, n, plen, Hkv, dh) with plen a multiple of the page size;
+    phys_pages: (n, plen//page) int32 physical page per (row, logical page).
+    Entries for pages past a row's real prompt point at the scratch page 0
+    (several rows may alias it; the garbage is masked by per-row lengths).
+    """
+    page = pools["k_pool"].shape[2]
+    out = {}
+    for name in ("k", "v"):
+        L, n, plen = kv[name].shape[:3]
+        src = kv[name].reshape((L, n, plen // page, page) + kv[name].shape[3:])
+        out[name + "_pool"] = pools[name + "_pool"].at[:, phys_pages].set(src)
+    return out
+
+
+def _block_decode_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
+                        block_tables: jax.Array, lengths: jax.Array,
+                        phys_page: jax.Array, page_slot: jax.Array
+                        ) -> Tuple[jax.Array, Dict]:
+    """One layer, one token, against this layer's KV page pool.
+
+    x: (B,1,d); pools: {"k","v"} (P, page, Hkv, dh); block_tables: (B, maxp);
+    lengths: (B,) valid tokens per row; phys_page/page_slot: (B,) physical
+    page and in-page slot where this token's KV is written (rows without an
+    allocated page are pointed at the scratch page 0 by the engine — their
+    write is garbage that a later real write or mask supersedes).
+    """
+    b = x.shape[0]
+    maxp = block_tables.shape[1]
+    page = pools["k"].shape[1]
+    h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+    pos = jnp.broadcast_to(jnp.reshape(lengths, (-1, 1)), (b, 1))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(jnp.reshape(lengths, (-1, 1, 1)), (b, 1, 3))
+    q, k, v = _project_qkv(lp, cfg, h, pos)
+    pools = {"k": pools["k"].at[phys_page, page_slot].set(k[:, 0]),
+             "v": pools["v"].at[phys_page, page_slot].set(v[:, 0])}
+    kg = pools["k"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
+                                          cfg.head_dim)
+    vg = pools["v"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
+                                          cfg.head_dim)
+    attn = decode_attention(q, kg, vg, lengths + 1)
+    attn = attn.reshape(b, 1, cfg.q_dim) @ lp["wo"]
+    if cfg.use_bias:
+        attn = attn + lp["bo"]
+    if cfg.parallel_block:
+        return x + attn + _mlp(lp, cfg, h), pools
+    x = x + attn
+    h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+    return x + _mlp(lp, cfg, h2), pools
+
+
+def paged_decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                      token: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One decode step against paged KV (DESIGN.md §6.1, paged backend).
+
+    cache: {"k_pool"/"v_pool": (L, P, page, Hkv, dh),
+            "block_tables": (B, maxp) int32, "lengths": (B,) int32};
+    token: (B,1).  Every row decodes at its own depth; the new token's KV is
+    scattered into physical page ``bt[b, lengths[b] // page]`` at slot
+    ``lengths[b] % page``.  The engine guarantees that page is allocated for
+    rows that are actually decoding; riding-along rows resolve to the
+    scratch page 0.  Returns (logits, cache with lengths+1).
+    """
+    x = jnp.take(params["embed"], token, axis=0)
+    bt = cache["block_tables"]
+    lengths = cache["lengths"]
+    page = cache["k_pool"].shape[2]
+    maxp = bt.shape[1]
+    rows = jnp.arange(bt.shape[0])
+    page_idx = jnp.minimum(lengths // page, maxp - 1)
+    phys_page = bt[rows, page_idx]
+    page_slot = lengths % page
+
+    def step(x, xs):
+        lp, pools = xs
+        x, pools = _block_decode_paged(lp, cfg, x, pools, bt, lengths,
+                                       phys_page, page_slot)
+        return x, pools
+
+    x, pools_new = jax.lax.scan(
+        step, x, (params["layers"],
+                  {"k": cache["k_pool"], "v": cache["v_pool"]}),
+        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = logits_of(params, cfg, x)
+    return logits, {"k_pool": pools_new["k"], "v_pool": pools_new["v"],
+                    "block_tables": bt, "lengths": lengths + 1}
+
+
 def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> Dict:
     dt = dtype or _dt(cfg)
     cap = capacity if cfg.sliding_window is None else min(capacity,

@@ -19,13 +19,24 @@ class Family(NamedTuple):
     has_aux: bool = False
     slot_decode: bool = False  # per-row cache lengths + prefill last_positions
                                # (slot-based continuous batching, DESIGN.md §6.1)
+    # paged-KV capability (DESIGN.md §6.1, paged backend): all three are set
+    # together or not at all.  paged_decode decodes against gathered pages
+    # with per-row lengths; init_paged_pools allocates the shared page pools;
+    # prefill_to_pages scatters a contiguous prefill cache into pages.
+    paged_decode: Optional[Callable] = None
+    init_paged_pools: Optional[Callable] = None
+    prefill_to_pages: Optional[Callable] = None
 
 
 FAMILIES: Dict[str, Family] = {
     "dense": Family(dense.init, dense.apply, dense.prefill, dense.decode_step,
-                    slot_decode=True),
+                    slot_decode=True, paged_decode=dense.paged_decode_step,
+                    init_paged_pools=dense.init_paged_pools,
+                    prefill_to_pages=dense.prefill_to_pages),
     "vlm": Family(dense.init, dense.apply, dense.prefill, dense.decode_step,
-                  slot_decode=True),
+                  slot_decode=True, paged_decode=dense.paged_decode_step,
+                  init_paged_pools=dense.init_paged_pools,
+                  prefill_to_pages=dense.prefill_to_pages),
     "moe": Family(moe.init, moe.apply, moe.prefill, moe.decode_step,
                   has_aux=True),
     "hybrid": Family(rglru.init, rglru.apply, rglru.prefill, rglru.decode_step),

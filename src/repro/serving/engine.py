@@ -11,6 +11,17 @@ greedy output is independent of what it happens to be batched with (wave
 batching, ``continuous=False``, produces bit-identical greedy results in
 more decode steps).
 
+``Engine(paged=True)`` swaps the per-slot contiguous cache for a **paged KV
+cache** (DESIGN.md §6.1, paged backend): a fixed pool of page-sized KV
+blocks with a per-sequence block table, grown one page at a time during
+decode.  Admission charges a request's *prompt* pages only (not
+``prompt + max_new`` as the contiguous slot cache must reserve), finished
+sequences return their pages to the pool, and when the pool exhausts
+mid-decode the most recently admitted sequence is preempted — its pages
+reclaimed, its request requeued at the head of the queue for a greedy-
+deterministic restart.  Greedy outputs stay bit-identical to the slot and
+wave paths while strictly more requests are resident on the same KV budget.
+
 This is the backend used by the runnable examples and the end-to-end
 decentralized serving driver (``repro.launch.serve``, via
 ``repro.serving.executor.EngineExecutor``); the large-scale scheduling
@@ -30,6 +41,7 @@ import numpy as np
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
+from repro.sim.executor import paged_admit_ok, pages_for
 
 
 @dataclass
@@ -55,6 +67,8 @@ class EngineStats:
     decode_steps: int = 0         # batched decode_step invocations
     prefill_wall_s: float = 0.0   # wall time inside prefill calls
     decode_wall_s: float = 0.0    # wall time inside decode_step calls
+    peak_resident: int = 0        # max concurrently resident sequences
+    preempted: int = 0            # paged: preempt-and-requeue events
 
 
 class _Slot:
@@ -73,7 +87,9 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  bucket: int = 64, seed: int = 0,
                  capacity: Optional[int] = None,
-                 continuous: bool = True) -> None:
+                 continuous: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -101,7 +117,7 @@ class Engine:
                                               kv_chunk=256, capacity=cap),
                 static_argnums=(2,))
         self._decode = jax.jit(lambda p, c, t: fam.decode_step(p, cfg, c, t))
-        self.eos_id = 1
+        self.eos_id = cfg.eos_id
 
         # persistent slot state
         self._queue: List[GenRequest] = []
@@ -110,6 +126,32 @@ class Engine:
         self._cache: Optional[Dict] = None
         self._logits: Optional[jax.Array] = None
         self._capacity = int(capacity or 0)
+
+        # paged-KV state (DESIGN.md §6.1, paged backend)
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        if self.paged:
+            if not (self.slot_decode and fam.paged_decode is not None):
+                raise ValueError(
+                    "paged KV requires a paged-capable slot-decode family "
+                    "(dense/vlm with full attention)")
+            if cfg.kv_quant:
+                raise ValueError("paged KV does not support kv_quant caches")
+            self._decode_paged = jax.jit(
+                lambda p, c, t: fam.paged_decode(p, cfg, c, t))
+            self._scatter_pages = jax.jit(fam.prefill_to_pages)
+            self._init_pools = fam.init_paged_pools
+            usable = (int(num_pages) if num_pages is not None
+                      else max_batch * pages_for(2 * bucket, self.page_size))
+            self._num_pages = usable + 1          # page 0 is scratch
+            self._pools: Optional[Dict] = None    # lazy device alloc
+            self._free_pages: List[int] = list(range(1, self._num_pages))
+            self._row_pages: List[List[int]] = [[] for _ in range(max_batch)]
+            self._maxp = max(1, pages_for(2 * bucket, self.page_size))
+            self._block_tables = np.zeros((max_batch, self._maxp), np.int32)
+            # admission order, for LIFO preemption under pool pressure
+            self._slot_seq = np.zeros(max_batch, np.int64)
+            self._admit_seq = 0
 
     def _pad_bucket(self, n: int) -> int:
         b = self.bucket
@@ -134,18 +176,33 @@ class Engine:
 
     def load_snapshot(self) -> Dict[str, int]:
         """Occupancy counts for Executor.load() — the supported view of the
-        slot/queue bookkeeping (token counts are *remaining* work)."""
+        slot/queue/page-pool bookkeeping (token counts are *remaining* work;
+        this dict, not the private pool state, is the sanctioned external
+        view — a grep-guard in tests/test_compat.py enforces it)."""
         active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
-        return dict(
+        snap = dict(
             active_streams=len(active),
             queued_streams=len(self._queue),
             queued_prompt_tokens=sum(len(r.tokens) for r in self._queue),
             queued_new_tokens=sum(r.max_new for r in self._queue),
             pending_decode_tokens=sum(s.req.max_new - len(s.out)
                                       for _, s in active),
-            kv_used=int(sum(self._lengths[i] + s.req.max_new - len(s.out)
-                            for i, s in active)),
-            kv_budget=self.max_batch * max(self._capacity, 1))
+            pages_used=0, pages_total=0, free_pages=0, page_size=0)
+        if self.paged:
+            usable = self._num_pages - 1
+            used = usable - len(self._free_pages)
+            snap.update(
+                pages_used=used, pages_total=usable,
+                free_pages=len(self._free_pages), page_size=self.page_size,
+                # paged KV charges pages actually held, not reservations
+                kv_used=used * self.page_size,
+                kv_budget=usable * self.page_size)
+        else:
+            snap.update(
+                kv_used=int(sum(self._lengths[i] + s.req.max_new - len(s.out)
+                                for i, s in active)),
+                kv_budget=self.max_batch * max(self._capacity, 1))
+        return snap
 
     def serve(self, reqs: List[GenRequest]) -> List[GenRequest]:
         """Submit ``reqs`` and pump steps until the engine drains."""
@@ -164,6 +221,9 @@ class Engine:
 
     # ------------------------------------------------------------- admission
     def _admit(self) -> None:
+        if self.paged:
+            self._admit_paged()
+            return
         if not self._queue:
             return
         resident = any(s is not None for s in self._slots)
@@ -231,6 +291,152 @@ class Engine:
             r.started_at = now
             self._slots[i] = _Slot(r)
             self._lengths[i] = len(r.tokens)
+        self.stats.peak_resident = max(self.stats.peak_resident,
+                                       self.active_slots())
+
+    # -------------------------------------------------------- paged admission
+    def _pages(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    def _admit_paged(self) -> None:
+        if not self._queue:
+            return
+        resident = any(s is not None for s in self._slots)
+        if not self.continuous and resident:
+            return                     # wave batching: refill only when empty
+        usable = self._num_pages - 1
+        if resident and any(self._pages(self._required(r)) > usable
+                            for r in self._queue):
+            # a queued request cannot fit the pool even alone; stop
+            # backfilling so the batch drains and the growth branch runs
+            return
+        if not resident:
+            # grow the pool while nothing is resident, so any single admitted
+            # request can always run to completion (its worst-case pages fit
+            # the pool) — this is what makes LIFO preemption livelock-free
+            needed = max(self._pages(self._required(r))
+                         for r in self._queue[:self.max_batch])
+            if self._pools is None or needed > usable:
+                self._num_pages = max(self._num_pages, needed + 1)
+                usable = self._num_pages - 1
+                self._pools = None
+                self._logits = None
+                self._free_pages = list(range(1, self._num_pages))
+        free_slots = [i for i, s in enumerate(self._slots) if s is None]
+        free_now = len(self._free_pages)
+        take: List[Tuple[int, GenRequest]] = []
+        rest: List[GenRequest] = []
+        taking = resident
+        for r in self._queue:
+            need = self._pages(len(r.tokens))
+            if (free_slots and need <= free_now
+                    and self._pages(self._required(r)) <= usable
+                    and paged_admit_ok(free_now, len(r.tokens),
+                                       self.page_size, resident=taking)):
+                take.append((free_slots.pop(0), r))
+                free_now -= need
+                taking = True
+            else:
+                rest.append(r)
+        self._queue = rest
+        if take:
+            self._grow_block_tables(max(self._pages(self._required(r))
+                                        for _, r in take))
+            self._prefill_paged(take)
+
+    def _grow_block_tables(self, maxp: int) -> None:
+        if maxp <= self._maxp:
+            return
+        wider = np.zeros((self.max_batch, maxp), np.int32)
+        wider[:, : self._maxp] = self._block_tables
+        self._block_tables = wider
+        self._maxp = maxp
+
+    def _prefill_paged(self, take: List[Tuple[int, GenRequest]]) -> None:
+        """Right-padded prompt prefill, then scatter the contiguous KV into
+        freshly allocated pool pages (pad-tail pages alias the scratch page
+        0, which per-row lengths keep inert)."""
+        n = len(take)
+        plen = self._pad_bucket(max(len(r.tokens) for _, r in take))
+        plen = -(-plen // self.page_size) * self.page_size  # page multiple
+        toks = np.full((n, plen), self.eos_id, np.int32)
+        last = np.zeros(n, np.int32)
+        phys = np.zeros((n, plen // self.page_size), np.int32)
+        for j, (i, r) in enumerate(take):
+            toks[j, : len(r.tokens)] = r.tokens      # right-pad (inert)
+            last[j] = len(r.tokens) - 1
+            pages = [self._free_pages.pop() for _ in
+                     range(self._pages(len(r.tokens)))]
+            self._row_pages[i] = pages
+            phys[j, : len(pages)] = pages
+            self._block_tables[i, :] = 0
+            self._block_tables[i, : len(pages)] = pages
+            self._slots[i] = _Slot(r)
+            self._lengths[i] = len(r.tokens)
+            self._slot_seq[i] = self._admit_seq
+            self._admit_seq += 1
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      plen, jnp.asarray(last))
+        logits.block_until_ready()
+        self.stats.prefill_wall_s += time.perf_counter() - t0
+        now = time.perf_counter()       # started_at matches the slot path:
+        for _, r in take:               # stamped after prefill completes
+            r.started_at = now
+        self.stats.prefill_tokens += plen * n
+        self.stats.batches += 1
+        self.stats.peak_resident = max(self.stats.peak_resident,
+                                       self.active_slots())
+        kv = {k: v for k, v in cache.items() if k != "length"}
+        if self._pools is None:
+            self._pools = self._init_pools(self.cfg, self._num_pages,
+                                           self.page_size)
+            self._logits = jnp.zeros((self.max_batch, 1, logits.shape[-1]),
+                                     logits.dtype)
+        self._pools = self._scatter_pages(self._pools, kv, jnp.asarray(phys))
+        rows = jnp.asarray([i for i, _ in take])
+        self._logits = self._logits.at[rows].set(logits)
+
+    # ----------------------------------------------------- page pool dynamics
+    def _release_pages(self, i: int) -> None:
+        self._free_pages.extend(self._row_pages[i])
+        self._row_pages[i] = []
+        self._block_tables[i, :] = 0
+
+    def _preempt(self, i: int) -> None:
+        """Reclaim row ``i``'s pages and requeue its request at the head of
+        the queue (vLLM-style recompute preemption: generated tokens are
+        discarded; the greedy restart reproduces them bit-identically)."""
+        r = self._slots[i].req
+        r.result = None
+        self._release_pages(i)
+        self._slots[i] = None
+        self._lengths[i] = 0
+        self._queue.insert(0, r)
+        self.stats.preempted += 1
+
+    def _ensure_decode_pages(self, survivors: List[int]) -> List[int]:
+        """Allocate this step's write page for every surviving row (needed
+        when its next token crosses a page boundary).  Under pool pressure
+        the most recently admitted resident is preempted until a page frees;
+        oldest rows are served first, so the oldest admission always makes
+        progress and the preemption loop terminates."""
+        for i in sorted(survivors, key=lambda i: self._slot_seq[i]):
+            while (self._slots[i] is not None
+                   and self._lengths[i] // self.page_size
+                   >= len(self._row_pages[i])):
+                if self._free_pages:
+                    pg = self._free_pages.pop()
+                    self._row_pages[i].append(pg)
+                    idx = len(self._row_pages[i]) - 1
+                    self._grow_block_tables(idx + 1)
+                    self._block_tables[i, idx] = pg
+                else:
+                    victims = [j for j, s in enumerate(self._slots)
+                               if s is not None]
+                    self._preempt(max(victims, key=lambda j:
+                                      self._slot_seq[j]))
+        return [i for i in survivors if self._slots[i] is not None]
 
     # ------------------------------------------------------------ decode step
     def step(self) -> List[GenRequest]:
@@ -268,24 +474,40 @@ class Engine:
                 slot.req.finished_at = now
                 finished.append(slot.req)
                 self._slots[i] = None
+                if self.paged:
+                    self._release_pages(i)     # pages return to the pool
                 self.stats.served += 1
             else:
                 survivors.append(i)
         # 2. admit queued work into freed slots between decode steps
         if self.continuous and finished:
             self._admit()
+        # 2b. paged: claim this step's write page per survivor, preempting
+        #     the most recent admissions if the pool is exhausted
+        if self.paged and survivors:
+            survivors = self._ensure_decode_pages(survivors)
         # 3. one batched decode step advances the surviving rows; rows that
         #    were empty or just prefilled ride along (static batch shape) —
         #    their cache write lands at their own depth and is overwritten by
         #    their first real decode, and their logits are kept, not replaced
         if survivors:
-            cache = {**self._cache,
-                     "length": jnp.asarray(self._lengths, jnp.int32)}
             t0 = time.perf_counter()
-            logits, cache = self._decode(self.params, cache, cur)
-            logits.block_until_ready()
+            if self.paged:
+                cache = {**self._pools,
+                         "block_tables": jnp.asarray(self._block_tables),
+                         "lengths": jnp.asarray(self._lengths, jnp.int32)}
+                logits, cache = self._decode_paged(self.params, cache, cur)
+                logits.block_until_ready()
+                self._pools = {"k_pool": cache["k_pool"],
+                               "v_pool": cache["v_pool"]}
+            else:
+                cache = {**self._cache,
+                         "length": jnp.asarray(self._lengths, jnp.int32)}
+                logits, cache = self._decode(self.params, cache, cur)
+                logits.block_until_ready()
+                self._cache = {k: v for k, v in cache.items()
+                               if k != "length"}
             self.stats.decode_wall_s += time.perf_counter() - t0
-            self._cache = {k: v for k, v in cache.items() if k != "length"}
             keep = jnp.asarray(survivors)
             self._logits = self._logits.at[keep].set(logits[keep])
             self._lengths[survivors] += 1

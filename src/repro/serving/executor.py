@@ -17,16 +17,23 @@ from __future__ import annotations
 from typing import List, Optional
 
 from repro.serving.engine import Engine, GenRequest
-from repro.sim.executor import Executor, ExecutorLoad
+from repro.sim.executor import Executor, ExecutorLoad, paged_admit_ok
 
 
 class EngineExecutor(Executor):
     def __init__(self, engine: Engine,
-                 max_pending_tokens: Optional[int] = None) -> None:
+                 max_pending_tokens: Optional[int] = None,
+                 gate_on_pages: bool = False) -> None:
         self.engine = engine
         # admission bound: queued-but-unstarted work the executor will hold
         # before pushing back on the caller (None = unbounded)
         self.max_pending_tokens = max_pending_tokens
+        # paged engines only: push back at admit() time with the same
+        # page-granularity rule the engine applies at prefill time
+        # (repro.sim.executor.paged_admit_ok), so a caller that respects
+        # admit() sees the identical notion of "full" as the simulated
+        # TokenBucketExecutor in page mode
+        self.gate_on_pages = gate_on_pages
         self._loop = None
         self._on_complete = None
 
@@ -36,13 +43,20 @@ class EngineExecutor(Executor):
         return self.engine.active_slots()
 
     def admit(self, item: GenRequest) -> bool:
-        if self.max_pending_tokens is not None:
+        if self.gate_on_pages or self.max_pending_tokens is not None:
             snap = self.engine.load_snapshot()
-            pending = snap["queued_prompt_tokens"] + snap["queued_new_tokens"]
-            if (snap["queued_streams"] > 0
-                    and pending + len(item.tokens) + item.max_new
-                    > self.max_pending_tokens):
-                return False
+            if self.gate_on_pages and self.engine.paged:
+                resident = snap["active_streams"] + snap["queued_streams"] > 0
+                if not paged_admit_ok(snap["free_pages"], len(item.tokens),
+                                      snap["page_size"], resident=resident):
+                    return False
+            if self.max_pending_tokens is not None:
+                pending = (snap["queued_prompt_tokens"]
+                           + snap["queued_new_tokens"])
+                if (snap["queued_streams"] > 0
+                        and pending + len(item.tokens) + item.max_new
+                        > self.max_pending_tokens):
+                    return False
         self.engine.submit(item)
         return True
 
@@ -55,7 +69,9 @@ class EngineExecutor(Executor):
             pending_decode_tokens=(snap["pending_decode_tokens"]
                                    + snap["queued_new_tokens"]),
             kv_used=snap["kv_used"],
-            kv_budget=snap["kv_budget"])
+            kv_budget=snap["kv_budget"],
+            pages_used=snap["pages_used"],
+            pages_total=snap["pages_total"])
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         """Expected service seconds from the engine's measured prefill and

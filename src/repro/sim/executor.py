@@ -18,7 +18,14 @@ the Executor contract both backends implement (DESIGN.md §6.1):
                             occupancy) it reproduces the analytic
                             ``BackendProfile.service_time`` exactly; under
                             bursts and churn, in-flight requests slow down
-                            and speed up as the batch shifts.
+                            and speed up as the batch shifts.  With
+                            ``page_size`` set, admission switches to the
+                            page-granularity rule shared with the real
+                            paged engine (``paged_admit_ok``): prompt pages
+                            must fit the free pool, decode pages accrue
+                            with generation progress.  The sim does not
+                            model preemption — transient over-occupancy
+                            simply shows up as zero page headroom.
 
 The real-engine counterpart (``EngineExecutor``, slot-based continuous
 batching over the JAX ``Engine``) lives in ``repro.serving.executor``.
@@ -45,6 +52,23 @@ CompletionFn = Callable[[Any, float, float], None]
 _EPS = 1e-6
 
 
+def pages_for(tokens: int, page_size: int) -> int:
+    """KV pages needed to hold ``tokens`` (every sequence owns >= 1 page)."""
+    return max(1, -(-int(tokens) // int(page_size)))
+
+
+def paged_admit_ok(free_pages: int, prompt_tokens: int, page_size: int,
+                   resident: bool) -> bool:
+    """THE paged admission rule, shared by the simulated and real backends
+    (DESIGN.md §6.1, paged backend): a request is admitted when its
+    *prompt* pages fit the free pool — its decode pages are claimed one at
+    a time as it generates (preempt-and-requeue reclaims them under
+    pressure).  An empty backend always admits one request so oversized
+    prompts cannot deadlock the queue.
+    """
+    return (not resident) or pages_for(prompt_tokens, page_size) <= free_pages
+
+
 @dataclass(frozen=True)
 class ExecutorLoad:
     """Point-in-time snapshot of an executor's occupancy.
@@ -52,7 +76,8 @@ class ExecutorLoad:
     ``active_streams`` are requests holding compute now; ``queued_streams``
     are admitted but waiting for a slot (real engine only).  Token counts
     are *remaining* work; ``kv_used``/``kv_budget`` express KV-memory
-    pressure in tokens.
+    pressure in tokens.  Paged backends additionally report page-pool
+    occupancy (``pages_total`` stays 0 for contiguous backends).
     """
 
     active_streams: int
@@ -61,6 +86,8 @@ class ExecutorLoad:
     pending_decode_tokens: int
     kv_used: int
     kv_budget: int
+    pages_used: int = 0
+    pages_total: int = 0
 
     @property
     def kv_headroom(self) -> float:
@@ -68,6 +95,13 @@ class ExecutorLoad:
         if self.kv_budget <= 0:
             return 1.0
         return max(0.0, 1.0 - self.kv_used / self.kv_budget)
+
+    @property
+    def page_headroom(self) -> float:
+        """Free fraction of the KV page pool, in [0, 1] (1.0 = unpaged)."""
+        if self.pages_total <= 0:
+            return 1.0
+        return max(0.0, 1.0 - self.pages_used / self.pages_total)
 
 
 class Executor(ABC):
@@ -99,17 +133,29 @@ class Executor(ABC):
 class _Stream:
     """One in-flight request inside the TokenBucketExecutor."""
 
-    __slots__ = ("item", "prompt_left", "output_left", "kv_tokens",
-                 "decoding", "started_at", "first_token_at")
+    __slots__ = ("item", "prompt_left", "output_left", "prompt_total",
+                 "output_total", "kv_tokens", "decoding", "started_at",
+                 "first_token_at")
 
     def __init__(self, item: Any, prompt: int, output: int, now: float) -> None:
         self.item = item
-        self.prompt_left = float(max(1, prompt))
-        self.output_left = float(max(1, output))
-        self.kv_tokens = max(1, prompt) + max(1, output)
+        self.prompt_total = max(1, prompt)
+        self.output_total = max(1, output)
+        self.prompt_left = float(self.prompt_total)
+        self.output_left = float(self.output_total)
+        self.kv_tokens = self.prompt_total + self.output_total
         self.decoding = False
         self.started_at = now
         self.first_token_at: Optional[float] = None
+
+    def tokens_held(self) -> int:
+        """KV tokens this stream physically occupies right now (prompt plus
+        decoded-so-far) — what a paged pool charges, vs the reserved
+        ``kv_tokens`` a contiguous allocation charges up front."""
+        if not self.decoding:
+            return self.prompt_total
+        decoded = self.output_total - max(0.0, self.output_left)
+        return self.prompt_total + int(decoded)
 
 
 class TokenBucketExecutor(Executor):
@@ -122,10 +168,17 @@ class TokenBucketExecutor(Executor):
     the batch changes — no fixed tick quantum, no drift.
     """
 
-    def __init__(self, profile: BackendProfile) -> None:
+    def __init__(self, profile: BackendProfile,
+                 page_size: Optional[int] = None) -> None:
         self.profile = profile
         self.kv_budget = int(getattr(profile, "kv_token_budget", 0)
                              or profile.max_concurrency * KV_TOKENS_PER_STREAM)
+        # page-granularity admission mode: the same KV budget expressed as a
+        # pool of fixed-size pages, admitted on *prompt* pages only
+        # (paged_admit_ok) — decode pages accrue as streams generate, so
+        # admission matches the real paged engine's notion of "full"
+        self.page_size = page_size
+        self.pages_total = (self.kv_budget // page_size) if page_size else 0
         self._streams: List[_Stream] = []
         self._last_t = 0.0
         self._pending_ev = None
@@ -137,14 +190,25 @@ class TokenBucketExecutor(Executor):
     def n_active(self) -> int:
         return len(self._streams)
 
+    def _pages_used(self) -> int:
+        return sum(pages_for(s.tokens_held(), self.page_size)
+                   for s in self._streams)
+
     def admit(self, item: Any) -> bool:
         qr = item
-        kv = max(1, qr.req.prompt_tokens) + max(1, qr.req.output_tokens)
-        used = sum(s.kv_tokens for s in self._streams)
-        # token-budget admission; an empty backend always takes one request
-        # so oversized prompts cannot deadlock the queue
-        if self._streams and used + kv > self.kv_budget:
-            return False
+        if self.page_size:
+            self._advance()          # page holdings grow with decode progress
+            free = self.pages_total - self._pages_used()
+            if not paged_admit_ok(free, qr.req.prompt_tokens, self.page_size,
+                                  resident=bool(self._streams)):
+                return False
+        else:
+            kv = max(1, qr.req.prompt_tokens) + max(1, qr.req.output_tokens)
+            used = sum(s.kv_tokens for s in self._streams)
+            # token-budget admission; an empty backend always takes one
+            # request so oversized prompts cannot deadlock the queue
+            if self._streams and used + kv > self.kv_budget:
+                return False
         self._advance()
         self._streams.append(_Stream(qr, qr.req.prompt_tokens,
                                      qr.req.output_tokens, self._loop.now))
@@ -153,6 +217,14 @@ class TokenBucketExecutor(Executor):
 
     def load(self) -> ExecutorLoad:
         self._advance()
+        if self.page_size:
+            pages_used = self._pages_used()
+            kv_used = pages_used * self.page_size
+            kv_budget = self.pages_total * self.page_size
+        else:
+            pages_used = 0
+            kv_used = sum(s.kv_tokens for s in self._streams)
+            kv_budget = self.kv_budget
         return ExecutorLoad(
             active_streams=len(self._streams),
             queued_streams=0,
@@ -161,8 +233,10 @@ class TokenBucketExecutor(Executor):
                                            if not s.decoding)),
             pending_decode_tokens=int(sum(s.output_left
                                           for s in self._streams)),
-            kv_used=sum(s.kv_tokens for s in self._streams),
-            kv_budget=self.kv_budget)
+            kv_used=kv_used,
+            kv_budget=kv_budget,
+            pages_used=pages_used,
+            pages_total=self.pages_total)
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         return self.profile.service_time(prompt_tokens, output_tokens,

@@ -62,8 +62,9 @@ class TestExecutorLayerHygiene:
     route execution through ``Executor.admit``/``load``/``estimate``
     (DESIGN.md §6.1)."""
 
-    SCAN_DIRS = ("src", "benchmarks", "examples", "experiments")
-    ALLOWED = ("src/repro/sim/executor.py", "src/repro/sim/servicemodel.py")
+    SCAN_DIRS = ("src", "benchmarks", "examples", "experiments", "tests")
+    ALLOWED = ("src/repro/sim/executor.py", "src/repro/sim/servicemodel.py",
+               "tests/test_compat.py", "tests/test_executor.py")
 
     def test_service_time_only_called_from_executor_layer(self):
         offenders = []
@@ -78,6 +79,54 @@ class TestExecutorLayerHygiene:
             "direct service_time calls outside the executor layer "
             "(route through Executor.admit/load/estimate instead):\n  "
             + "\n  ".join(offenders))
+
+    # the paged engine's page-pool bookkeeping is private to the engine;
+    # everything else reads Engine.load_snapshot() / Executor.load()
+    # (pages_used / pages_total / free_pages / page_size)
+    PAGE_POOL_TOKENS = ("._free_pages", "._row_pages", "._block_tables",
+                        "._num_pages", "._pools", "._slot_seq")
+    PAGE_POOL_ALLOWED = ("src/repro/serving/engine.py",
+                         "tests/test_compat.py")
+
+    def test_page_pool_state_private_to_engine(self):
+        offenders = []
+        for d in self.SCAN_DIRS:
+            for path in sorted((REPO / d).rglob("*.py")):
+                rel = path.relative_to(REPO).as_posix()
+                if rel in self.PAGE_POOL_ALLOWED:
+                    continue
+                text = path.read_text()
+                for tok in self.PAGE_POOL_TOKENS:
+                    if tok in text:
+                        offenders.append(f"{rel}: {tok}")
+        assert not offenders, (
+            "private page-pool state accessed outside the paged engine "
+            "(read Engine.load_snapshot()/Executor.load() instead):\n  "
+            + "\n  ".join(offenders))
+
+
+class TestBenchSchema:
+    """BENCH_scheduling.json drift is caught in tier-1: the checked-in
+    artifact must satisfy the pinned schema that ``benchmarks/run.py
+    --bench`` also validates at write time."""
+
+    def test_checked_in_bench_matches_schema(self):
+        import json
+
+        from benchmarks.run import check_bench_schema
+        path = REPO / "BENCH_scheduling.json"
+        assert path.exists(), "BENCH_scheduling.json missing (run --bench)"
+        payload = json.loads(path.read_text())
+        check_bench_schema(payload)
+
+    def test_schema_checker_rejects_drift(self):
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        del payload["engine"]["paged"]["decode_tokens_per_s"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(payload)
 
 
 # ---------------------------------------------------------------------------
