@@ -35,7 +35,7 @@ from typing import List
 # (the sibling benchmark modules import as the ``benchmarks`` package)
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-BENCH_SCHEMA_VERSION = 2
+BENCH_SCHEMA_VERSION = 3
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -44,6 +44,11 @@ ENGINE_MODE_KEYS = ("decode_tokens", "decode_steps", "decode_tokens_per_s",
                     "wall_s", "admitted_concurrency", "max_batch",
                     "kv_budget_tokens")
 ENGINE_MODES = ("slot", "wave", "paged")
+# schema 3: mixed prompt-heavy/decode-heavy workload, disagg vs colocated
+# (DESIGN.md §6.1-disagg) — TTFT per request class and decode throughput
+MIX_MODES = ("slot", "paged", "disagg")
+MIX_MODE_KEYS = ("avg_ttft_prompt_heavy_s", "avg_ttft_decode_heavy_s",
+                 "decode_tokens_per_s", "wall_s", "served")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -65,6 +70,15 @@ def check_bench_schema(payload: dict) -> None:
             assert k in eng[mode], f"engine.{mode}.{k} missing"
     for k in ("page_size", "num_pages", "preempted"):
         assert k in eng["paged"], f"engine.paged.{k} missing"
+    mix = payload["mix"]
+    for k in ("workload", "ttft_speedup_prompt_heavy"):
+        assert k in mix, f"mix.{k} missing"
+    for mode in MIX_MODES:
+        assert mode in mix, f"mix.{mode} missing"
+        for k in MIX_MODE_KEYS:
+            assert k in mix[mode], f"mix.{mode}.{k} missing"
+    for k in ("handoffs", "handoff_bytes"):
+        assert k in mix["disagg"], f"mix.disagg.{k} missing"
 
 
 def _smoke() -> int:
@@ -141,6 +155,37 @@ def _smoke() -> int:
         snap = paged.load_snapshot()
         assert snap["pages_used"] == 0 and snap["free_pages"] == 5
 
+    def disagg_matches_colocated_paged():
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serving import DisaggEngineExecutor, Engine, GenRequest
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+
+        def mk():
+            prompts = [np.random.default_rng(i).integers(2, 400, size=6 + 5 * i)
+                       .astype(np.int32) for i in range(3)]
+            return [GenRequest(rid=f"r{i}", tokens=prompts[i],
+                               max_new=[6, 9, 4][i]) for i in range(3)]
+
+        ref = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=16)
+        rs = {r.rid: r.result for r in ref.serve(mk())}
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                   page_size=16),
+            Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                   page_size=16))
+        ex.bind(None, lambda r, st, ft: None)
+        for r in mk():
+            assert ex.admit(r)
+        done = {r.rid: r.result for r in ex.drain()}
+        for rid in rs:
+            np.testing.assert_array_equal(rs[rid], done[rid])
+        assert ex.prefill.stats.handoffs == 3
+        assert ex.prefill.load_snapshot()["pages_used"] == 0
+        assert ex.decode.load_snapshot()["pages_used"] == 0
+
     def pallas_kernel_matches_oracle():
         from repro.kernels.flash_attention import flash_attention_tpu
         from repro.kernels.ref import reference_attention
@@ -187,6 +232,8 @@ def _smoke() -> int:
     check("model forward + prefill/decode consistency", model_roundtrip)
     check("serving engine generation", engine_generates)
     check("paged engine greedy-matches slot engine", paged_engine_matches_slot)
+    check("disagg KV handoff greedy-matches colocated paged",
+          disagg_matches_colocated_paged)
     check("pallas flash kernel vs oracle (interpret)",
           pallas_kernel_matches_oracle)
     check("mesh context + sharding constraint", mesh_context_sharding)
@@ -285,6 +332,87 @@ def _bench(out_path: str) -> int:
                                      num_pages=engine_kw[label]["num_pages"],
                                      preempted=eng.stats.preempted)
     payload["engine"] = {"model": cfg.name, **engine_out}
+
+    # --- mixed prompt-heavy/decode-heavy workload: disagg vs colocated ------
+    # (DESIGN.md §6.1-disagg) Decode-heavy requests are submitted first and
+    # monopolize a colocated engine's two slots for their long decode, so
+    # the prompt-heavy requests behind them wait ~the whole decode for their
+    # first token.  A disaggregated pair prefills them immediately on the
+    # idle prefill engine (which serves the first token), so their TTFT
+    # collapses to ~prefill time even while the decode engine is saturated.
+    from repro.serving import DisaggEngineExecutor, EngineExecutor
+    from repro.serving.engine import EngineStats as _ES
+
+    def mk_mix():
+        rng = np.random.default_rng(7)
+        reqs = [GenRequest(rid=f"dec{i}",
+                           tokens=rng.integers(2, 400, size=8)
+                           .astype(np.int32), max_new=48) for i in range(2)]
+        reqs += [GenRequest(rid=f"pro{i}",
+                            tokens=rng.integers(2, 400, size=96)
+                            .astype(np.int32), max_new=4) for i in range(3)]
+        return reqs
+
+    def mk_executor(label):
+        kw = dict(bucket=16, max_batch=2)
+        if label == "slot":
+            return EngineExecutor(Engine(cfg, params, **kw))
+        if label == "paged":
+            return EngineExecutor(Engine(cfg, params, paged=True,
+                                         page_size=page_size, num_pages=64,
+                                         **kw))
+        return DisaggEngineExecutor(
+            Engine(cfg, params, paged=True, page_size=page_size, **kw),
+            Engine(cfg, params, paged=True, page_size=page_size,
+                   num_pages=64, **kw))
+
+    def run_mix(ex):
+        done = []
+        ex.bind(None, lambda r, st_, ft: done.append(r))
+        for r in mk_mix():
+            assert ex.admit(r)
+        while ex.has_work():
+            ex.step()
+        return done
+
+    mix_out = {}
+    for label in MIX_MODES:
+        ex = mk_executor(label)
+        # warm the per-instance jit caches TWICE: the slot engine's cache
+        # capacity grows during the first pass, so only the second pass
+        # compiles the shapes the timed run will hit
+        run_mix(ex)
+        run_mix(ex)
+        engines = ([ex.prefill, ex.decode] if label == "disagg"
+                   else [ex.engine])
+        for e in engines:
+            e.stats = _ES()
+        t0 = time.perf_counter()
+        done = run_mix(ex)                # timed run reuses compiled steps
+        wall = time.perf_counter() - t0
+        st = ex.engine_stats()
+        ttft = {r.rid: r.first_token_at - r.enqueued_at for r in done}
+        mix_out[label] = {
+            "served": len(done),
+            "avg_ttft_prompt_heavy_s": round(float(np.mean(
+                [v for k, v in ttft.items() if k.startswith("pro")])), 4),
+            "avg_ttft_decode_heavy_s": round(float(np.mean(
+                [v for k, v in ttft.items() if k.startswith("dec")])), 4),
+            "decode_tokens_per_s": round(
+                st.decode_tokens / max(st.decode_wall_s, 1e-9), 1),
+            "wall_s": round(wall, 3),
+        }
+        if label == "disagg":
+            mix_out[label].update(handoffs=st.handoffs,
+                                  handoff_bytes=st.handoff_bytes)
+    payload["mix"] = {
+        "workload": "2 decode-heavy (prompt 8, out 48) then "
+                    "3 prompt-heavy (prompt 96, out 4), max_batch 2",
+        "ttft_speedup_prompt_heavy": round(
+            mix_out["paged"]["avg_ttft_prompt_heavy_s"]
+            / max(mix_out["disagg"]["avg_ttft_prompt_heavy_s"], 1e-9), 2),
+        **mix_out,
+    }
 
     check_bench_schema(payload)
     with open(out_path, "w") as f:

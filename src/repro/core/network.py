@@ -195,14 +195,30 @@ class Network:
 
     def _est_wait(self, node: Node, req: Request) -> float:
         """Omniscient load estimate for the centralized baseline, built from
-        the executor's load snapshot (queued + in-flight token backlog)."""
+        the executor's load snapshot (queued + in-flight token backlog in
+        both phases)."""
         ld = node.executor.load()
         backlog = sum(q.req.output_tokens for q in
                       node.local_queue + node.delegated_queue)
         backlog += ld.pending_decode_tokens
         cap = node.profile.decode_tps * node.profile.saturation
-        return backlog / cap + node.executor.estimate(
-            req.prompt_tokens, req.output_tokens)
+        return (backlog / cap
+                + ld.pending_prefill_tokens / node.profile.prefill_tps
+                + node.executor.estimate(req.prompt_tokens,
+                                         req.output_tokens))
+
+    def _phase_pressure(self, node: Node, req: Request) -> float:
+        """Phase-aware load score in [0, 1]: each phase's KV occupancy
+        weighted by the request's token mix, so prompt-heavy requests chase
+        prefill headroom and decode-heavy requests chase decode headroom
+        (DESIGN.md §6.1-disagg).  For colocated backends both headrooms
+        collapse to ``kv_headroom`` and this reduces to plain KV pressure.
+        """
+        ld = node.executor.load()
+        total = max(1, req.prompt_tokens + req.output_tokens)
+        wp = req.prompt_tokens / total
+        return (wp * (1.0 - ld.prefill_headroom)
+                + (1.0 - wp) * (1.0 - ld.decode_headroom))
 
     def _dispatch_centralized(self, req: Request) -> None:
         online = [n for n in self.nodes.values() if n.online]
@@ -230,14 +246,19 @@ class Network:
         while probes < self.max_probes:
             if self.power_of_two:
                 # BEYOND-PAPER: power-of-two-choices on top of PoS — sample
-                # two candidates by stake, probe both, pick the less loaded.
+                # two candidates by stake, probe both, pick the less loaded
+                # *for this request's phase mix* (prompt-heavy requests chase
+                # prefill headroom, decode-heavy ones decode headroom).
                 # Keeps PoS incentives (both draws are stake-weighted) while
                 # exploiting the probe the protocol already pays for.
                 pair = pos_sample(stakes, eligible, 2, self.rng,
                                   exclude=tried)
                 if not pair:
                     break
-                pair.sort(key=lambda n: self.nodes[n].utilization())
+                pressure = {n: self._phase_pressure(self.nodes[n], req)
+                            for n in pair}
+                pair.sort(key=lambda n: (pressure[n],
+                                         self.nodes[n].utilization()))
                 cand_id = pair[0]
                 probes += 1
                 tried.extend(pair)
@@ -248,10 +269,17 @@ class Network:
                     break
                 probes += 1
                 tried.append(cand_id)
+                pressure = {cand_id: self._phase_pressure(
+                    self.nodes[cand_id], req)}
             cand = self.nodes[cand_id]
-            if cand.online and cand.policy.accepts_delegated(
-                    cand.n_active, cand.profile.saturation,
-                    len(cand.delegated_queue), self.rng):
+            # a probe response exposing zero headroom for this request's
+            # phase mix is a decline — keep probing (the request would only
+            # sit in the candidate's queue behind the saturated phase)
+            if (cand.online
+                    and pressure[cand_id] < 1.0
+                    and cand.policy.accepts_delegated(
+                        cand.n_active, cand.profile.saturation,
+                        len(cand.delegated_queue), self.rng)):
                 delay = 2 * self.msg_latency * probes + self.msg_latency
                 self.loop.schedule(delay, lambda cand=cand: cand.enqueue(
                     QueuedRequest(req, self.loop.now, delegated=True,

@@ -25,7 +25,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import DuelParams, Network, Node, NodePolicy
 from repro.models import registry
-from repro.serving import Engine, EngineExecutor, GenRequest
+from repro.serving import (DisaggEngineExecutor, Engine, EngineExecutor,
+                           GenRequest)
 from repro.sim import make_profile
 from repro.sim.workload import Request
 
@@ -41,6 +42,10 @@ def main(argv=None) -> int:
     ap.add_argument("--paged", action="store_true",
                     help="back nodes with paged-KV engines "
                          "(DESIGN.md §6.1, paged backend)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="back nodes with disaggregated prefill/decode "
+                         "engine pairs joined by page-granular KV handoff "
+                         "(DESIGN.md §6.1-disagg; implies paged)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke().replace(dtype="float32")
@@ -56,9 +61,16 @@ def main(argv=None) -> int:
         # heterogeneous quality: deeper-trained nodes get lower-temperature
         # params (stand-in for better models)
         params = registry.init(jax.random.PRNGKey(i), cfg)
-        executors[nid] = EngineExecutor(
-            Engine(cfg, params, max_batch=4, bucket=32, seed=i,
-                   paged=args.paged))
+        if args.disagg:
+            executors[nid] = DisaggEngineExecutor(
+                Engine(cfg, params, max_batch=4, bucket=32, seed=i,
+                       paged=True),
+                Engine(cfg, params, max_batch=4, bucket=32, seed=1000 + i,
+                       paged=True))
+        else:
+            executors[nid] = EngineExecutor(
+                Engine(cfg, params, max_batch=4, bucket=32, seed=i,
+                       paged=args.paged))
         prof = make_profile("qwen3-8b", "RTX3090", "sglang",
                             quality=0.4 + 0.15 * i)
         pol = NodePolicy(offload_util_threshold=0.15,
@@ -90,21 +102,25 @@ def main(argv=None) -> int:
         for i in idxs:
             ex.admit(GenRequest(rid=f"r{i}", tokens=prompts[i],
                                 max_new=args.max_new))
-    busy = {nid for nid in by_exec if executors[nid].engine.has_work()}
+    busy = {nid for nid in by_exec if executors[nid].has_work()}
     while busy:
         for nid in sorted(busy):
             executors[nid].step()
-        busy = {nid for nid in busy if executors[nid].engine.has_work()}
+        busy = {nid for nid in busy if executors[nid].has_work()}
     total_tokens = 0
     for nid in sorted(by_exec):
         ex, done = executors[nid], done_by_node[nid]
-        ld = ex.load()
+        ld, st = ex.load(), ex.engine_stats()
         total_tokens += sum(len(r.result) for r in done)
+        disagg = (f", {st.handoffs} KV handoffs "
+                  f"({st.handoff_bytes / 1e6:.1f} MB)"
+                  if args.disagg else "")
         print(f"  {nid}: served {len(done)} requests "
-              f"({ex.engine.stats.decode_tokens} decode tokens in "
-              f"{ex.engine.stats.decode_steps} steps; load: "
+              f"({st.decode_tokens} decode tokens in "
+              f"{st.decode_steps} steps; load: "
               f"{ld.active_streams} active / {ld.queued_streams} queued, "
-              f"kv headroom {ld.kv_headroom:.2f})")
+              f"prefill headroom {ld.prefill_headroom:.2f}, "
+              f"decode headroom {ld.decode_headroom:.2f}{disagg})")
     dt = time.time() - t_wall
     print(f"generated {total_tokens} tokens across {len(by_exec)} nodes "
           f"in {dt:.1f}s wall")

@@ -1,3 +1,3 @@
-from repro.serving.engine import Engine, EngineStats, GenRequest
-from repro.serving.executor import EngineExecutor
+from repro.serving.engine import Engine, EngineStats, GenRequest, KVHandoff
+from repro.serving.executor import DisaggEngineExecutor, EngineExecutor
 from repro.serving.sampling import sample

@@ -69,6 +69,36 @@ class EngineStats:
     decode_wall_s: float = 0.0    # wall time inside decode_step calls
     peak_resident: int = 0        # max concurrently resident sequences
     preempted: int = 0            # paged: preempt-and-requeue events
+    handoffs: int = 0             # disagg: KV handoffs extracted/accepted
+    handoff_bytes: int = 0        # disagg: valid KV bytes handed off
+
+
+@dataclass
+class KVHandoff:
+    """A prefilled request leaving a disaggregated prefill engine
+    (DESIGN.md §6.1-disagg): its populated KV pages, the tokens it has
+    already sampled (the prefill side emits the first token), and the
+    next-token logits the decode side resumes from.  ``k``/``v`` are
+    page-granular copies — the prefill engine's physical pages are released
+    the moment the handoff is extracted; the decode engine scatters them
+    into its own pool under fresh page numbers (``Engine.accept_handoff``).
+    """
+
+    req: GenRequest
+    out: List[int]                # tokens sampled on the prefill side (>= 1)
+    length: int                   # valid KV tokens: prompt + len(out)
+    k: "jax.Array"                # (L, n_pages, page, Hkv, dh)
+    v: "jax.Array"
+    logits: "jax.Array"           # (1, V) next-token logits
+    page_size: int
+
+    @property
+    def kv_bytes(self) -> int:
+        """Bytes of *valid* KV crossing the wire — the sim's transfer cost
+        model charges the same quantity (prompt-dominated: len(out) is 1
+        unless the prefill side raced ahead)."""
+        n_layers, _, _, n_kv, dh = self.k.shape
+        return 2 * n_layers * self.length * n_kv * dh * self.k.dtype.itemsize
 
 
 class _Slot:
@@ -164,6 +194,21 @@ class Engine:
     def submit(self, r: GenRequest) -> None:
         r.enqueued_at = time.perf_counter()
         self._queue.append(r)
+
+    def requeue(self, r: GenRequest) -> None:
+        """Put a preempted/rerouted request back at the head of the queue
+        WITHOUT re-stamping ``enqueued_at`` — its queue wait keeps counting
+        from the original submission, so ``queue_wait`` stays monotone
+        across preemption round-trips (the disagg executor routes
+        decode-side preemptions back through the prefill engine)."""
+        self._queue.insert(0, r)
+
+    def take_queued(self) -> List[GenRequest]:
+        """Drain and return the queue (admission re-routing: the disagg
+        executor uses this to pull decode-side preemptions back out, since
+        handoffs never travel through the decode engine's own queue)."""
+        q, self._queue = self._queue, []
+        return q
 
     def has_work(self) -> bool:
         return bool(self._queue) or any(s is not None for s in self._slots)
@@ -406,9 +451,19 @@ class Engine:
     def _preempt(self, i: int) -> None:
         """Reclaim row ``i``'s pages and requeue its request at the head of
         the queue (vLLM-style recompute preemption: generated tokens are
-        discarded; the greedy restart reproduces them bit-identically)."""
+        discarded; the greedy restart reproduces them bit-identically).
+
+        The admission clocks are reset along with the discarded tokens:
+        ``started_at``/``first_token_at`` belong to the aborted attempt, so
+        leaving them set would let a mid-flight reader (metrics scrape, the
+        disagg executor re-routing the request) report a TTFT for tokens
+        the user never kept.  The restart re-stamps both, which also keeps
+        ``enqueued_at <= started_at <= first_token_at <= finished_at``
+        monotone on the completion record."""
         r = self._slots[i].req
         r.result = None
+        r.started_at = 0.0
+        r.first_token_at = 0.0
         self._release_pages(i)
         self._slots[i] = None
         self._lengths[i] = 0
@@ -437,6 +492,97 @@ class Engine:
                     self._preempt(max(victims, key=lambda j:
                                       self._slot_seq[j]))
         return [i for i in survivors if self._slots[i] is not None]
+
+    # ------------------------------------------- disaggregated KV handoff
+    # (DESIGN.md §6.1-disagg) — both ends live here because the page pool,
+    # block tables, and free list are private to the engine (grep-guarded).
+
+    def extract_handoffs(self) -> List[KVHandoff]:
+        """Disagg prefill side: pop every resident row that has sampled at
+        least one token as a ``KVHandoff`` and release its local pages.
+
+        Driven after each ``step()`` of a prefill-role engine: a freshly
+        admitted row samples its first token and decodes it (writing its KV)
+        within that same step, so no row ever survives two steps here — the
+        prefill engine's pool only ever holds prompts mid-prefill.  The
+        gathered ``k``/``v`` are copies, which is what the simulated
+        transfer cost model charges for.
+        """
+        assert self.paged, "KV handoff requires the paged backend"
+        out: List[KVHandoff] = []
+        for i, s in enumerate(self._slots):
+            if s is None or not s.out:
+                continue
+            pages = jnp.asarray(self._row_pages[i], jnp.int32)
+            h = KVHandoff(
+                req=s.req, out=list(s.out), length=int(self._lengths[i]),
+                k=self._pools["k_pool"][:, pages],
+                v=self._pools["v_pool"][:, pages],
+                logits=self._logits[i], page_size=self.page_size)
+            self._release_pages(i)
+            self._slots[i] = None
+            self._lengths[i] = 0
+            self.stats.handoffs += 1
+            self.stats.handoff_bytes += h.kv_bytes
+            out.append(h)
+        return out
+
+    def accept_handoff(self, h: KVHandoff) -> bool:
+        """Disagg decode side: allocate pages for a handed-off request,
+        scatter its KV into this engine's pool, and install it in a free
+        slot with its prefill logits — decode resumes exactly where the
+        prefill engine stopped, so greedy outputs stay bit-identical to a
+        colocated paged engine.  Returns False (caller retries after a
+        completion) when no slot or not enough free pages are available.
+        """
+        assert self.paged and h.page_size == self.page_size
+        free_slots = [i for i, s in enumerate(self._slots) if s is None]
+        if not free_slots:
+            return False
+        resident = any(s is not None for s in self._slots)
+        usable = self._num_pages - 1
+        worst = self._pages(self._required(h.req))
+        if not resident:
+            # grow the pool while nothing is resident (mirror _admit_paged)
+            # so any single accepted handoff can always run to completion
+            if self._pools is None or worst > usable:
+                self._num_pages = max(self._num_pages, worst + 1)
+                usable = self._num_pages - 1
+                self._pools = None
+                self._logits = None
+                self._free_pages = list(range(1, self._num_pages))
+        elif worst > usable:
+            return False               # can never fit: wait for drain+growth
+        need = pages_for(h.length, self.page_size)
+        if need > len(self._free_pages):
+            return False
+        if self._pools is None:
+            self._pools = self._init_pools(self.cfg, self._num_pages,
+                                           self.page_size)
+            self._logits = jnp.zeros(
+                (self.max_batch, 1, h.logits.shape[-1]), h.logits.dtype)
+        i = free_slots[0]
+        pages = [self._free_pages.pop() for _ in range(need)]
+        phys = jnp.asarray(pages, jnp.int32)
+        self._pools = {
+            "k_pool": self._pools["k_pool"].at[:, phys].set(h.k[:, :need]),
+            "v_pool": self._pools["v_pool"].at[:, phys].set(h.v[:, :need])}
+        self._grow_block_tables(max(need, worst))
+        self._row_pages[i] = pages
+        self._block_tables[i, :] = 0
+        self._block_tables[i, :need] = pages
+        slot = _Slot(h.req)
+        slot.out = list(h.out)
+        self._slots[i] = slot
+        self._lengths[i] = h.length
+        self._slot_seq[i] = self._admit_seq
+        self._admit_seq += 1
+        self._logits = self._logits.at[i].set(h.logits)
+        self.stats.handoffs += 1
+        self.stats.handoff_bytes += h.kv_bytes
+        self.stats.peak_resident = max(self.stats.peak_resident,
+                                       self.active_slots())
+        return True
 
     # ------------------------------------------------------------ decode step
     def step(self) -> List[GenRequest]:

@@ -1,23 +1,62 @@
-"""EngineExecutor: the real-engine backend behind the Executor contract.
+"""Real-engine backends behind the Executor contract (DESIGN.md §6.1).
 
-Wraps the slot-based continuous-batching ``Engine`` (DESIGN.md §6.1) so the
-end-to-end driver in ``repro.launch.serve`` can treat real JAX inference
-and the simulated ``TokenBucketExecutor`` uniformly: KV-budget-aware
-``admit``, step-driven progress, a ``load()`` snapshot (active slots /
-queued tokens / KV headroom), and a completion callback carrying
-wall-clock start and first-token times.
+Two executors wrap real JAX inference so the end-to-end driver in
+``repro.launch.serve`` can treat it and the simulated token buckets
+uniformly:
 
-Unlike the simulated backend there is no ambient event loop: the engine
-runs in wall-clock time, so callers pump ``step()`` (one engine iteration:
-sample, retire, admit, decode) or ``drain()`` themselves.
+* ``EngineExecutor``       — one slot-based continuous-batching ``Engine``
+                             (optionally paged) running both phases.
+* ``DisaggEngineExecutor`` — disaggregated prefill/decode (DESIGN.md
+                             §6.1-disagg): a prefill-role and a decode-role
+                             paged ``Engine`` joined by page-granular KV
+                             handoff (``Engine.extract_handoffs`` /
+                             ``Engine.accept_handoff``); greedy outputs are
+                             bit-identical to a colocated paged engine.
+
+Both implement the same four-method contract as the simulated backends
+(see ``repro.sim.executor`` for the full contract description):
+``admit(item) -> bool``, ``load() -> ExecutorLoad``,
+``estimate(prompt, output) -> seconds``, and ``bind(loop, on_complete)``
+with the completion callback receiving ``(item, started_at,
+first_token_at)``.
+
+Minimal usage example (wall-clock: the caller pumps steps)::
+
+    from repro.serving import Engine, EngineExecutor
+
+    ex = EngineExecutor(Engine(cfg, params, max_batch=4))
+    done = []
+    ex.bind(None, lambda req, started, first_tok: done.append(req))
+    assert ex.admit(GenRequest(rid="r0", tokens=prompt, max_new=16))
+    while ex.has_work():
+        ex.step()          # one iteration: sample, retire, admit, decode
+
+Unlike the simulated backends there is no ambient event loop: the engines
+run in wall-clock time, so callers pump ``step()`` or ``drain()``
+themselves (the serving driver does this round-robin across nodes).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from dataclasses import replace
+from typing import Dict, List, Optional
 
-from repro.serving.engine import Engine, GenRequest
-from repro.sim.executor import Executor, ExecutorLoad, paged_admit_ok
+from repro.serving.engine import Engine, EngineStats, GenRequest, KVHandoff
+from repro.sim.executor import (Executor, ExecutorLoad, paged_admit_ok,
+                                pages_for)
+
+
+def _pending_gate(snap: Dict[str, int], item: GenRequest,
+                  max_pending_tokens: Optional[int]) -> bool:
+    """Shared admission backpressure: True when the queued-but-unstarted
+    token backlog (plus this request) still fits ``max_pending_tokens``
+    (None = unbounded; an empty queue always admits)."""
+    if max_pending_tokens is None:
+        return True
+    pending = snap["queued_prompt_tokens"] + snap["queued_new_tokens"]
+    return (snap["queued_streams"] == 0
+            or pending + len(item.tokens) + item.max_new
+            <= max_pending_tokens)
 
 
 class EngineExecutor(Executor):
@@ -50,13 +89,8 @@ class EngineExecutor(Executor):
                 if not paged_admit_ok(snap["free_pages"], len(item.tokens),
                                       snap["page_size"], resident=resident):
                     return False
-            if self.max_pending_tokens is not None:
-                pending = (snap["queued_prompt_tokens"]
-                           + snap["queued_new_tokens"])
-                if (snap["queued_streams"] > 0
-                        and pending + len(item.tokens) + item.max_new
-                        > self.max_pending_tokens):
-                    return False
+            if not _pending_gate(snap, item, self.max_pending_tokens):
+                return False
         self.engine.submit(item)
         return True
 
@@ -86,6 +120,13 @@ class EngineExecutor(Executor):
         return t
 
     # ---------------------------------------------------------------- driving
+    def has_work(self) -> bool:
+        return self.engine.has_work()
+
+    def engine_stats(self) -> EngineStats:
+        """Aggregate engine counters (uniform across executor flavors)."""
+        return self.engine.stats
+
     def step(self) -> List[GenRequest]:
         finished = self.engine.step()
         for r in finished:
@@ -96,5 +137,142 @@ class EngineExecutor(Executor):
     def drain(self) -> List[GenRequest]:
         done: List[GenRequest] = []
         while self.engine.has_work():
+            done.extend(self.step())
+        return done
+
+
+class DisaggEngineExecutor(Executor):
+    """Disaggregated prefill/decode over two paged engines (DESIGN.md
+    §6.1-disagg).
+
+    The **prefill engine** admits queued requests, runs their prompt
+    prefill, samples the first output token (disagg serves TTFT from the
+    prefill node), and decodes that token once so its KV is in pages; each
+    such row is then popped as a ``KVHandoff`` — a page-granular copy of
+    its KV plus the next-token logits — freeing the prefill pool for the
+    next prompts.  Handoffs land FIFO on the **decode engine**
+    (``Engine.accept_handoff``), which scatters the pages into its own
+    pool and resumes decoding exactly where the prefill engine stopped, so
+    greedy outputs are bit-identical to a colocated ``Engine(paged=True)``.
+
+    Admission reserves the prompt's pages against the *decode* pool
+    (DistServe-style: a transfer you can never land is wasted work), using
+    the same ``paged_admit_ok`` rule as the simulated
+    ``DisaggTokenBucketExecutor``, so sim and engine admission decisions
+    agree on identical page budgets.  Decode-side preemptions (LIFO, pool
+    pressure) are routed back through the prefill engine for a recompute
+    handoff rather than letting the decode engine re-prefill them itself.
+    """
+
+    def __init__(self, prefill_engine: Engine, decode_engine: Engine,
+                 max_pending_tokens: Optional[int] = None) -> None:
+        if not (prefill_engine.paged and decode_engine.paged):
+            raise ValueError("disaggregation requires two paged engines")
+        if prefill_engine.page_size != decode_engine.page_size:
+            raise ValueError("prefill/decode page_size mismatch")
+        self.prefill = prefill_engine
+        self.decode = decode_engine
+        self.page_size = decode_engine.page_size
+        self.max_pending_tokens = max_pending_tokens
+        self._pending: List[KVHandoff] = []      # extracted, not yet landed
+        self._reserved: Dict[str, int] = {}      # rid -> decode pages held
+        self._loop = None
+        self._on_complete = None
+
+    # ------------------------------------------------------------- interface
+    @property
+    def n_active(self) -> int:
+        return self.prefill.active_slots() + self.decode.active_slots()
+
+    def admit(self, item: GenRequest) -> bool:
+        snap = self.decode.load_snapshot()
+        free_eff = snap["free_pages"] - sum(self._reserved.values())
+        resident = (snap["active_streams"] + snap["queued_streams"] > 0
+                    or bool(self._reserved))
+        if not paged_admit_ok(free_eff, len(item.tokens), self.page_size,
+                              resident=resident):
+            return False
+        if self.max_pending_tokens is not None and not _pending_gate(
+                self.prefill.load_snapshot(), item, self.max_pending_tokens):
+            return False
+        self._reserved[item.rid] = pages_for(len(item.tokens), self.page_size)
+        self.prefill.submit(item)
+        return True
+
+    def load(self) -> ExecutorLoad:
+        ps = self.prefill.load_snapshot()
+        ds = self.decode.load_snapshot()
+        return ExecutorLoad(
+            active_streams=ps["active_streams"] + ds["active_streams"],
+            queued_streams=ps["queued_streams"] + ds["queued_streams"],
+            pending_prefill_tokens=ps["queued_prompt_tokens"],
+            pending_decode_tokens=(
+                ds["pending_decode_tokens"] + ds["queued_new_tokens"]
+                + ps["pending_decode_tokens"] + ps["queued_new_tokens"]
+                + sum(h.req.max_new - len(h.out) for h in self._pending)),
+            kv_used=ds["kv_used"], kv_budget=ds["kv_budget"],
+            pages_used=ds["pages_used"], pages_total=ds["pages_total"],
+            prefill_kv_used=ps["kv_used"], prefill_kv_budget=ps["kv_budget"],
+            transfer_inflight=len(self._pending))
+
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        """Phase-split estimate: prompt at the prefill engine's measured
+        prefill rate, output at the decode engine's measured decode rate
+        (the page scatter/gather of the handoff itself rides inside those
+        walls)."""
+        dst = self.decode.stats
+        if dst.decode_tokens == 0 or dst.decode_wall_s <= 0:
+            return float("inf")      # no calibration data yet: probe-unknown
+        t = output_tokens / (dst.decode_tokens / dst.decode_wall_s)
+        pst = self.prefill.stats
+        if pst.prefill_tokens > 0 and pst.prefill_wall_s > 0:
+            t += prompt_tokens / (pst.prefill_tokens / pst.prefill_wall_s)
+        return t
+
+    # ---------------------------------------------------------------- driving
+    def has_work(self) -> bool:
+        return (self.prefill.has_work() or self.decode.has_work()
+                or bool(self._pending))
+
+    def engine_stats(self) -> EngineStats:
+        """Both engines' counters summed (peaks maxed) — the uniform view
+        the serving driver prints."""
+        a, b = self.prefill.stats, self.decode.stats
+        return replace(
+            EngineStats(**{f: getattr(a, f) + getattr(b, f)
+                           for f in EngineStats.__dataclass_fields__}),
+            peak_resident=max(a.peak_resident, b.peak_resident),
+            # a handoff is one transfer even though both ends count it
+            handoffs=a.handoffs, handoff_bytes=a.handoff_bytes)
+
+    def step(self) -> List[GenRequest]:
+        """One disagg iteration: pump the prefill engine, extract and land
+        handoffs, pump the decode engine, and route decode-side
+        preemptions back to the prefill side."""
+        finished: List[GenRequest] = []
+        if self.prefill.has_work():
+            finished.extend(self.prefill.step())   # may finish on prefill
+        self._pending.extend(self.prefill.extract_handoffs())
+        while self._pending and self.decode.accept_handoff(self._pending[0]):
+            h = self._pending.pop(0)
+            self._reserved.pop(h.req.rid, None)    # reservation -> real pages
+        if self.decode.has_work():
+            finished.extend(self.decode.step())
+        # decode-pool preemptions recompute via the prefill side, with the
+        # decode pages they will need again re-reserved; reversed because
+        # requeue() head-inserts — the oldest victim must end up first so
+        # the LIFO policy's "oldest admission makes progress" is preserved
+        for r in reversed(self.decode.take_queued()):
+            self._reserved[r.rid] = pages_for(len(r.tokens), self.page_size)
+            self.prefill.requeue(r)
+        for r in finished:
+            self._reserved.pop(r.rid, None)        # incl. finished-on-prefill
+            if self._on_complete is not None:
+                self._on_complete(r, r.started_at, r.first_token_at)
+        return finished
+
+    def drain(self) -> List[GenRequest]:
+        done: List[GenRequest] = []
+        while self.has_work():
             done.extend(self.step())
         return done

@@ -1,5 +1,6 @@
 from repro.sim.events import EventLoop
-from repro.sim.executor import Executor, ExecutorLoad, TokenBucketExecutor
+from repro.sim.executor import (DisaggTokenBucketExecutor, Executor,
+                                ExecutorLoad, TokenBucketExecutor)
 from repro.sim.metrics import CompletedRequest, MetricsCollector
 from repro.sim.servicemodel import BackendProfile, make_profile
 from repro.sim.workload import (ArrivalPhase, Request, WorkloadSpec,
@@ -7,7 +8,7 @@ from repro.sim.workload import (ArrivalPhase, Request, WorkloadSpec,
 
 __all__ = [
     "EventLoop", "Executor", "ExecutorLoad", "TokenBucketExecutor",
-    "CompletedRequest", "MetricsCollector", "BackendProfile",
-    "make_profile", "ArrivalPhase", "Request", "WorkloadSpec",
-    "make_requests", "two_phase", "uniform_phases",
+    "DisaggTokenBucketExecutor", "CompletedRequest", "MetricsCollector",
+    "BackendProfile", "make_profile", "ArrivalPhase", "Request",
+    "WorkloadSpec", "make_requests", "two_phase", "uniform_phases",
 ]

@@ -3,32 +3,64 @@
 The paper's nodes run vLLM/SGLang-style continuous-batching engines, so the
 latency a request sees depends on the *time-varying* batch it shares the
 accelerator with — not on a share frozen at admission.  This module defines
-the Executor contract both backends implement (DESIGN.md §6.1):
+the Executor contract every backend implements (DESIGN.md §6.1).
 
-* ``Executor``            — ``admit(item) -> bool`` (KV-budget gated),
-                            progress driven by events or steps, a ``load()``
-                            snapshot, and a completion callback that carries
-                            start/first-token times (TTFT, queue wait).
-* ``TokenBucketExecutor`` — the simulated backend: token-level prefill then
-                            decode progress integrated piecewise-linearly by
-                            the ``EventLoop``, with the decode share
-                            recomputed on every membership change and
-                            admission gated by a KV *token* budget rather
-                            than a stream count.  At steady state (constant
-                            occupancy) it reproduces the analytic
-                            ``BackendProfile.service_time`` exactly; under
-                            bursts and churn, in-flight requests slow down
-                            and speed up as the batch shifts.  With
-                            ``page_size`` set, admission switches to the
-                            page-granularity rule shared with the real
-                            paged engine (``paged_admit_ok``): prompt pages
-                            must fit the free pool, decode pages accrue
-                            with generation progress.  The sim does not
-                            model preemption — transient over-occupancy
-                            simply shows up as zero page headroom.
+The Executor contract
+---------------------
 
-The real-engine counterpart (``EngineExecutor``, slot-based continuous
-batching over the JAX ``Engine``) lives in ``repro.serving.executor``.
+An ``Executor`` is what a Node's Model Manager holds instead of an analytic
+service-time formula:
+
+* ``admit(item) -> bool``   — start executing ``item`` now if KV headroom
+                              allows; ``False`` means "try again after a
+                              completion" (the caller keeps it queued).
+* ``load() -> ExecutorLoad``— point-in-time occupancy snapshot (streams,
+                              remaining tokens per phase, KV/page budgets)
+                              used by routing, probing, and rebalancing.
+* ``estimate(p, o) -> s``   — expected service seconds for a hypothetical
+                              (prompt, output) request admitted now.
+* ``bind(loop, on_complete)``— attach the driving clock (an ``EventLoop``,
+                              or ``None`` for wall-clock backends) and a
+                              completion callback; the callback receives
+                              ``(item, started_at, first_token_at)`` so the
+                              caller can derive queue wait and TTFT.
+
+Minimal usage example (simulated backend on a bare event loop)::
+
+    from repro.sim import EventLoop, TokenBucketExecutor, make_profile
+
+    loop, done = EventLoop(), []
+    ex = TokenBucketExecutor(make_profile())
+    ex.bind(loop, lambda item, started, first_tok: done.append(item))
+    assert ex.admit(queued_request)      # False = KV headroom exhausted
+    loop.run()                           # event-driven progress -> callback
+    ex.load().kv_headroom                # snapshot for routing/probing
+
+Backends in this module:
+
+* ``TokenBucketExecutor``       — simulated continuous batching: token-level
+  prefill then decode progress integrated piecewise-linearly by the
+  ``EventLoop``, decode share recomputed on every membership change,
+  admission gated by a KV *token* budget rather than a stream count.  At
+  steady state (constant occupancy) it reproduces the analytic
+  ``BackendProfile.service_time`` exactly; under bursts and churn,
+  in-flight requests slow down and speed up as the batch shifts.  With
+  ``page_size`` set, admission switches to the page-granularity rule
+  shared with the real paged engine (``paged_admit_ok``): prompt pages
+  must fit the free pool, decode pages accrue with generation progress.
+  The sim does not model preemption — transient over-occupancy simply
+  shows up as zero page headroom.
+* ``DisaggTokenBucketExecutor`` — simulated disaggregated prefill/decode
+  (DESIGN.md §6.1-disagg): a prefill-only and a decode-only token bucket
+  joined by an explicit KV-transfer cost model
+  (``bytes = prompt_len * kv_bytes_per_token``, latency charged before
+  decode admission).  Admission reserves the prompt's decode-side pages
+  so every accepted transfer can eventually land.
+
+The real-engine counterparts (``EngineExecutor``, slot-based continuous
+batching over the JAX ``Engine``, and ``DisaggEngineExecutor``, a paired
+prefill/decode engine with page-granular KV handoff) live in
+``repro.serving.executor``.
 
 This module (plus ``servicemodel``) is the only sanctioned caller of
 ``BackendProfile.service_time`` — a grep-guard in ``tests/test_compat.py``
@@ -42,7 +74,9 @@ from dataclasses import dataclass
 from typing import Any, Callable, List, Optional
 
 from repro.sim.events import EventLoop
-from repro.sim.servicemodel import KV_TOKENS_PER_STREAM, BackendProfile
+from repro.sim.servicemodel import (KV_BYTES_PER_TOKEN, KV_TOKENS_PER_STREAM,
+                                    TRANSFER_BASE_S, TRANSFER_BYTES_PER_S,
+                                    BackendProfile)
 
 # completion callback: (item, started_at, first_token_at) in sim/wall time
 CompletionFn = Callable[[Any, float, float], None]
@@ -78,6 +112,16 @@ class ExecutorLoad:
     are *remaining* work; ``kv_used``/``kv_budget`` express KV-memory
     pressure in tokens.  Paged backends additionally report page-pool
     occupancy (``pages_total`` stays 0 for contiguous backends).
+
+    Disaggregated backends (DESIGN.md §6.1-disagg) split the budgets by
+    phase: ``kv_used``/``kv_budget``/``pages_*`` track the *decode* pool
+    (where KV lives long-term), ``prefill_kv_used``/``prefill_kv_budget``
+    the prefill pool, and ``transfer_inflight`` counts streams handed off
+    but not yet decode-admitted.  Colocated backends leave
+    ``prefill_kv_budget`` at 0, so ``prefill_headroom`` and
+    ``decode_headroom`` both collapse to ``kv_headroom`` — phase-aware
+    dispatch (``Network._phase_pressure``) reads the two headrooms without
+    caring which backend produced them.
     """
 
     active_streams: int
@@ -88,6 +132,9 @@ class ExecutorLoad:
     kv_budget: int
     pages_used: int = 0
     pages_total: int = 0
+    prefill_kv_used: int = 0
+    prefill_kv_budget: int = 0   # 0 = colocated: both phases share kv_budget
+    transfer_inflight: int = 0   # disagg: handed off, not yet decode-admitted
 
     @property
     def kv_headroom(self) -> float:
@@ -102,6 +149,24 @@ class ExecutorLoad:
         if self.pages_total <= 0:
             return 1.0
         return max(0.0, 1.0 - self.pages_used / self.pages_total)
+
+    @property
+    def prefill_headroom(self) -> float:
+        """Free fraction of the prefill-phase KV budget, in [0, 1].
+
+        Colocated backends share one pool across phases, so this equals
+        ``kv_headroom``; disaggregated backends report their dedicated
+        prefill pool."""
+        if self.prefill_kv_budget <= 0:
+            return self.kv_headroom
+        return max(0.0, 1.0 - self.prefill_kv_used / self.prefill_kv_budget)
+
+    @property
+    def decode_headroom(self) -> float:
+        """Free fraction of the decode-phase KV budget, in [0, 1]
+        (``kv_used``/``kv_budget`` track the decode pool for disaggregated
+        backends, the shared pool for colocated ones)."""
+        return self.kv_headroom
 
 
 class Executor(ABC):
@@ -295,6 +360,256 @@ class TokenBucketExecutor(Executor):
         for s in done:
             self._on_complete(s.item, s.started_at,
                               s.first_token_at or self._loop.now)
+
+    def _on_boundary(self) -> None:
+        self._pending_ev = None
+        self._advance()
+        self._reschedule()
+
+
+class DisaggTokenBucketExecutor(Executor):
+    """Simulated disaggregated prefill/decode backend (DESIGN.md §6.1-disagg).
+
+    A prefill-only and a decode-only token bucket joined by an explicit
+    KV-transfer cost model.  A request moves through four stages:
+
+    1. **prefill** — prompt tokens at ``prefill_profile.prefill_tps``
+       (unshared, like the colocated backend); its prompt's KV occupies the
+       *prefill* pool.  The first output token is emitted by the prefill
+       side the instant prefill finishes (``first_token_at``), mirroring
+       the real ``DisaggEngineExecutor``.
+    2. **transfer** — the populated KV leaves the prefill pool (the copy
+       frees it) and crosses the wire:
+       ``transfer_s = transfer_base_s + prompt_len * kv_bytes_per_token /
+       transfer_bytes_per_s``.
+    3. **handoff queue** — landed transfers wait FIFO for decode-side
+       admission (head-of-line blocking keeps sim and engine agreement
+       deterministic).
+    4. **decode** — output tokens at ``profile.decode_tps / share`` with
+       the share recomputed on every decode-membership change, exactly as
+       in ``TokenBucketExecutor``.
+
+    Admission gates on **both** pools: the prompt's pages (tokens) must fit
+    the free prefill pool next to the prompts currently prefilling, and its
+    decode-side pages must fit the decode pool after subtracting the
+    reservations of every earlier-admitted stream still staging (prefill /
+    transfer / handoff) — so every accepted transfer can eventually land
+    (DistServe-style decode-capacity reservation).  With ``page_size`` set
+    both gates use ``paged_admit_ok``, the same rule the real engines
+    apply, so sim and engine admission decisions agree on identical
+    budgets.
+
+    Like the colocated ``TokenBucketExecutor``, the sim does not model
+    decode-side preemption: landing charges prompt pages only, and a
+    stream's page holdings then grow with decode progress, so the decode
+    pool can transiently over-occupy under pressure where the real engine
+    would preempt — that shows up as zero decode headroom (clamped), not
+    as an error.
+    """
+
+    def __init__(self, profile: BackendProfile,
+                 prefill_profile: Optional[BackendProfile] = None, *,
+                 page_size: Optional[int] = None,
+                 kv_bytes_per_token: int = KV_BYTES_PER_TOKEN,
+                 transfer_bytes_per_s: float = TRANSFER_BYTES_PER_S,
+                 transfer_base_s: float = TRANSFER_BASE_S) -> None:
+        self.profile = profile                       # decode side
+        self.prefill_profile = prefill_profile or profile
+        self.decode_budget = int(getattr(profile, "kv_token_budget", 0)
+                                 or profile.max_concurrency
+                                 * KV_TOKENS_PER_STREAM)
+        self.prefill_budget = int(
+            getattr(self.prefill_profile, "kv_token_budget", 0)
+            or self.prefill_profile.max_concurrency * KV_TOKENS_PER_STREAM)
+        self.page_size = page_size
+        self.decode_pages_total = (self.decode_budget // page_size
+                                   if page_size else 0)
+        self.prefill_pages_total = (self.prefill_budget // page_size
+                                    if page_size else 0)
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.transfer_bytes_per_s = transfer_bytes_per_s
+        self.transfer_base_s = transfer_base_s
+        self._prefill: List[_Stream] = []
+        self._transfers: List[_Stream] = []    # on the wire
+        self._handoffs: List[_Stream] = []     # landed, awaiting admission
+        self._decode: List[_Stream] = []
+        self._last_t = 0.0
+        self._pending_ev = None
+        self._loop: Optional[EventLoop] = None
+        self._on_complete: Optional[CompletionFn] = None
+
+    def transfer_s(self, prompt_tokens: int) -> float:
+        """Wire time for one handoff: base cost + KV bytes over the link."""
+        return (self.transfer_base_s + max(1, prompt_tokens)
+                * self.kv_bytes_per_token / self.transfer_bytes_per_s)
+
+    # ------------------------------------------------------------- interface
+    @property
+    def n_active(self) -> int:
+        return len(self._prefill) + len(self._decode)
+
+    def _staging(self) -> List[_Stream]:
+        """Streams admitted but not yet decoding — they hold decode-side
+        reservations (prompt pages) so their transfer can always land."""
+        return self._prefill + self._transfers + self._handoffs
+
+    def _decode_pages_used(self) -> int:
+        return sum(pages_for(s.tokens_held(), self.page_size)
+                   for s in self._decode)
+
+    def _prefill_pages_used(self) -> int:
+        return sum(pages_for(s.prompt_total, self.page_size)
+                   for s in self._prefill)
+
+    def admit(self, item: Any) -> bool:
+        qr = item
+        self._advance()
+        p, o = qr.req.prompt_tokens, qr.req.output_tokens
+        staging = self._staging()
+        if self.page_size:
+            pre_free = self.prefill_pages_total - self._prefill_pages_used()
+            if not paged_admit_ok(pre_free, p, self.page_size,
+                                  resident=bool(self._prefill)):
+                return False
+            reserved = sum(pages_for(s.prompt_total, self.page_size)
+                           for s in staging)
+            free_eff = (self.decode_pages_total - self._decode_pages_used()
+                        - reserved)
+            if not paged_admit_ok(free_eff, p, self.page_size,
+                                  resident=bool(self._decode)
+                                  or bool(staging)):
+                return False
+        else:
+            pre_used = sum(s.prompt_total for s in self._prefill)
+            if self._prefill and pre_used + max(1, p) > self.prefill_budget:
+                return False
+            kv = max(1, p) + max(1, o)
+            used = sum(s.kv_tokens for s in self._decode)
+            reserved = sum(s.kv_tokens for s in staging)
+            if ((self._decode or staging)
+                    and used + reserved + kv > self.decode_budget):
+                return False
+        self._prefill.append(_Stream(qr, p, o, self._loop.now))
+        self._reschedule()
+        return True
+
+    def load(self) -> ExecutorLoad:
+        self._advance()
+        wire = self._transfers + self._handoffs
+        if self.page_size:
+            pre_used = self._prefill_pages_used() * self.page_size
+            pre_budget = self.prefill_pages_total * self.page_size
+            pages_used = self._decode_pages_used()
+            kv_used = pages_used * self.page_size
+            kv_budget = self.decode_pages_total * self.page_size
+        else:
+            pre_used = sum(s.prompt_total for s in self._prefill)
+            pre_budget = self.prefill_budget
+            pages_used = 0
+            kv_used = sum(s.kv_tokens for s in self._decode)
+            kv_budget = self.decode_budget
+        return ExecutorLoad(
+            active_streams=len(self._prefill) + len(self._decode),
+            queued_streams=0,
+            pending_prefill_tokens=int(sum(s.prompt_left
+                                           for s in self._prefill)),
+            pending_decode_tokens=int(sum(s.output_left for s in self._decode)
+                                      + sum(s.output_total for s in wire)),
+            kv_used=kv_used,
+            kv_budget=kv_budget,
+            pages_used=pages_used,
+            pages_total=self.decode_pages_total,
+            prefill_kv_used=pre_used,
+            prefill_kv_budget=pre_budget,
+            transfer_inflight=len(wire))
+
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        share = max(1.0, (len(self._decode) + 1) / self.profile.saturation)
+        return (prompt_tokens / self.prefill_profile.prefill_tps
+                + self.transfer_s(prompt_tokens)
+                + output_tokens / (self.profile.decode_tps / share))
+
+    # -------------------------------------------------------------- dynamics
+    def _decode_rate(self) -> float:
+        share = max(1.0, len(self._decode) / self.profile.saturation)
+        return self.profile.decode_tps / share
+
+    def _advance(self) -> None:
+        now = self._loop.now
+        dt = now - self._last_t
+        self._last_t = now
+        if dt <= 0.0:
+            return
+        for s in self._prefill:
+            s.prompt_left -= self.prefill_profile.prefill_tps * dt
+        if self._decode:
+            dec = self._decode_rate()
+            for s in self._decode:
+                s.output_left -= dec * dt
+
+    def _admit_decode(self) -> None:
+        """Land waiting handoffs FIFO while the decode pool takes them."""
+        moved = False
+        while self._handoffs:
+            s = self._handoffs[0]
+            if self.page_size:
+                free = self.decode_pages_total - self._decode_pages_used()
+                if not paged_admit_ok(free, s.prompt_total, self.page_size,
+                                      resident=bool(self._decode)):
+                    break
+            else:
+                used = sum(d.kv_tokens for d in self._decode)
+                if self._decode and used + s.kv_tokens > self.decode_budget:
+                    break
+            self._handoffs.pop(0)
+            s.decoding = True
+            self._decode.append(s)
+            moved = True
+        if moved:
+            self._reschedule()
+
+    def _on_transfer_landed(self, s: _Stream) -> None:
+        self._advance()
+        self._transfers.remove(s)
+        self._handoffs.append(s)
+        self._admit_decode()
+
+    def _reschedule(self) -> None:
+        """Flip phase boundaries that are (numerically) due, then point one
+        event at the earliest remaining boundary.  Mirrors
+        ``TokenBucketExecutor._reschedule``; the extra boundary here is
+        prefill completion, which emits the first token and starts the
+        KV transfer (the copy frees the prefill pool)."""
+        now = self._loop.now
+        handed = [s for s in self._prefill if s.prompt_left <= _EPS]
+        for s in handed:
+            self._prefill.remove(s)
+            s.prompt_left = 0.0
+            s.first_token_at = now
+            self._transfers.append(s)
+            self._loop.schedule(self.transfer_s(s.prompt_total),
+                                lambda s=s: self._on_transfer_landed(s))
+        done = [s for s in self._decode if s.output_left <= _EPS]
+        for s in done:
+            self._decode.remove(s)
+        if self._pending_ev is not None:
+            self._loop.cancel(self._pending_ev)
+            self._pending_ev = None
+        dts = [s.prompt_left / self.prefill_profile.prefill_tps
+               for s in self._prefill]
+        if self._decode:
+            dec = self._decode_rate()
+            dts += [s.output_left / dec for s in self._decode]
+        if dts:
+            self._pending_ev = self._loop.schedule(max(0.0, min(dts)),
+                                                   self._on_boundary)
+        if done:
+            # freed decode capacity lands waiting handoffs before the
+            # completion callbacks re-enter admit() (node queue refill)
+            self._admit_decode()
+            for s in done:
+                self._on_complete(s.item, s.started_at,
+                                  s.first_token_at or now)
 
     def _on_boundary(self) -> None:
         self._pending_ev = None

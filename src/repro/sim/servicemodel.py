@@ -45,6 +45,15 @@ REF_SATURATION = 24        # streams before decode throughput is shared
 # into tokens at the paper workload's mean footprint (~512 prompt + ~5k output)
 KV_TOKENS_PER_STREAM = 6144
 
+# --- disaggregated prefill/decode transfer cost (DESIGN.md §6.1-disagg) -----
+# KV bytes per token for the reference model (Qwen3-8B bf16: K+V tensors x
+# 36 layers x 8 KV heads x 128 head_dim x 2 bytes/elem)
+KV_BYTES_PER_TOKEN = 2 * 36 * 8 * 128 * 2              # 147456 B/token
+# effective inter-node KV link (10 Gb/s datacenter ethernet) plus a fixed
+# per-handoff setup cost (connection + block-table metadata)
+TRANSFER_BYTES_PER_S = 1.25e9
+TRANSFER_BASE_S = 0.002
+
 
 @dataclass(frozen=True)
 class BackendProfile:

@@ -128,6 +128,23 @@ class TestBenchSchema:
         with pytest.raises(AssertionError):
             check_bench_schema(payload)
 
+    def test_schema_checker_rejects_mix_drift(self):
+        """Schema 3 pins the disagg-vs-colocated mixed-workload section."""
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        assert payload["schema"] == 3
+        assert "ttft_speedup_prompt_heavy" in payload["mix"]
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        del broken["mix"]["disagg"]["handoffs"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        del broken["mix"]["slot"]["avg_ttft_prompt_heavy_s"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+
 
 # ---------------------------------------------------------------------------
 # 2. meshenv — legacy (0.4.x) path

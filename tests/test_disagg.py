@@ -1,0 +1,556 @@
+"""Disaggregated prefill/decode executors (DESIGN.md §6.1-disagg).
+
+Five families of tests:
+
+1.  Sim analytics — ``DisaggTokenBucketExecutor`` reduces to
+    prefill + transfer + decode exactly for a lone stream, the transfer
+    cost model charges ``bytes = prompt_len * kv_bytes_per_token``, and
+    the load snapshot splits prefill from decode headroom.
+2.  Engine parity — ``DisaggEngineExecutor`` greedy outputs are
+    bit-identical to the colocated ``Engine(paged=True)`` (and therefore
+    to slot batching), property-tested over random workloads and pool
+    geometries, including decode-pool preemption round-trips through the
+    prefill engine.
+3.  Handoff accounting — pages claimed by the prefill side and released
+    to the decode side conserve both pool totals under churn, in the sim
+    (property test, incl. ``go_offline`` mid-handoff) and in the engine
+    (per-step conservation on both pools).
+4.  Sim-vs-engine agreement — identical admit/deny sequences on identical
+    decode-page budgets (both gate through ``paged_admit_ok`` with
+    decode-side reservations).
+5.  Preemption clocks — ``Engine._preempt`` resets the TTFT clock of the
+    requeued request, and completed-request timestamps stay monotone
+    (enqueued <= started <= first token <= finished) through preemption in
+    both the colocated paged executor and the disagg pair.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Network, Node, NodePolicy
+from repro.core.node import QueuedRequest
+from repro.sim import (BackendProfile, DisaggTokenBucketExecutor, EventLoop,
+                       make_profile)
+from repro.sim.executor import pages_for
+from repro.sim.workload import Request
+
+
+def _qr(rid, prompt, output, t=0.0):
+    return QueuedRequest(
+        Request(rid=rid, origin="n", arrival=t, prompt_tokens=prompt,
+                output_tokens=output, slo_s=600.0),
+        enqueue_time=t, delegated=False, origin_node="n")
+
+
+class _Harness:
+    """A DisaggTokenBucketExecutor on a bare loop, recording completions."""
+
+    def __init__(self, profile, prefill_profile=None, **kw):
+        self.loop = EventLoop()
+        self.ex = DisaggTokenBucketExecutor(profile, prefill_profile, **kw)
+        self.done = {}
+        self.ex.bind(self.loop, self._cb)
+
+    def _cb(self, qr, started_at, first_token_at):
+        self.done[qr.req.rid] = dict(finish=self.loop.now,
+                                     started=started_at,
+                                     first_token=first_token_at)
+
+
+PROF = BackendProfile(prefill_tps=1e4, decode_tps=100.0, saturation=2,
+                      max_concurrency=8, quality=0.5, kv_token_budget=4096)
+
+
+# ---------------------------------------------------------------------------
+# 1. sim analytics
+# ---------------------------------------------------------------------------
+
+class TestDisaggSimAnalytics:
+    def test_single_request_is_prefill_plus_transfer_plus_decode(self):
+        h = _Harness(PROF)
+        assert h.ex.admit(_qr("a", 200, 500))
+        h.loop.run()
+        expected = (200 / PROF.prefill_tps + h.ex.transfer_s(200)
+                    + 500 / PROF.decode_tps)
+        rec = h.done["a"]
+        assert rec["finish"] == pytest.approx(expected, rel=1e-6)
+        # the prefill side emits the first token the moment prefill ends
+        assert rec["first_token"] == pytest.approx(200 / PROF.prefill_tps,
+                                                   rel=1e-6)
+        assert rec["started"] <= rec["first_token"] <= rec["finish"]
+
+    def test_transfer_cost_scales_with_prompt_bytes(self):
+        ex = DisaggTokenBucketExecutor(PROF, kv_bytes_per_token=1000,
+                                       transfer_bytes_per_s=1e6,
+                                       transfer_base_s=0.5)
+        # 2000 tokens * 1000 B / 1e6 B/s = 2 s on the wire + 0.5 s base
+        assert ex.transfer_s(2000) == pytest.approx(2.5)
+        assert ex.estimate(2000, 100) == pytest.approx(
+            2000 / PROF.prefill_tps + 2.5 + 100 / PROF.decode_tps)
+
+    def test_decode_share_recomputed_like_colocated(self):
+        """k identical streams land on the decode side together and share
+        decode throughput past the knee, exactly as colocated batching."""
+        h = _Harness(PROF)
+        k = 2 * PROF.saturation
+        for i in range(k):
+            assert h.ex.admit(_qr(f"r{i}", 100, 400))
+        h.loop.run()
+        expected = (100 / PROF.prefill_tps + h.ex.transfer_s(100)
+                    + 400 / (PROF.decode_tps / 2.0))       # share = 2
+        for rec in h.done.values():
+            assert rec["finish"] == pytest.approx(expected, rel=1e-6)
+
+    def test_load_splits_prefill_from_decode_headroom(self):
+        h = _Harness(PROF)
+        assert h.ex.admit(_qr("a", 1000, 1000))
+        ld = h.ex.load()                                  # mid-prefill
+        assert ld.prefill_kv_used == 1000
+        assert ld.prefill_headroom < 1.0
+        assert ld.kv_used == 0 and ld.decode_headroom == 1.0
+        h.loop.run(until=0.2)                             # on the wire
+        ld = h.ex.load()
+        assert ld.transfer_inflight == 1
+        assert ld.prefill_kv_used == 0                    # copy freed it
+        h.loop.run(until=5.0)                             # mid-decode
+        ld = h.ex.load()
+        assert ld.transfer_inflight == 0
+        assert ld.kv_used == 2000 and ld.decode_headroom < 1.0
+        assert ld.prefill_headroom == 1.0
+        h.loop.run()
+        assert h.ex.load().kv_used == 0
+
+    def test_oversized_request_admitted_when_empty(self):
+        h = _Harness(PROF)
+        assert h.ex.admit(_qr("huge", 8000, 8000))        # kv 16000 > 4096
+        h.loop.run()
+        assert "huge" in h.done
+
+
+# ---------------------------------------------------------------------------
+# 2. real-engine parity
+# ---------------------------------------------------------------------------
+
+_MODEL_CACHE = {}
+
+
+def _smoke_model():
+    if "cp" not in _MODEL_CACHE:
+        import jax
+        from repro.configs import get_config
+        from repro.models import registry
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        _MODEL_CACHE["cp"] = (cfg, registry.init(jax.random.PRNGKey(0), cfg))
+    return _MODEL_CACHE["cp"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _smoke_model()
+
+
+def _mk_reqs(seed, n=4, max_prompt=24, max_new_hi=10):
+    from repro.serving import GenRequest
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(5, max_prompt + 1))
+        out.append(GenRequest(
+            rid=f"r{i}",
+            tokens=rng.integers(2, 400, size=plen).astype(np.int32),
+            max_new=int(rng.integers(2, max_new_hi + 1))))
+    return out
+
+
+def _drain_disagg(ex, reqs):
+    """Admit with retries (the reservation gate may push back) and drain."""
+    done = []
+    ex.bind(None, lambda r, st_, ft: done.append(r))
+    pending = list(reqs)
+    while pending or ex.has_work():
+        while pending and ex.admit(pending[0]):
+            pending.pop(0)
+        ex.step()
+    return done
+
+
+def _results_by_rid(reqs):
+    return {r.rid: np.asarray(r.result) for r in reqs}
+
+
+class TestDisaggEngineParity:
+    def test_disagg_matches_colocated_paged(self, setup):
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = setup
+        ref = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(11)))
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                   page_size=16),
+            Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                   page_size=16))
+        b = _results_by_rid(_drain_disagg(ex, _mk_reqs(11)))
+        assert set(a) == set(b)
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert ex.prefill.stats.handoffs == len(a)
+        assert ex.decode.stats.handoffs == len(a)
+        assert ex.prefill.stats.handoff_bytes > 0
+
+    def test_tight_decode_pool_preempts_and_stays_bit_identical(self, setup):
+        """Decode-pool pressure preempts LIFO; the request recomputes via
+        the prefill engine and outputs stay bit-identical to colocated."""
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = setup
+        reqs = _mk_reqs(7, n=5, max_new_hi=16)
+        ref = Engine(cfg, params, max_batch=2, bucket=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(7, n=5, max_new_hi=16)))
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                   page_size=16),
+            Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                   page_size=16, num_pages=4))
+        b = _results_by_rid(_drain_disagg(ex, reqs))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert ex.decode.stats.preempted > 0          # the tight pool bit
+        # a preempted handoff crosses the wire again: more handoffs than
+        # requests
+        assert ex.prefill.stats.handoffs > len(a)
+        assert ex.prefill.load_snapshot()["pages_used"] == 0
+        assert ex.decode.load_snapshot()["pages_used"] == 0
+
+    @given(page_size=st.sampled_from([8, 16]), pool=st.integers(4, 8),
+           seed=st.integers(0, 10**6))
+    @settings(max_examples=3, deadline=None)
+    def test_random_churn_parity_disagg_vs_paged(self, page_size, pool, seed):
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = _smoke_model()
+        ref = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=page_size, num_pages=pool)
+        a = _results_by_rid(ref.serve(_mk_reqs(seed)))
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                   page_size=page_size),
+            Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                   page_size=page_size, num_pages=pool))
+        b = _results_by_rid(_drain_disagg(ex, _mk_reqs(seed)))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+
+    @pytest.mark.slow
+    @given(page_size=st.sampled_from([8, 16, 32]), pool=st.integers(3, 10),
+           seed=st.integers(0, 10**6),
+           pre_batch=st.integers(1, 3), dec_batch=st.integers(2, 5))
+    @settings(max_examples=8, deadline=None)
+    def test_random_geometry_parity_deep(self, page_size, pool, seed,
+                                         pre_batch, dec_batch):
+        """Deeper sweep (``-m slow``): disagg == colocated paged == slot
+        greedy outputs across random pool geometries and batch widths."""
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = _smoke_model()
+        slot = Engine(cfg, params, max_batch=2, bucket=16)
+        paged = Engine(cfg, params, max_batch=dec_batch, bucket=16,
+                       paged=True, page_size=page_size, num_pages=pool)
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=pre_batch, bucket=16, paged=True,
+                   page_size=page_size),
+            Engine(cfg, params, max_batch=dec_batch, bucket=16, paged=True,
+                   page_size=page_size, num_pages=pool))
+        outs = [_results_by_rid(slot.serve(_mk_reqs(seed, n=5,
+                                                    max_new_hi=14))),
+                _results_by_rid(paged.serve(_mk_reqs(seed, n=5,
+                                                     max_new_hi=14))),
+                _results_by_rid(_drain_disagg(ex, _mk_reqs(seed, n=5,
+                                                           max_new_hi=14)))]
+        for rid in outs[0]:
+            np.testing.assert_array_equal(outs[0][rid], outs[1][rid])
+            np.testing.assert_array_equal(outs[0][rid], outs[2][rid])
+
+    def test_requires_two_paged_engines(self, setup):
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = setup
+        with pytest.raises(ValueError):
+            DisaggEngineExecutor(
+                Engine(cfg, params, max_batch=2, bucket=16),
+                Engine(cfg, params, max_batch=2, bucket=16, paged=True))
+        with pytest.raises(ValueError):
+            DisaggEngineExecutor(
+                Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                       page_size=8),
+                Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                       page_size=16))
+
+
+# ---------------------------------------------------------------------------
+# 3. handoff accounting (pool conservation under churn)
+# ---------------------------------------------------------------------------
+
+class TestHandoffAccounting:
+    @given(ops=st.lists(st.integers(1, 400), min_size=1, max_size=12),
+           page=st.sampled_from([16, 32, 64]),
+           dt=st.floats(0.0, 3.0))
+    @settings(max_examples=25, deadline=None)
+    def test_sim_pools_conserved_under_churn(self, ops, page, dt):
+        """Random admits + time advancement: the prefill pool (strictly
+        admission-gated) stays within its total, every snapshot keeps the
+        headrooms in [0, 1] and the counts non-negative, and everything is
+        reclaimed at drain.  Like the colocated sim backend, the decode
+        side does not model preemption, so decode-page growth can
+        transiently over-occupy the pool — that shows up as (clamped) zero
+        decode headroom, not as a violated bound."""
+        h = _Harness(PROF, page_size=page)
+        t = 0.0
+        for prompt in ops:
+            h.ex.admit(_qr(f"p{t}-{prompt}", prompt, prompt, t=t))
+            t += dt
+            h.loop.run(until=t)
+            ld = h.ex.load()
+            assert 0 <= ld.prefill_kv_used <= ld.prefill_kv_budget
+            assert ld.pages_used >= 0
+            assert ld.kv_used == ld.pages_used * page
+            assert ld.transfer_inflight >= 0
+            assert 0.0 <= ld.prefill_headroom <= 1.0
+            assert 0.0 <= ld.decode_headroom <= 1.0
+            assert 0.0 <= ld.page_headroom <= 1.0
+        h.loop.run()
+        ld = h.ex.load()
+        assert ld.pages_used == 0 and ld.prefill_kv_used == 0
+        assert ld.transfer_inflight == 0
+
+    def test_go_offline_mid_handoff_drains_with_pools_reclaimed(self):
+        """Churn: a disagg node going offline with streams mid-prefill,
+        mid-transfer, and mid-decode hands queued requests back to the
+        network; everything already admitted drains to completion and both
+        pools return to empty."""
+        net = Network(mode="single", seed=0, init_balance=100.0)
+        prof = BackendProfile(prefill_tps=2e3, decode_tps=50.0, saturation=2,
+                              max_concurrency=8, quality=0.5,
+                              kv_token_budget=4096)
+        net.add_node(Node(
+            "n1", prof, policy=NodePolicy(),
+            executor_factory=lambda node: DisaggTokenBucketExecutor(
+                node.profile, page_size=64)))
+        net.add_node(Node("n2", make_profile(), policy=NodePolicy()))
+        reqs = [Request(rid=f"r{i}", origin="n1", arrival=0.1 * i,
+                        prompt_tokens=500, output_tokens=1000, slo_s=600.0)
+                for i in range(10)]
+        # t=5.0: the executor holds prefilling, transferring, and decoding
+        # streams at once (500-token prompts take 0.25s to prefill and
+        # ~60ms to transfer); queued requests must bounce to n2
+        net.loop.schedule(5.0, lambda: net.nodes["n1"].go_offline())
+        m = net.run(reqs, until=500.0)
+        user = [c for c in m.completed if not c.is_duel_extra]
+        assert len(user) == 10                          # nothing stranded
+        assert net.nodes["n1"].queue_len == 0
+        assert any(c.executor == "n2" for c in user)    # drained to the peer
+        ld = net.nodes["n1"].executor.load()
+        assert ld.pages_used == 0 and ld.prefill_kv_used == 0
+        assert ld.transfer_inflight == 0
+        for c in user:
+            assert np.isfinite(c.ttft) and c.ttft >= 0
+            assert np.isfinite(c.queue_wait) and c.queue_wait >= 0
+
+    def test_engine_pools_conserved_every_step(self, setup):
+        """Stepped churny disagg serving: pages_used + free_pages ==
+        pages_total on BOTH engines at every executor step, and both pools
+        fully drain."""
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = setup
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                   page_size=8),
+            Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                   page_size=8, num_pages=9))
+        ex.bind(None, lambda r, st_, ft: None)
+        pending = _mk_reqs(23, n=6, max_new_hi=12)
+        while pending or ex.has_work():
+            while pending and ex.admit(pending[0]):
+                pending.pop(0)
+            ex.step()
+            for snap in (ex.prefill.load_snapshot(),
+                         ex.decode.load_snapshot()):
+                assert snap["pages_used"] + snap["free_pages"] \
+                    == snap["pages_total"]
+                assert snap["pages_used"] >= 0
+        assert ex.prefill.load_snapshot()["pages_used"] == 0
+        assert ex.decode.load_snapshot()["pages_used"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 4. sim-vs-engine admission agreement
+# ---------------------------------------------------------------------------
+
+class TestSimEngineDisaggAgreement:
+    def test_admission_decisions_agree_on_identical_page_budget(self, setup):
+        """The simulated and real disagg executors must produce the same
+        admit/deny sequence for the same decode-page budget — both gate on
+        ``paged_admit_ok`` over the decode pool minus the reservations of
+        every staging stream."""
+        from repro.serving import DisaggEngineExecutor, Engine, GenRequest
+        cfg, params = setup
+        page, pool = 16, 8
+        dec_prof = BackendProfile(prefill_tps=1e4, decode_tps=100.0,
+                                  saturation=2, max_concurrency=8,
+                                  quality=0.5, kv_token_budget=page * pool)
+        pre_prof = BackendProfile(prefill_tps=1e4, decode_tps=100.0,
+                                  saturation=2, max_concurrency=8,
+                                  quality=0.5, kv_token_budget=64 * page)
+        sim = _Harness(dec_prof, pre_prof, page_size=page)
+        ex = DisaggEngineExecutor(
+            Engine(cfg, params, max_batch=8, bucket=16, paged=True,
+                   page_size=page, num_pages=64),
+            Engine(cfg, params, max_batch=8, bucket=16, paged=True,
+                   page_size=page, num_pages=pool))
+        ex.bind(None, lambda r, st_, ft: None)
+        rng = np.random.default_rng(5)
+        sim_dec, eng_dec = [], []
+        for i, plen in enumerate((40, 30, 50, 20)):     # pages 3, 2, 4, 2
+            sim_dec.append(sim.ex.admit(_qr(f"s{i}", plen, 64)))
+            eng_dec.append(ex.admit(GenRequest(
+                rid=f"e{i}", tokens=rng.integers(2, 400, size=plen)
+                .astype(np.int32), max_new=64)))
+        # 3 + 2 reserved, then 4 > 8 - 5 denied, then 2 fits
+        assert sim_dec == eng_dec == [True, True, False, True]
+
+    def test_estimate_monotone_in_decode_occupancy(self):
+        h = _Harness(make_profile())
+        prev = 0.0
+        for i in range(10):
+            est = h.ex.estimate(256, 512)
+            assert est >= prev
+            prev = est
+            assert h.ex.admit(_qr(f"r{i}", 64, 64))
+            h.loop.run(until=(i + 1) * 2.0)   # let streams reach decode
+
+
+# ---------------------------------------------------------------------------
+# 5. preemption resets the TTFT clock; timestamps stay monotone
+# ---------------------------------------------------------------------------
+
+class TestPreemptionClocks:
+    def test_preempted_requests_have_clocks_reset(self, setup):
+        """Regression: a preempt-and-requeued request must not carry the
+        aborted attempt's started_at/first_token_at — a mid-flight metrics
+        read (or the disagg executor re-routing it) would otherwise report
+        a TTFT for tokens the user never kept."""
+        from repro.serving import Engine
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16, num_pages=4)
+        for r in _mk_reqs(7, n=5, max_new_hi=16):
+            eng.submit(r)
+        saw_preempted_requeue = False
+        while eng.has_work():
+            eng.step()
+            if eng.stats.preempted > 0:
+                q = eng.take_queued()
+                for r in q:
+                    # nothing in the queue may carry a stale stamp
+                    assert r.started_at == 0.0 and r.first_token_at == 0.0
+                saw_preempted_requeue = saw_preempted_requeue or bool(q)
+                for r in reversed(q):
+                    eng.requeue(r)
+        assert eng.stats.preempted > 0
+        assert saw_preempted_requeue
+
+    @pytest.mark.parametrize("flavor", ["paged", "disagg"])
+    def test_completion_timestamps_monotone_under_preemption(self, setup,
+                                                             flavor):
+        """queue_wait and ttft stay well-defined through preemption in both
+        real executors: enqueued <= started <= first token <= finished, and
+        the preempted request's final stamps come from its last (kept)
+        attempt."""
+        from repro.serving import DisaggEngineExecutor, Engine, EngineExecutor
+        cfg, params = setup
+        reqs = _mk_reqs(7, n=5, max_new_hi=16)
+        if flavor == "paged":
+            ex = EngineExecutor(Engine(cfg, params, max_batch=4, bucket=16,
+                                       paged=True, page_size=16, num_pages=4))
+            done = []
+            ex.bind(None, lambda r, st_, ft: done.append((r, st_, ft)))
+            for r in reqs:
+                ex.engine.submit(r)      # bypass the gate: force pressure
+            ex.drain()
+            preempted = ex.engine.stats.preempted
+        else:
+            ex = DisaggEngineExecutor(
+                Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                       page_size=16),
+                Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                       page_size=16, num_pages=4))
+            done = []
+            ex.bind(None, lambda r, st_, ft: done.append((r, st_, ft)))
+            pending = list(reqs)
+            while pending or ex.has_work():
+                while pending and ex.admit(pending[0]):
+                    pending.pop(0)
+                ex.step()
+            preempted = ex.decode.stats.preempted
+        assert preempted > 0
+        assert len(done) == len(reqs)
+        for r, started, first_tok in done:
+            assert 0.0 < r.enqueued_at <= started <= first_tok \
+                <= r.finished_at
+
+    def test_sim_timestamps_monotone(self):
+        h = _Harness(PROF)
+        for i in range(6):
+            assert h.ex.admit(_qr(f"r{i}", 200, 400))
+        h.loop.run()
+        for rec in h.done.values():
+            assert rec["started"] <= rec["first_token"] <= rec["finish"]
+
+
+# ---------------------------------------------------------------------------
+# 6. phase-aware dispatch
+# ---------------------------------------------------------------------------
+
+class TestPhaseAwareRouting:
+    def _net(self):
+        """Three disagg nodes; n1's decode pool is saturated, n2 is idle.
+        Policies always accept, duels off, so routing is deterministic."""
+        from repro.core import DuelParams
+        net = Network(mode="decentralized", seed=0, init_balance=100.0,
+                      power_of_two=True, duel=DuelParams(p_d=0.0))
+        pol = NodePolicy(accept_freq=1.0, target_utilization=100.0)
+        small = BackendProfile(prefill_tps=1e4, decode_tps=100.0,
+                               saturation=2, max_concurrency=8, quality=0.5,
+                               kv_token_budget=1024)
+        for nid in ("n0", "n1", "n2"):
+            net.add_node(Node(
+                nid, small, policy=pol,
+                executor_factory=lambda node: DisaggTokenBucketExecutor(
+                    node.profile)))
+        return net
+
+    def test_decode_heavy_request_avoids_decode_saturated_node(self):
+        net = self._net()
+        n1 = net.nodes["n1"]
+        # saturate n1's decode budget and let the stream reach decode
+        assert n1.executor.admit(_qr("fill", 24, 1000))
+        net.loop.run(until=1.0)
+        assert net.nodes["n1"].executor.load().decode_headroom == 0.0
+        req = Request(rid="x", origin="n0", arrival=1.0, prompt_tokens=8,
+                      output_tokens=900, slo_s=600.0)
+        assert net.try_offload(net.nodes["n0"], req)
+        net.loop.run(until=2.0)
+        # power-of-two probed both peers and picked the phase-free one
+        assert net.nodes["n2"].executor.load().active_streams > 0
+
+    def test_prefill_pressure_scores_prompt_heavy_requests(self):
+        net = self._net()
+        n1, n2 = net.nodes["n1"], net.nodes["n2"]
+        assert n1.executor.admit(_qr("fill", 1000, 8))   # prefill-saturated
+        prompt_heavy = Request(rid="p", origin="n0", arrival=0.0,
+                               prompt_tokens=900, output_tokens=10,
+                               slo_s=600.0)
+        decode_heavy = Request(rid="d", origin="n0", arrival=0.0,
+                               prompt_tokens=10, output_tokens=900,
+                               slo_s=600.0)
+        # prompt-heavy traffic sees n1 as loaded, decode-heavy barely does
+        assert net._phase_pressure(n1, prompt_heavy) > 0.9
+        assert net._phase_pressure(n1, decode_heavy) < 0.1
+        assert net._phase_pressure(n2, prompt_heavy) == 0.0

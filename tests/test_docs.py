@@ -1,0 +1,71 @@
+"""check_docs: documentation cross-references stay resolvable in tier-1.
+
+Code and the planning docs cite DESIGN.md sections by anchor (``§6.1``,
+``§6.1-disagg``, ...).  Renaming or deleting a section must fail loudly
+here instead of leaving dangling references in ROADMAP.md / CHANGES.md /
+README.md — the executor layer is meant to be learnable from the docs
+without reading PR history.
+"""
+
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# a §-anchor: "§6.1", "§6.1-paged", "§Arch-applicability" — trailing
+# punctuation (".", ")", ":") is prose, not part of the anchor
+ANCHOR = re.compile(r"§[A-Za-z0-9](?:[A-Za-z0-9.\-]*[A-Za-z0-9])?")
+
+# markdown files that cite DESIGN.md anchors
+REFERRERS = ("ROADMAP.md", "CHANGES.md", "README.md")
+
+
+def _defined_anchors():
+    """Anchors DESIGN.md defines: one per §-carrying heading line."""
+    out = set()
+    for line in (REPO / "DESIGN.md").read_text().splitlines():
+        if line.lstrip().startswith("#"):
+            out.update(ANCHOR.findall(line))
+    return out
+
+
+class TestCheckDocs:
+    def test_design_defines_the_cited_sections(self):
+        anchors = _defined_anchors()
+        for a in ("§6.1", "§6.1-paged", "§6.1-disagg", "§6.2", "§6.3",
+                  "§Arch-applicability"):
+            assert a in anchors, f"DESIGN.md lost its {a} heading"
+
+    def test_no_dangling_anchor_references(self):
+        defined = _defined_anchors()
+        dangling = []
+        for name in REFERRERS:
+            path = REPO / name
+            assert path.exists(), f"{name} missing"
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                for ref in ANCHOR.findall(line):
+                    if ref not in defined:
+                        dangling.append(f"{name}:{i}: {ref}")
+        assert not dangling, (
+            "dangling DESIGN.md anchor references (rename the section back "
+            "or update the referrer):\n  " + "\n  ".join(dangling))
+
+    def test_anchor_regex_strips_trailing_punctuation(self):
+        assert ANCHOR.findall("see §6.1-paged): and §6.2, then §6.1.") == \
+            ["§6.1-paged", "§6.2", "§6.1"]
+
+
+class TestReadme:
+    """Acceptance: the root README exists and teaches the entry points."""
+
+    def test_readme_covers_the_entry_points(self):
+        text = (REPO / "README.md").read_text()
+        for needle in ("python -m pytest", "--smoke", "--bench",
+                       "pytest -m slow", "DESIGN.md"):
+            assert needle in text, f"README.md does not mention {needle!r}"
+
+    def test_readme_maps_the_architecture(self):
+        text = (REPO / "README.md").read_text()
+        for pkg in ("repro/core", "repro/sim", "repro/serving",
+                    "repro/kernels", "repro/compat"):
+            assert pkg in text, f"README.md architecture map misses {pkg}"
