@@ -14,7 +14,9 @@ caught before a full pytest run::
 ``--bench`` emits a machine-readable ``BENCH_scheduling.json`` (SLO
 attainment per mode, avg/p95 latency, simulated requests/s, real-engine
 decode tokens/s and admitted concurrency for paged vs slot vs wave
-batching) so the performance trajectory is tracked PR over PR::
+batching, the disagg-vs-colocated TTFT mix, and the speculative-vs-paged
+decode-heavy comparison with its accepted-length distribution) so the
+performance trajectory is tracked PR over PR::
 
     PYTHONPATH=src python benchmarks/run.py --bench
 
@@ -35,7 +37,7 @@ from typing import List
 # (the sibling benchmark modules import as the ``benchmarks`` package)
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-BENCH_SCHEMA_VERSION = 3
+BENCH_SCHEMA_VERSION = 4
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -49,6 +51,12 @@ ENGINE_MODES = ("slot", "wave", "paged")
 MIX_MODES = ("slot", "paged", "disagg")
 MIX_MODE_KEYS = ("avg_ttft_prompt_heavy_s", "avg_ttft_decode_heavy_s",
                  "decode_tokens_per_s", "wall_s", "served")
+# schema 4: decode-heavy workload, speculative vs plain paged (DESIGN.md
+# §6.1-spec) — accepted-length distribution and effective decode tokens/s
+SPEC_MODES = ("paged", "spec")
+SPEC_MODE_KEYS = ("decode_tokens", "decode_tokens_per_s", "wall_s", "served")
+SPEC_ONLY_KEYS = ("accept_hist", "alpha_ema", "expected_tokens_per_step",
+                  "draft_wall_s", "verify_steps")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -77,8 +85,18 @@ def check_bench_schema(payload: dict) -> None:
         assert mode in mix, f"mix.{mode} missing"
         for k in MIX_MODE_KEYS:
             assert k in mix[mode], f"mix.{mode}.{k} missing"
-    for k in ("handoffs", "handoff_bytes"):
+    for k in ("handoffs", "handoff_bytes", "transfer_inflight_peak"):
         assert k in mix["disagg"], f"mix.disagg.{k} missing"
+    spec = payload["spec"]
+    for k in ("workload", "spec_k", "speedup_decode_tokens_per_s"):
+        assert k in spec, f"spec.{k} missing"
+    for mode in SPEC_MODES:
+        assert mode in spec, f"spec.{mode} missing"
+        for k in SPEC_MODE_KEYS:
+            assert k in spec[mode], f"spec.{mode}.{k} missing"
+    for k in SPEC_ONLY_KEYS:
+        assert k in spec["spec"], f"spec.spec.{k} missing"
+    assert len(spec["spec"]["accept_hist"]) == spec["spec_k"] + 1
 
 
 def _smoke() -> int:
@@ -186,6 +204,33 @@ def _smoke() -> int:
         assert ex.prefill.load_snapshot()["pages_used"] == 0
         assert ex.decode.load_snapshot()["pages_used"] == 0
 
+    def spec_engine_matches_paged():
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serving import Engine, GenRequest
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+        draft_cfg = cfg.draft()
+        draft_params = registry.init(jax.random.PRNGKey(9), draft_cfg)
+
+        def mk():
+            prompts = [np.random.default_rng(i).integers(2, 400, size=6 + 3 * i)
+                       .astype(np.int32) for i in range(3)]
+            return [GenRequest(rid=f"r{i}", tokens=prompts[i],
+                               max_new=[6, 9, 4][i]) for i in range(3)]
+
+        ref = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=16)
+        rs = {r.rid: r.result for r in ref.serve(mk())}
+        spec = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=16, spec_draft=(draft_cfg, draft_params),
+                      spec_k=3)
+        rp = {r.rid: r.result for r in spec.serve(mk())}
+        for rid in rs:
+            np.testing.assert_array_equal(rs[rid], rp[rid])
+        assert spec.stats.spec_steps > 0
+        assert spec.load_snapshot()["pages_used"] == 0
+
     def pallas_kernel_matches_oracle():
         from repro.kernels.flash_attention import flash_attention_tpu
         from repro.kernels.ref import reference_attention
@@ -234,6 +279,8 @@ def _smoke() -> int:
     check("paged engine greedy-matches slot engine", paged_engine_matches_slot)
     check("disagg KV handoff greedy-matches colocated paged",
           disagg_matches_colocated_paged)
+    check("speculative engine greedy-matches paged engine",
+          spec_engine_matches_paged)
     check("pallas flash kernel vs oracle (interpret)",
           pallas_kernel_matches_oracle)
     check("mesh context + sharding constraint", mesh_context_sharding)
@@ -366,29 +413,41 @@ def _bench(out_path: str) -> int:
             Engine(cfg, params, paged=True, page_size=page_size,
                    num_pages=64, **kw))
 
-    def run_mix(ex):
+    def run_mix(ex, track_inflight=False):
         done = []
         ex.bind(None, lambda r, st_, ft: done.append(r))
         for r in mk_mix():
             assert ex.admit(r)
+        # optionally sample the executor-side load report while stepping:
+        # disagg surfaces its in-flight KV transfers there (ExecutorLoad
+        # .transfer_inflight / .handoff_bytes), so the mix section can
+        # record how deep the handoff pipeline actually ran — only done on
+        # an UNTIMED pass, so the per-step snapshot cost never perturbs
+        # the wall/TTFT numbers tracked PR over PR
+        peak_inflight = 0
         while ex.has_work():
             ex.step()
-        return done
+            if track_inflight:
+                peak_inflight = max(peak_inflight,
+                                    ex.load().transfer_inflight)
+        return done, peak_inflight
 
     mix_out = {}
     for label in MIX_MODES:
         ex = mk_executor(label)
         # warm the per-instance jit caches TWICE: the slot engine's cache
         # capacity grows during the first pass, so only the second pass
-        # compiles the shapes the timed run will hit
+        # compiles the shapes the timed run will hit.  The second (warm,
+        # untimed, same deterministic workload) pass also records the
+        # disagg transfer-pipeline peak.
         run_mix(ex)
-        run_mix(ex)
+        _, peak_inflight = run_mix(ex, track_inflight=(label == "disagg"))
         engines = ([ex.prefill, ex.decode] if label == "disagg"
                    else [ex.engine])
         for e in engines:
             e.stats = _ES()
         t0 = time.perf_counter()
-        done = run_mix(ex)                # timed run reuses compiled steps
+        done, _ = run_mix(ex)            # timed run reuses compiled steps
         wall = time.perf_counter() - t0
         st = ex.engine_stats()
         ttft = {r.rid: r.first_token_at - r.enqueued_at for r in done}
@@ -404,7 +463,8 @@ def _bench(out_path: str) -> int:
         }
         if label == "disagg":
             mix_out[label].update(handoffs=st.handoffs,
-                                  handoff_bytes=st.handoff_bytes)
+                                  handoff_bytes=st.handoff_bytes,
+                                  transfer_inflight_peak=peak_inflight)
     payload["mix"] = {
         "workload": "2 decode-heavy (prompt 8, out 48) then "
                     "3 prompt-heavy (prompt 96, out 4), max_batch 2",
@@ -412,6 +472,81 @@ def _bench(out_path: str) -> int:
             mix_out["paged"]["avg_ttft_prompt_heavy_s"]
             / max(mix_out["disagg"]["avg_ttft_prompt_heavy_s"], 1e-9), 2),
         **mix_out,
+    }
+
+    # --- decode-heavy workload: speculative vs plain paged (§6.1-spec) ------
+    # The draft here IS the target (same params), the regime where drafts
+    # always agree, so every verify forward emits spec_k + 1 tokens.
+    # decode_tokens_per_s is EFFECTIVE target-side decode throughput:
+    # emitted tokens over wall time inside target decode/verify jits — the
+    # draft's own (stand-in, full-size) cost is reported separately as
+    # spec.draft_wall_s, since a production draft is ~10x smaller.
+    from repro.serving import SpecEngineExecutor
+    from repro.sim.executor import spec_expected_tokens
+    spec_k = 4
+
+    def mk_spec():
+        rng = np.random.default_rng(11)
+        return [GenRequest(rid=f"s{i}",
+                           tokens=rng.integers(2, 400, size=10)
+                           .astype(np.int32), max_new=40) for i in range(3)]
+
+    def run_spec(ex):
+        done = []
+        ex.bind(None, lambda r, st_, ft: done.append(r))
+        for r in mk_spec():
+            assert ex.admit(r)
+        while ex.has_work():
+            ex.step()
+        return done
+
+    spec_out = {}
+    for label in SPEC_MODES:
+        # ample page pool (num_pages=64) on BOTH engines: recompute
+        # preemption would replay tokens and pollute the throughput
+        # comparison with recompute work
+        if label == "paged":
+            ex = EngineExecutor(Engine(cfg, params, bucket=16, max_batch=3,
+                                       paged=True, page_size=page_size,
+                                       num_pages=64))
+        else:
+            ex = SpecEngineExecutor(Engine(
+                cfg, params, bucket=16, max_batch=3, paged=True,
+                page_size=page_size, num_pages=64,
+                spec_draft=(cfg, params), spec_k=spec_k))
+        run_spec(ex)
+        run_spec(ex)                     # warm the per-instance jit caches
+        eng = ex.engine
+        eng.stats = _ES()
+        if label == "spec":
+            eng.spec_accept_hist = [0] * (spec_k + 1)
+        t0 = time.perf_counter()
+        done = run_spec(ex)              # timed run reuses compiled steps
+        wall = time.perf_counter() - t0
+        st = ex.engine_stats()
+        spec_out[label] = {
+            "served": len(done),
+            "decode_tokens": st.decode_tokens,
+            "decode_tokens_per_s": round(
+                st.decode_tokens / max(st.decode_wall_s, 1e-9), 1),
+            "wall_s": round(wall, 3),
+        }
+        if label == "spec":
+            spec_out[label].update(
+                accept_hist=list(eng.spec_accept_hist),
+                alpha_ema=round(eng.spec_alpha, 4),
+                expected_tokens_per_step=round(
+                    spec_expected_tokens(eng.spec_alpha, spec_k), 3),
+                draft_wall_s=round(st.draft_wall_s, 3),
+                verify_steps=st.spec_steps)
+    payload["spec"] = {
+        "workload": "3 decode-heavy requests (prompt 10, out 40), "
+                    "max_batch 3; draft = target (always agrees)",
+        "spec_k": spec_k,
+        "speedup_decode_tokens_per_s": round(
+            spec_out["spec"]["decode_tokens_per_s"]
+            / max(spec_out["paged"]["decode_tokens_per_s"], 1e-9), 2),
+        **spec_out,
     }
 
     check_bench_schema(payload)

@@ -196,12 +196,20 @@ class Network:
     def _est_wait(self, node: Node, req: Request) -> float:
         """Omniscient load estimate for the centralized baseline, built from
         the executor's load snapshot (queued + in-flight token backlog in
-        both phases)."""
+        both phases).  A speculative backend's decode backlog drains
+        ``expected_tokens_per_step`` times faster per target forward
+        (DESIGN.md §6.1-spec), so its effective decode capacity is scaled
+        by the acceptance model the load report carries (>= 1 by
+        construction; 1.0 on non-speculative backends).  This treats a
+        verify forward as costing one decode forward — the draft's own
+        overhead is charged by the ``executor.estimate`` term below, which
+        both spec executors fold it into."""
         ld = node.executor.load()
         backlog = sum(q.req.output_tokens for q in
                       node.local_queue + node.delegated_queue)
         backlog += ld.pending_decode_tokens
-        cap = node.profile.decode_tps * node.profile.saturation
+        cap = (node.profile.decode_tps * node.profile.saturation
+               * ld.expected_tokens_per_step)
         return (backlog / cap
                 + ld.pending_prefill_tokens / node.profile.prefill_tps
                 + node.executor.estimate(req.prompt_tokens,
@@ -213,12 +221,22 @@ class Network:
         prefill headroom and decode-heavy requests chase decode headroom
         (DESIGN.md §6.1-disagg).  For colocated backends both headrooms
         collapse to ``kv_headroom`` and this reduces to plain KV pressure.
+
+        The decode term is discounted by the backend's
+        ``expected_tokens_per_step`` (DESIGN.md §6.1-spec; >= 1 by
+        construction, 1.0 on non-speculative backends): the same KV
+        occupancy on a speculation-enabled node turns over
+        acceptance-model-times faster, so decode-heavy requests chase
+        spec-enabled nodes before equally-occupied plain ones.  Draft
+        overhead is deliberately ignored here — pressure ranks occupancy,
+        and the overhead is second-order next to the E-fold turnover.
         """
         ld = node.executor.load()
         total = max(1, req.prompt_tokens + req.output_tokens)
         wp = req.prompt_tokens / total
         return (wp * (1.0 - ld.prefill_headroom)
-                + (1.0 - wp) * (1.0 - ld.decode_headroom))
+                + (1.0 - wp) * (1.0 - ld.decode_headroom)
+                / ld.expected_tokens_per_step)
 
     def _dispatch_centralized(self, req: Request) -> None:
         online = [n for n in self.nodes.values() if n.online]

@@ -17,7 +17,9 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.flash_decode import flash_decode_tpu
 from repro.kernels.paged_decode import flash_paged_decode_tpu
-from repro.kernels.ref import decode_ref, flash_ref, paged_decode_ref
+from repro.kernels.ref import (decode_ref, flash_ref, paged_decode_ref,
+                               paged_verify_ref)
+from repro.kernels.spec_verify import flash_paged_verify_tpu
 
 
 def _on_tpu() -> bool:
@@ -58,3 +60,18 @@ def paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
                                       lengths,
                                       interpret=interpret and not _on_tpu())
     return paged_decode_ref(q, k_pool, v_pool, block_tables, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def paged_verify(q, k_pool, v_pool, block_tables, lengths, *,
+                 backend: str = "auto", interpret: bool = True) -> jax.Array:
+    """Multi-token speculative verify over paged KV (DESIGN.md §6.1-spec).
+    q: (B,K,H,D) — K new tokens whose KV is already in the pool; pools:
+    (P,page,Hkv,D); block_tables: (B,maxp) int32; lengths: (B,) int32
+    valid tokens per row before the K new tokens."""
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if use_pallas:
+        return flash_paged_verify_tpu(q, k_pool, v_pool, block_tables,
+                                      lengths,
+                                      interpret=interpret and not _on_tpu())
+    return paged_verify_ref(q, k_pool, v_pool, block_tables, lengths)

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 from repro.models.attention import (decode_attention as decode_ref,
                                     flash_attention as flash_ref,
-                                    reference_attention)
+                                    reference_attention,
+                                    verify_attention as verify_ref)
 
 
 def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -31,5 +32,26 @@ def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return decode_ref(q, k, v, lengths)
 
 
+def paged_verify_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Oracle for block-table multi-token verify attention (speculative
+    decoding, DESIGN.md §6.1-spec).
+
+    q: (B, K, H, D) — K new tokens per row whose KV has already been
+    scattered into the pool at positions ``lengths[b] .. lengths[b]+K-1``;
+    pools/block_tables as in :func:`paged_decode_ref`; lengths: (B,) int32
+    valid tokens per row BEFORE the K new tokens.  Query j attends
+    positions ``<= lengths[b] + j`` (causal among the new tokens).
+
+    Gathers each row's pages into a contiguous view and defers to the
+    dense multi-token verify oracle.  Returns (B, K, H, D).
+    """
+    b, maxp = block_tables.shape
+    page, hkv, d = k_pool.shape[1:]
+    k = k_pool[block_tables].reshape(b, maxp * page, hkv, d)
+    v = v_pool[block_tables].reshape(b, maxp * page, hkv, d)
+    return verify_ref(q, k, v, lengths)
+
+
 __all__ = ["decode_ref", "flash_ref", "reference_attention",
-           "paged_decode_ref"]
+           "paged_decode_ref", "paged_verify_ref", "verify_ref"]

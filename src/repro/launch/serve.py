@@ -26,7 +26,7 @@ from repro.configs import get_config
 from repro.core import DuelParams, Network, Node, NodePolicy
 from repro.models import registry
 from repro.serving import (DisaggEngineExecutor, Engine, EngineExecutor,
-                           GenRequest)
+                           GenRequest, SpecEngineExecutor)
 from repro.sim import make_profile
 from repro.sim.workload import Request
 
@@ -46,11 +46,26 @@ def main(argv=None) -> int:
                     help="back nodes with disaggregated prefill/decode "
                          "engine pairs joined by page-granular KV handoff "
                          "(DESIGN.md §6.1-disagg; implies paged)")
+    ap.add_argument("--spec", action="store_true",
+                    help="back nodes with speculative-decoding engines: a "
+                         "tiny draft proposes --spec-k tokens per target "
+                         "verify forward (DESIGN.md §6.1-spec; implies "
+                         "paged)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify step")
     args = ap.parse_args(argv)
+    if args.spec and args.disagg:
+        ap.error("--spec and --disagg are separate backends; pick one")
 
     cfg = get_config(args.arch).smoke().replace(dtype="float32")
     print(f"spinning up {args.nodes} nodes serving {cfg.name}")
     rng = np.random.default_rng(args.seed)
+    draft_cfg = draft_params = None
+    if args.spec:
+        # one shared draft model across nodes (a tiny same-tokenizer
+        # sibling; in a real deployment each node brings its own)
+        draft_cfg = cfg.draft()
+        draft_params = registry.init(jax.random.PRNGKey(10_000), draft_cfg)
 
     net = Network(mode="decentralized", seed=args.seed,
                   duel=DuelParams(p_d=args.duel_rate, k_judges=1),
@@ -67,6 +82,11 @@ def main(argv=None) -> int:
                        paged=True),
                 Engine(cfg, params, max_batch=4, bucket=32, seed=1000 + i,
                        paged=True))
+        elif args.spec:
+            executors[nid] = SpecEngineExecutor(
+                Engine(cfg, params, max_batch=4, bucket=32, seed=i,
+                       paged=True, spec_draft=(draft_cfg, draft_params),
+                       spec_k=args.spec_k))
         else:
             executors[nid] = EngineExecutor(
                 Engine(cfg, params, max_batch=4, bucket=32, seed=i,
@@ -115,6 +135,10 @@ def main(argv=None) -> int:
         disagg = (f", {st.handoffs} KV handoffs "
                   f"({st.handoff_bytes / 1e6:.1f} MB)"
                   if args.disagg else "")
+        if args.spec:
+            disagg = (f", spec accepted {st.spec_accepted}/{st.spec_drafted}"
+                      f" drafts over {st.spec_steps} verifies "
+                      f"(E[tok/step] {ld.expected_tokens_per_step:.2f})")
         print(f"  {nid}: served {len(done)} requests "
               f"({st.decode_tokens} decode tokens in "
               f"{st.decode_steps} steps; load: "

@@ -341,6 +341,34 @@ def decode_attention_seqsharded(q: jax.Array, k_cache: jax.Array,
     return fn(*args)
 
 
+def verify_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     base_len: jax.Array) -> jax.Array:
+    """Multi-token verify attention (speculative decoding, DESIGN.md
+    §6.1-spec): K query tokens appended to a cache of ``base_len`` valid
+    positions, causally masked among themselves.
+
+    q: (B,K,H,D); k_cache/v_cache: (B,S,Hkv,D) with the K new tokens'
+    KV already written at positions ``base_len .. base_len+K-1``;
+    base_len: () or (B,) int32.  Query j sits at absolute position
+    ``base_len + j`` and attends positions ``<= base_len + j`` — with
+    K == 1 this reduces exactly to ``decode_attention(q, k, v,
+    base_len + 1)``.  Full attention only (the paged engine rejects
+    sliding-window configs).
+    """
+    b, kq, h, d = q.shape
+    s = k_cache.shape[1]
+    k = _expand_kv(k_cache, h).astype(jnp.float32)
+    v = _expand_kv(v_cache, h).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k) / (d ** 0.5)
+    pos = jnp.arange(s)
+    limit = jnp.reshape(base_len, (-1, 1)) + jnp.arange(kq)[None, :]  # (B,K)
+    valid = pos[None, None, :] <= limit[..., None]            # (B,K,S)|(1,K,S)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cache_len: jax.Array, *,
                      window: Optional[int] = None) -> jax.Array:

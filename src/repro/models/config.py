@@ -129,6 +129,21 @@ class ModelConfig:
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
 
+    def draft(self) -> "ModelConfig":
+        """Tiny same-tokenizer sibling for speculative drafting (DESIGN.md
+        §6.1-spec): shares ``vocab_size``/``eos_id`` (token ids must agree
+        between draft and target) but shrinks every capacity knob, so k
+        draft forwards cost a fraction of one target forward.  Dense-family
+        layout so the draft runs the slot-decode path."""
+        return self.replace(
+            name=self.name + "-draft",
+            family="dense",
+            n_layers=2, d_model=128, n_heads=2, n_kv_heads=1,
+            d_ff=256, head_dim=64,
+            sliding_window=None, mrope=False, embeds_input=False,
+            n_experts=0, top_k=0, kv_quant=False,
+            qk_norm=False, use_bias=False, parallel_block=False)
+
     def smoke(self) -> "ModelConfig":
         """Reduced variant of the same family for CPU smoke tests."""
         kw = dict(

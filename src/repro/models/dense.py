@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models import runtime
-from repro.models.attention import decode_attention, flash_attention
+from repro.models.attention import (decode_attention, flash_attention,
+                                    verify_attention)
 from repro.models.config import ModelConfig
 
 
@@ -380,6 +381,88 @@ def paged_decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
     logits = logits_of(params, cfg, x)
     return logits, {"k_pool": pools_new["k"], "v_pool": pools_new["v"],
                     "block_tables": bt, "lengths": lengths + 1}
+
+
+def _block_verify_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
+                        block_tables: jax.Array, lengths: jax.Array,
+                        phys_page: jax.Array, page_slot: jax.Array
+                        ) -> Tuple[jax.Array, Dict]:
+    """One layer, K new tokens, against this layer's KV page pool
+    (speculative verify, DESIGN.md §6.1-spec).
+
+    x: (B,K,d); pools: {"k","v"} (P, page, Hkv, dh); block_tables: (B, maxp);
+    lengths: (B,) valid tokens per row BEFORE the K new tokens;
+    phys_page/page_slot: (B,K) physical page and in-page slot where token
+    j's KV is written (position ``lengths[b]+j``; rows without an allocated
+    page there are pointed at the scratch page 0 by the engine).
+    """
+    b, kq = x.shape[:2]
+    maxp = block_tables.shape[1]
+    page = pools["k"].shape[1]
+    h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
+    pos = lengths[:, None] + jnp.arange(kq, dtype=lengths.dtype)[None, :]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[..., None], (b, kq, 3))
+    q, k, v = _project_qkv(lp, cfg, h, pos)
+    pools = {"k": pools["k"].at[phys_page, page_slot].set(k),
+             "v": pools["v"].at[phys_page, page_slot].set(v)}
+    kg = pools["k"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
+                                          cfg.head_dim)
+    vg = pools["v"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
+                                          cfg.head_dim)
+    attn = verify_attention(q, kg, vg, lengths)
+    attn = attn.reshape(b, kq, cfg.q_dim) @ lp["wo"]
+    if cfg.use_bias:
+        attn = attn + lp["bo"]
+    if cfg.parallel_block:
+        return x + attn + _mlp(lp, cfg, h), pools
+    x = x + attn
+    h2 = cm.apply_norm(x, lp["ln2"], cfg.norm_type)
+    return x + _mlp(lp, cfg, h2), pools
+
+
+def paged_verify_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                      tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One speculative verify step against paged KV (DESIGN.md §6.1-spec).
+
+    cache: {"k_pool"/"v_pool": (L, P, page, Hkv, dh),
+            "block_tables": (B, maxp) int32, "lengths": (B,) int32};
+    tokens: (B, K) — the pending token followed by the k draft tokens.
+    Token j's KV is scattered into physical page
+    ``bt[b, (lengths[b]+j) // page]`` at slot ``(lengths[b]+j) % page``,
+    then all K positions attend the gathered pages with per-query causal
+    bounds (query j sees positions ``<= lengths[b]+j``).  The engine
+    guarantees pages are allocated through ``lengths+K`` for verifying
+    rows; riding-along rows resolve to the scratch page 0.  Returns
+    (logits (B,K,V), cache) — ``lengths`` is NOT advanced: the engine owns
+    advancement, which depends on how many draft tokens were accepted.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    bt = cache["block_tables"]
+    lengths = cache["lengths"]
+    page = cache["k_pool"].shape[2]
+    maxp = bt.shape[1]
+    b, kq = tokens.shape
+    rows = jnp.arange(b)
+    pos_abs = lengths[:, None] + jnp.arange(kq, dtype=lengths.dtype)[None, :]
+    page_idx = jnp.minimum(pos_abs // page, maxp - 1)
+    phys_page = bt[rows[:, None], page_idx]
+    page_slot = pos_abs % page
+
+    def step(x, xs):
+        lp, pools = xs
+        x, pools = _block_verify_paged(lp, cfg, x, pools, bt, lengths,
+                                       phys_page, page_slot)
+        return x, pools
+
+    x, pools_new = jax.lax.scan(
+        step, x, (params["layers"],
+                  {"k": cache["k_pool"], "v": cache["v_pool"]}),
+        unroll=runtime.scan_unroll())
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = logits_of(params, cfg, x)
+    return logits, {"k_pool": pools_new["k"], "v_pool": pools_new["v"],
+                    "block_tables": bt, "lengths": lengths}
 
 
 def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> Dict:

@@ -26,17 +26,23 @@ class Family(NamedTuple):
     paged_decode: Optional[Callable] = None
     init_paged_pools: Optional[Callable] = None
     prefill_to_pages: Optional[Callable] = None
+    # speculative-decoding capability (DESIGN.md §6.1-spec): verify K new
+    # tokens (pending + drafts) in one forward against the paged pools,
+    # returning logits at every position.  Requires the paged capability.
+    paged_verify: Optional[Callable] = None
 
 
 FAMILIES: Dict[str, Family] = {
     "dense": Family(dense.init, dense.apply, dense.prefill, dense.decode_step,
                     slot_decode=True, paged_decode=dense.paged_decode_step,
                     init_paged_pools=dense.init_paged_pools,
-                    prefill_to_pages=dense.prefill_to_pages),
+                    prefill_to_pages=dense.prefill_to_pages,
+                    paged_verify=dense.paged_verify_step),
     "vlm": Family(dense.init, dense.apply, dense.prefill, dense.decode_step,
                   slot_decode=True, paged_decode=dense.paged_decode_step,
                   init_paged_pools=dense.init_paged_pools,
-                  prefill_to_pages=dense.prefill_to_pages),
+                  prefill_to_pages=dense.prefill_to_pages,
+                  paged_verify=dense.paged_verify_step),
     "moe": Family(moe.init, moe.apply, moe.prefill, moe.decode_step,
                   has_aux=True),
     "hybrid": Family(rglru.init, rglru.apply, rglru.prefill, rglru.decode_step),

@@ -1,3 +1,4 @@
 from repro.serving.engine import Engine, EngineStats, GenRequest, KVHandoff
-from repro.serving.executor import DisaggEngineExecutor, EngineExecutor
+from repro.serving.executor import (DisaggEngineExecutor, EngineExecutor,
+                                    SpecEngineExecutor)
 from repro.serving.sampling import sample

@@ -22,6 +22,19 @@ reclaimed, its request requeued at the head of the queue for a greedy-
 deterministic restart.  Greedy outputs stay bit-identical to the slot and
 wave paths while strictly more requests are resident on the same KV budget.
 
+``Engine(spec_draft=(draft_cfg, draft_params), spec_k=k)`` layers
+**speculative decoding** (DESIGN.md §6.1-spec) on top of the paged backend:
+a small same-tokenizer draft model proposes ``k`` tokens greedily, the
+target verifies all of them in ONE batched multi-token forward
+(``Family.paged_verify``), and the longest prefix of drafts matching the
+target's own greedy choices is accepted — plus the target's correction
+token, carried as next-step logits.  KV pages are claimed for accepted
+tokens only (rejected drafts' writes sit beyond the valid length and are
+overwritten).  Greedy outputs stay bit-identical to the non-speculative
+paged engine: every emitted token is the argmax of the target's logits
+over the same prefix, speculation only changes how many target forwards
+that takes.
+
 This is the backend used by the runnable examples and the end-to-end
 decentralized serving driver (``repro.launch.serve``, via
 ``repro.serving.executor.EngineExecutor``); the large-scale scheduling
@@ -42,6 +55,19 @@ from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
 from repro.sim.executor import paged_admit_ok, pages_for
+from repro.sim.servicemodel import SPEC_ALPHA0, SPEC_EMA_BETA, SPEC_K
+
+
+def _greedy_tokens(logits: "jax.Array", vocab_size: int) -> "jax.Array":
+    """Greedy token at every position of ``logits`` (..., V), with padded
+    vocab entries masked — the same masking + argmax as the temperature-0
+    path of :func:`repro.serving.sampling.sample`, so speculative
+    verification reproduces non-speculative greedy choices exactly."""
+    lg = logits.astype(jnp.float32)
+    if vocab_size < lg.shape[-1]:
+        pad_mask = jnp.arange(lg.shape[-1]) >= vocab_size
+        lg = jnp.where(pad_mask, -1e30, lg)
+    return jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
 
 @dataclass
@@ -71,6 +97,15 @@ class EngineStats:
     preempted: int = 0            # paged: preempt-and-requeue events
     handoffs: int = 0             # disagg: KV handoffs extracted/accepted
     handoff_bytes: int = 0        # disagg: valid KV bytes handed off
+    # speculative decoding (DESIGN.md §6.1-spec).  decode_tokens counts
+    # EMITTED tokens and decode_wall_s the target-side verify walls, so
+    # decode_tokens / decode_wall_s is the effective target decode
+    # throughput; the draft's own cost is tracked in draft_wall_s.
+    spec_steps: int = 0           # verify forwards (each checks spec_k drafts)
+    spec_drafted: int = 0         # draft tokens proposed
+    spec_accepted: int = 0        # draft tokens matching the target's greedy
+    draft_wall_s: float = 0.0     # wall time inside draft prefill/decode jits
+    verify_wall_s: float = 0.0    # wall time inside the verify jit
 
 
 @dataclass
@@ -119,7 +154,9 @@ class Engine:
                  capacity: Optional[int] = None,
                  continuous: bool = True,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None) -> None:
+                 num_pages: Optional[int] = None,
+                 spec_draft: Optional[Tuple[ModelConfig, Dict]] = None,
+                 spec_k: int = SPEC_K) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -183,15 +220,81 @@ class Engine:
             self._slot_seq = np.zeros(max_batch, np.int64)
             self._admit_seq = 0
 
+        # speculative decoding (DESIGN.md §6.1-spec)
+        self.spec = spec_draft is not None
+        self.spec_k = int(spec_k) if self.spec else 0
+        if self.spec:
+            if not self.paged:
+                raise ValueError("speculative decoding requires paged=True "
+                                 "(the verify step targets the page pools)")
+            if fam.paged_verify is None:
+                raise ValueError("family has no paged_verify capability")
+            if self.spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            draft_cfg, draft_params = spec_draft
+            dfam = registry.get_family(draft_cfg)
+            if not (dfam.slot_decode and draft_cfg.sliding_window is None):
+                raise ValueError("draft model must support slot decode "
+                                 "with full attention")
+            if (draft_cfg.vocab_size != cfg.vocab_size
+                    or draft_cfg.eos_id != cfg.eos_id):
+                raise ValueError("draft and target must share the tokenizer "
+                                 "(vocab_size / eos_id)")
+            self.spec_draft_cfg = draft_cfg
+            self.spec_draft_params = draft_params
+            self._verify = jax.jit(
+                lambda p, c, t: fam.paged_verify(p, cfg, c, t))
+            self._draft_prefill = jax.jit(
+                lambda p, b, cap, lp: dfam.prefill(p, draft_cfg, b,
+                                                   q_chunk=256, kv_chunk=256,
+                                                   capacity=cap,
+                                                   last_positions=lp),
+                static_argnums=(2,))
+            self._draft_decode = jax.jit(
+                lambda p, c, t: dfam.decode_step(p, draft_cfg, c, t))
+            # draft slot cache: contiguous per-row-depth KV, mirrored to the
+            # target's slots (re-prefilled from scratch after preemption)
+            self._draft_cache: Optional[Dict] = None
+            self._draft_lengths = np.zeros(max_batch, np.int64)
+            self._draft_capacity = 0
+            # online per-token acceptance-rate EMA, seeded from the same sim
+            # constant the SpecTokenBucketExecutor defaults to, so sim and
+            # engine agree until real observations move it
+            self.spec_alpha = SPEC_ALPHA0
+            # accepted-length distribution: spec_accept_hist[a] counts
+            # verify steps that accepted exactly a of spec_k drafts
+            self.spec_accept_hist = [0] * (self.spec_k + 1)
+
     def _pad_bucket(self, n: int) -> int:
         b = self.bucket
         return max(b, (n + b - 1) // b * b)
 
     def _required(self, r: GenRequest) -> int:
-        return self._pad_bucket(len(r.tokens)) + self._pad_bucket(r.max_new)
+        """Worst-case cache tokens a request may touch.  A speculative
+        verify writes up to ``spec_k`` positions past the pending token, so
+        the spec engine's worst case extends past pad(prompt)+pad(max_new)
+        by the draft depth (rejected drafts' writes still need a mapped
+        page, even though they never become valid tokens)."""
+        extra = self.spec_k if self.spec else 0
+        return (self._pad_bucket(len(r.tokens))
+                + self._pad_bucket(r.max_new) + extra)
+
+    def _draft_required(self, r: GenRequest) -> int:
+        """Draft-cache capacity for ``r``: the page-rounded prefill width
+        (the draft prefills the same right-padded prompt batch as the
+        target) plus room to decode the pending token and ``spec_k``
+        drafts at positions up to ``prompt + max_new - 2 + spec_k``."""
+        plen = (-(-self._pad_bucket(len(r.tokens)) // self.page_size)
+                * self.page_size)
+        return plen + self._pad_bucket(r.max_new + self.spec_k)
 
     # ------------------------------------------------------------- interface
     def submit(self, r: GenRequest) -> None:
+        if self.spec and r.temperature > 0.0:
+            raise ValueError(
+                "the speculative engine is greedy-only: draft acceptance "
+                "compares argmax choices (temperature sampling would need "
+                "rejection sampling, which breaks the bit-parity invariant)")
         r.enqueued_at = time.perf_counter()
         self._queue.append(r)
 
@@ -351,9 +454,12 @@ class Engine:
             return                     # wave batching: refill only when empty
         usable = self._num_pages - 1
         if resident and any(self._pages(self._required(r)) > usable
+                            or (self.spec and self._draft_required(r)
+                                > self._draft_capacity)
                             for r in self._queue):
-            # a queued request cannot fit the pool even alone; stop
-            # backfilling so the batch drains and the growth branch runs
+            # a queued request cannot fit the pool (or the draft cache) even
+            # alone; stop backfilling so the batch drains and the growth
+            # branch runs
             return
         if not resident:
             # grow the pool while nothing is resident, so any single admitted
@@ -367,6 +473,15 @@ class Engine:
                 self._pools = None
                 self._logits = None
                 self._free_pages = list(range(1, self._num_pages))
+            if self.spec:
+                # the draft cache is allocation-static under jit too: grow
+                # it at the same idle points as the pool
+                dneeded = max(self._draft_required(r)
+                              for r in self._queue[:self.max_batch])
+                if self._draft_cache is None \
+                        or dneeded > self._draft_capacity:
+                    self._draft_capacity = max(self._draft_capacity, dneeded)
+                    self._draft_cache = None
         free_slots = [i for i, s in enumerate(self._slots) if s is None]
         free_now = len(self._free_pages)
         take: List[Tuple[int, GenRequest]] = []
@@ -376,6 +491,8 @@ class Engine:
             need = self._pages(len(r.tokens))
             if (free_slots and need <= free_now
                     and self._pages(self._required(r)) <= usable
+                    and (not self.spec
+                         or self._draft_required(r) <= self._draft_capacity)
                     and paged_admit_ok(free_now, len(r.tokens),
                                        self.page_size, resident=taking)):
                 take.append((free_slots.pop(0), r))
@@ -441,6 +558,32 @@ class Engine:
         self._pools = self._scatter_pages(self._pools, kv, jnp.asarray(phys))
         rows = jnp.asarray([i for i, _ in take])
         self._logits = self._logits.at[rows].set(logits)
+        if self.spec:
+            self._spec_prefill_draft(take, toks, last)
+
+    def _spec_prefill_draft(self, take: List[Tuple[int, GenRequest]],
+                            toks: np.ndarray, last: np.ndarray) -> None:
+        """Run the draft model's prefill over the same right-padded prompts
+        and install its contiguous KV rows next to the target's slots
+        (DESIGN.md §6.1-spec).  The draft's prompt logits are discarded:
+        drafting always starts by feeding the pending token."""
+        t0 = time.perf_counter()
+        dlogits, dcache = self._draft_prefill(
+            self.spec_draft_params, {"tokens": jnp.asarray(toks)},
+            self._draft_capacity, jnp.asarray(last))
+        dlogits.block_until_ready()
+        self.stats.draft_wall_s += time.perf_counter() - t0
+        dkv = {k: v for k, v in dcache.items() if k != "length"}
+        if self._draft_cache is None:
+            self._draft_cache = jax.tree_util.tree_map(
+                lambda leaf: jnp.zeros(
+                    (leaf.shape[0], self.max_batch) + leaf.shape[2:],
+                    leaf.dtype), dkv)
+        rows = jnp.asarray([i for i, _ in take])
+        self._draft_cache = jax.tree_util.tree_map(
+            lambda p, nw: p.at[:, rows].set(nw), self._draft_cache, dkv)
+        for i, r in take:
+            self._draft_lengths[i] = len(r.tokens)
 
     # ----------------------------------------------------- page pool dynamics
     def _release_pages(self, i: int) -> None:
@@ -467,18 +610,24 @@ class Engine:
         self._release_pages(i)
         self._slots[i] = None
         self._lengths[i] = 0
+        if self.spec:
+            # the draft row is re-prefilled from scratch on re-admission
+            self._draft_lengths[i] = 0
         self._queue.insert(0, r)
         self.stats.preempted += 1
 
-    def _ensure_decode_pages(self, survivors: List[int]) -> List[int]:
-        """Allocate this step's write page for every surviving row (needed
-        when its next token crosses a page boundary).  Under pool pressure
-        the most recently admitted resident is preempted until a page frees;
-        oldest rows are served first, so the oldest admission always makes
-        progress and the preemption loop terminates."""
+    def _ensure_decode_pages(self, survivors: List[int],
+                             lookahead: int = 1) -> List[int]:
+        """Allocate pages covering the next ``lookahead`` write positions
+        for every surviving row (1 for plain decode; ``spec_k + 1`` for a
+        speculative verify, which writes the pending token plus k drafts).
+        Under pool pressure the most recently admitted resident is
+        preempted until a page frees; oldest rows are served first, so the
+        oldest admission always makes progress and the preemption loop
+        terminates."""
         for i in sorted(survivors, key=lambda i: self._slot_seq[i]):
             while (self._slots[i] is not None
-                   and self._lengths[i] // self.page_size
+                   and (self._lengths[i] + lookahead - 1) // self.page_size
                    >= len(self._row_pages[i])):
                 if self._free_pages:
                     pg = self._free_pages.pop()
@@ -509,6 +658,8 @@ class Engine:
         transfer cost model charges for.
         """
         assert self.paged, "KV handoff requires the paged backend"
+        assert not self.spec, "KV handoff and speculative decoding are " \
+            "separate backends (the draft cache does not travel)"
         out: List[KVHandoff] = []
         for i, s in enumerate(self._slots):
             if s is None or not s.out:
@@ -536,6 +687,8 @@ class Engine:
         completion) when no slot or not enough free pages are available.
         """
         assert self.paged and h.page_size == self.page_size
+        assert not self.spec, "KV handoff and speculative decoding are " \
+            "separate backends (the draft cache does not travel)"
         free_slots = [i for i, s in enumerate(self._slots) if s is None]
         if not free_slots:
             return False
@@ -585,12 +738,40 @@ class Engine:
         return True
 
     # ------------------------------------------------------------ decode step
+    def _append_token(self, i: int, t: int, now: float,
+                      finished: List[GenRequest]) -> bool:
+        """Append one emitted token to row ``i``, retiring the row on EOS
+        or budget exhaustion (shared by the plain sampling phase and the
+        speculative acceptance loop, so multi-token emission keeps the
+        exact single-token semantics: EOS is dropped from the result
+        unless it is the only token).  Returns True while the row
+        survives."""
+        slot = self._slots[i]
+        slot.out.append(t)
+        if len(slot.out) == 1:
+            slot.req.first_token_at = now
+        hit_eos = t == self.eos_id
+        if hit_eos or len(slot.out) >= slot.req.max_new:
+            row = slot.out[:-1] if hit_eos and len(slot.out) > 1 \
+                else slot.out
+            slot.req.result = np.asarray(row, np.int32)
+            slot.req.finished_at = now
+            finished.append(slot.req)
+            self._slots[i] = None
+            if self.paged:
+                self._release_pages(i)         # pages return to the pool
+            self.stats.served += 1
+            return False
+        return True
+
     def step(self) -> List[GenRequest]:
         """One engine iteration: sample a token for every resident sequence,
         retire finished ones, prefill admissions into freed slots, then run
         one batched decode step for the sequences that continue."""
         if not self.slot_decode:
             return self._step_wave_legacy()
+        if self.spec:
+            return self._step_spec()
         self._admit()
         resident = [i for i, s in enumerate(self._slots) if s is not None]
         if not resident:
@@ -608,22 +789,7 @@ class Engine:
         finished: List[GenRequest] = []
         survivors: List[int] = []
         for i in resident:
-            slot = self._slots[i]
-            slot.out.append(int(cur_np[i]))
-            if len(slot.out) == 1:
-                slot.req.first_token_at = now
-            hit_eos = cur_np[i] == self.eos_id
-            if hit_eos or len(slot.out) >= slot.req.max_new:
-                row = slot.out[:-1] if hit_eos and len(slot.out) > 1 \
-                    else slot.out
-                slot.req.result = np.asarray(row, np.int32)
-                slot.req.finished_at = now
-                finished.append(slot.req)
-                self._slots[i] = None
-                if self.paged:
-                    self._release_pages(i)     # pages return to the pool
-                self.stats.served += 1
-            else:
+            if self._append_token(i, int(cur_np[i]), now, finished):
                 survivors.append(i)
         # 2. admit queued work into freed slots between decode steps
         if self.continuous and finished:
@@ -659,6 +825,153 @@ class Engine:
             self._lengths[survivors] += 1
             self.stats.decode_tokens += len(survivors)
             self.stats.decode_steps += 1
+        return finished
+
+    # ------------------------------------------------- speculative decoding
+    def _step_spec(self) -> List[GenRequest]:
+        """One speculative engine iteration (DESIGN.md §6.1-spec).
+
+        The pending token is sampled for every resident row from its
+        carried logits exactly as the plain paged step does; then, instead
+        of one single-token decode, the draft model proposes ``spec_k``
+        tokens greedily and ONE batched target forward
+        (``Family.paged_verify``) scores pending + drafts at once.  The
+        longest draft prefix matching the target's own greedy choices is
+        emitted; the correction token is NOT emitted here — the verify
+        logits after the last accepted token become the carried logits, so
+        the next iteration's sampling phase reproduces it.  Every emitted
+        token is therefore the argmax of target logits over the same
+        prefix as non-speculative decode: greedy outputs are
+        bit-identical, speculation only changes how many target forwards
+        they take.
+        """
+        self._admit()
+        resident = [i for i, s in enumerate(self._slots) if s is not None]
+        if not resident:
+            return []
+        # 1. pending token from carried logits (identical to the base step;
+        #    spec rows are greedy-only, enforced at submit)
+        self.key, sk = jax.random.split(self.key)
+        cur = sample(sk, self._logits, temperature=0.0,
+                     vocab_size=self.cfg.vocab_size)
+        cur_np = np.asarray(cur[:, 0])
+        now = time.perf_counter()
+        finished: List[GenRequest] = []
+        survivors: List[int] = []
+        for i in resident:
+            if self._append_token(i, int(cur_np[i]), now, finished):
+                survivors.append(i)
+        # 2. admit queued work into freed slots between steps (freshly
+        #    prefilled rows ride along this verify and join the next one)
+        if self.continuous and finished:
+            self._admit()
+        # 2b. claim pages covering the pending token + spec_k draft writes,
+        #     preempting the most recent admissions if the pool exhausts
+        if survivors:
+            survivors = self._ensure_decode_pages(survivors,
+                                                  lookahead=self.spec_k + 1)
+        if not survivors:
+            return finished
+        k = self.spec_k
+        # 3. draft k tokens greedily, feeding the pending token first; the
+        #    draft cache rows advance in lock-step with the target's pages
+        #    (riding-along rows write garbage at their own stale depth,
+        #    fully overwritten before it is ever attended)
+        drafts = np.zeros((self.max_batch, k), np.int32)
+        tok = cur
+        t0 = time.perf_counter()
+        for j in range(k):
+            dcache = {**self._draft_cache,
+                      "length": jnp.asarray(self._draft_lengths + j,
+                                            jnp.int32)}
+            dlogits, dcache = self._draft_decode(self.spec_draft_params,
+                                                 dcache, tok)
+            dlogits.block_until_ready()
+            self._draft_cache = {n: v for n, v in dcache.items()
+                                 if n != "length"}
+            tok = _greedy_tokens(dlogits[:, -1],
+                                 self.spec_draft_cfg.vocab_size)[:, None]
+            drafts[:, j] = np.asarray(tok[:, 0])
+        # land the last draft's KV too: each proposing forward writes its
+        # INPUT token, so d_k would be missing from the draft cache when
+        # all k drafts are accepted and the next round builds on it — one
+        # discarded forward writes it at draft position n + k (harmless
+        # for rows that accept less: the position is past their valid
+        # prefix and overwritten before it is ever attended)
+        dcache = {**self._draft_cache,
+                  "length": jnp.asarray(self._draft_lengths + k, jnp.int32)}
+        dlogits, dcache = self._draft_decode(self.spec_draft_params,
+                                             dcache, tok)
+        dlogits.block_until_ready()
+        self._draft_cache = {n: v for n, v in dcache.items()
+                             if n != "length"}
+        self.stats.draft_wall_s += time.perf_counter() - t0
+        self.stats.spec_drafted += k * len(survivors)
+        # 4. verify pending + drafts in ONE batched target forward; the
+        #    verify scatters all k+1 tokens' KV into the pages claimed in
+        #    2b (rejected drafts land beyond the valid length and are
+        #    overwritten by the next verify at the same positions)
+        toks = np.concatenate([cur_np[:, None], drafts], axis=1)
+        cache = {**self._pools,
+                 "block_tables": jnp.asarray(self._block_tables),
+                 "lengths": jnp.asarray(self._lengths, jnp.int32)}
+        t0 = time.perf_counter()
+        vlogits, cache = self._verify(self.params, cache, jnp.asarray(toks))
+        vlogits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.stats.decode_wall_s += dt
+        self.stats.verify_wall_s += dt
+        self._pools = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"]}
+        # the target's greedy choice at every position, with the same
+        # vocab masking + argmax as sample(temperature=0)
+        tgt = np.asarray(_greedy_tokens(vlogits, self.cfg.vocab_size))
+        # 5. per row: accept the longest draft prefix matching the target,
+        #    emit it under the usual EOS/budget rules, advance the caches
+        #    over pending + accepted tokens only
+        now = time.perf_counter()
+        rows: List[int] = []
+        pos: List[int] = []
+        accepts: List[int] = []
+        for i in survivors:
+            a = 0
+            while a < k and drafts[i, a] == tgt[i, a]:
+                a += 1
+            self.spec_accept_hist[a] += 1
+            self.stats.spec_accepted += a
+            accepts.append(a)
+            appended = 0
+            alive = True
+            for j in range(a):
+                appended += 1
+                if not self._append_token(i, int(drafts[i, j]), now,
+                                          finished):
+                    alive = False
+                    break
+            # count tokens fed to a target forward as valid context — the
+            # same rule the plain path's len(survivors) implements: a
+            # request's FINAL emitted token (here: the draft that retired
+            # the row) never feeds a forward, so both engines accumulate
+            # identical decode_tokens for identical outputs
+            self.stats.decode_tokens += appended + (1 if alive else 0)
+            if alive:
+                self._lengths[i] += 1 + a
+                self._draft_lengths[i] = self._lengths[i]
+                rows.append(i)
+                pos.append(a)       # carry logits after the last accepted
+        # ONE EMA update per verify step (the documented SPEC_EMA_BETA
+        # semantics), over the step's mean acceptance — per-row updates
+        # would scale the effective smoothing with batch size
+        obs = sum(accepts) / (k * len(accepts))
+        self.spec_alpha += SPEC_EMA_BETA * (obs - self.spec_alpha)
+        # 6. carry each surviving row's correction logits: position a is the
+        #    target's distribution after [pending, d_1..d_a] — next step's
+        #    argmax emits the correction (or the bonus token when a == k)
+        if rows:
+            ridx = jnp.asarray(rows)
+            upd = vlogits[ridx, jnp.asarray(pos)][:, None]
+            self._logits = self._logits.at[ridx].set(upd)
+        self.stats.decode_steps += 1
+        self.stats.spec_steps += 1
         return finished
 
     # ----------------------------------------------- legacy wave (non-dense)

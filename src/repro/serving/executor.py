@@ -6,6 +6,13 @@ uniformly:
 
 * ``EngineExecutor``       — one slot-based continuous-batching ``Engine``
                              (optionally paged) running both phases.
+* ``SpecEngineExecutor``   — speculative decoding (DESIGN.md §6.1-spec):
+                             wraps a spec-enabled paged ``Engine``
+                             (draft/verify) and reports the online
+                             acceptance model through
+                             ``ExecutorLoad.expected_tokens_per_step`` so
+                             dispatch can chase effective decode
+                             throughput.
 * ``DisaggEngineExecutor`` — disaggregated prefill/decode (DESIGN.md
                              §6.1-disagg): a prefill-role and a decode-role
                              paged ``Engine`` joined by page-granular KV
@@ -43,7 +50,7 @@ from typing import Dict, List, Optional
 
 from repro.serving.engine import Engine, EngineStats, GenRequest, KVHandoff
 from repro.sim.executor import (Executor, ExecutorLoad, paged_admit_ok,
-                                pages_for)
+                                pages_for, spec_expected_tokens)
 
 
 def _pending_gate(snap: Dict[str, int], item: GenRequest,
@@ -105,7 +112,8 @@ class EngineExecutor(Executor):
             kv_used=snap["kv_used"],
             kv_budget=snap["kv_budget"],
             pages_used=snap["pages_used"],
-            pages_total=snap["pages_total"])
+            pages_total=snap["pages_total"],
+            handoff_bytes=self.engine.stats.handoff_bytes)
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         """Expected service seconds from the engine's measured prefill and
@@ -139,6 +147,51 @@ class EngineExecutor(Executor):
         while self.engine.has_work():
             done.extend(self.step())
         return done
+
+
+class SpecEngineExecutor(EngineExecutor):
+    """Speculative decoding behind the Executor contract (DESIGN.md
+    §6.1-spec): an ``EngineExecutor`` over a spec-enabled paged ``Engine``
+    (``Engine(spec_draft=..., spec_k=...)``).
+
+    Admission, paging, and driving are inherited unchanged — speculation
+    changes how fast decode *drains*, not how much KV a resident stream
+    holds.  What this subclass adds is the acceptance model: ``load()``
+    reports ``expected_tokens_per_step`` from the engine's online
+    acceptance-rate EMA (seeded from the same ``SPEC_ALPHA0`` constant the
+    simulated ``SpecTokenBucketExecutor`` defaults to, so a fresh sim node
+    and a fresh engine node score identically), and ``estimate()`` charges
+    the measured draft wall time next to the target-side decode wall.
+    """
+
+    def __init__(self, engine: Engine,
+                 max_pending_tokens: Optional[int] = None,
+                 gate_on_pages: bool = False) -> None:
+        if not engine.spec:
+            raise ValueError("SpecEngineExecutor requires a spec-enabled "
+                             "engine (Engine(spec_draft=..., spec_k=...))")
+        super().__init__(engine, max_pending_tokens, gate_on_pages)
+
+    def expected_tokens_per_step(self) -> float:
+        return spec_expected_tokens(self.engine.spec_alpha,
+                                    self.engine.spec_k)
+
+    def load(self) -> ExecutorLoad:
+        return replace(super().load(),
+                       expected_tokens_per_step=self.expected_tokens_per_step())
+
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        """Measured-rate estimate including the draft's cost: emitted
+        tokens over target verify wall PLUS draft wall, so a draft that
+        doesn't pay for itself shows up in routing estimates."""
+        st = self.engine.stats
+        wall = st.decode_wall_s + st.draft_wall_s
+        if st.decode_tokens == 0 or wall <= 0:
+            return float("inf")      # no calibration data yet: probe-unknown
+        t = output_tokens / (st.decode_tokens / wall)
+        if st.prefill_tokens > 0 and st.prefill_wall_s > 0:
+            t += prompt_tokens / (st.prefill_tokens / st.prefill_wall_s)
+        return t
 
 
 class DisaggEngineExecutor(Executor):
@@ -213,7 +266,8 @@ class DisaggEngineExecutor(Executor):
             kv_used=ds["kv_used"], kv_budget=ds["kv_budget"],
             pages_used=ds["pages_used"], pages_total=ds["pages_total"],
             prefill_kv_used=ps["kv_used"], prefill_kv_budget=ps["kv_budget"],
-            transfer_inflight=len(self._pending))
+            transfer_inflight=len(self._pending),
+            handoff_bytes=self.prefill.stats.handoff_bytes)
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         """Phase-split estimate: prompt at the prefill engine's measured

@@ -1,6 +1,7 @@
 from repro.sim.events import EventLoop
 from repro.sim.executor import (DisaggTokenBucketExecutor, Executor,
-                                ExecutorLoad, TokenBucketExecutor)
+                                ExecutorLoad, SpecTokenBucketExecutor,
+                                TokenBucketExecutor)
 from repro.sim.metrics import CompletedRequest, MetricsCollector
 from repro.sim.servicemodel import BackendProfile, make_profile
 from repro.sim.workload import (ArrivalPhase, Request, WorkloadSpec,
@@ -8,7 +9,8 @@ from repro.sim.workload import (ArrivalPhase, Request, WorkloadSpec,
 
 __all__ = [
     "EventLoop", "Executor", "ExecutorLoad", "TokenBucketExecutor",
-    "DisaggTokenBucketExecutor", "CompletedRequest", "MetricsCollector",
+    "SpecTokenBucketExecutor", "DisaggTokenBucketExecutor",
+    "CompletedRequest", "MetricsCollector",
     "BackendProfile", "make_profile", "ArrivalPhase", "Request",
     "WorkloadSpec", "make_requests", "two_phase", "uniform_phases",
 ]

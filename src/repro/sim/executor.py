@@ -50,6 +50,12 @@ Backends in this module:
   must fit the free pool, decode pages accrue with generation progress.
   The sim does not model preemption — transient over-occupancy simply
   shows up as zero page headroom.
+* ``SpecTokenBucketExecutor``  — simulated speculative decoding (DESIGN.md
+  §6.1-spec): same admission as the plain bucket, but decode throughput is
+  scaled by the analytic acceptance model
+  ``spec_expected_tokens(alpha, k) / (1 + overhead)`` and the load
+  snapshot reports ``expected_tokens_per_step`` so dispatch can route
+  decode-heavy traffic toward speculation-enabled nodes.
 * ``DisaggTokenBucketExecutor`` — simulated disaggregated prefill/decode
   (DESIGN.md §6.1-disagg): a prefill-only and a decode-only token bucket
   joined by an explicit KV-transfer cost model
@@ -58,9 +64,10 @@ Backends in this module:
   so every accepted transfer can eventually land.
 
 The real-engine counterparts (``EngineExecutor``, slot-based continuous
-batching over the JAX ``Engine``, and ``DisaggEngineExecutor``, a paired
-prefill/decode engine with page-granular KV handoff) live in
-``repro.serving.executor``.
+batching over the JAX ``Engine``, ``SpecEngineExecutor``, draft/verify
+speculative decoding over a spec-enabled paged ``Engine``, and
+``DisaggEngineExecutor``, a paired prefill/decode engine with
+page-granular KV handoff) live in ``repro.serving.executor``.
 
 This module (plus ``servicemodel``) is the only sanctioned caller of
 ``BackendProfile.service_time`` — a grep-guard in ``tests/test_compat.py``
@@ -70,11 +77,12 @@ keeps frozen-share scheduling from creeping back in.
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable, List, Optional
 
 from repro.sim.events import EventLoop
 from repro.sim.servicemodel import (KV_BYTES_PER_TOKEN, KV_TOKENS_PER_STREAM,
+                                    SPEC_ALPHA0, SPEC_K, SPEC_OVERHEAD,
                                     TRANSFER_BASE_S, TRANSFER_BYTES_PER_S,
                                     BackendProfile)
 
@@ -101,6 +109,22 @@ def paged_admit_ok(free_pages: int, prompt_tokens: int, page_size: int,
     prompts cannot deadlock the queue.
     """
     return (not resident) or pages_for(prompt_tokens, page_size) <= free_pages
+
+
+def spec_expected_tokens(alpha: float, k: int) -> float:
+    """THE speculative-decoding acceptance model, shared by the simulated
+    and real backends (DESIGN.md §6.1-spec): with per-token draft
+    acceptance rate ``alpha`` and ``k`` draft tokens per verify step, the
+    expected tokens emitted per target forward is the truncated geometric
+    sum ``(1 - alpha^(k+1)) / (1 - alpha)`` — between 1 (every draft
+    rejected: only the pending token survives) and ``k + 1`` (every draft
+    accepted plus the bonus correction).
+    """
+    a = min(max(float(alpha), 0.0), 1.0)
+    k = max(0, int(k))
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
 
 
 @dataclass(frozen=True)
@@ -135,6 +159,12 @@ class ExecutorLoad:
     prefill_kv_used: int = 0
     prefill_kv_budget: int = 0   # 0 = colocated: both phases share kv_budget
     transfer_inflight: int = 0   # disagg: handed off, not yet decode-admitted
+    handoff_bytes: int = 0       # disagg: cumulative KV bytes handed off
+    # speculative backends (DESIGN.md §6.1-spec): expected tokens emitted
+    # per target decode step, (1 - alpha^(k+1)) / (1 - alpha) for draft
+    # acceptance rate alpha and depth k.  1.0 for non-speculative backends,
+    # so dispatch can divide decode pressure by it unconditionally.
+    expected_tokens_per_step: float = 1.0
 
     @property
     def kv_headroom(self) -> float:
@@ -367,6 +397,55 @@ class TokenBucketExecutor(Executor):
         self._reschedule()
 
 
+class SpecTokenBucketExecutor(TokenBucketExecutor):
+    """Simulated speculative-decoding backend (DESIGN.md §6.1-spec).
+
+    Identical to ``TokenBucketExecutor`` in admission (same KV token/page
+    budgets: speculation changes how fast decode *drains*, not how much KV
+    a resident stream holds), but decode throughput is scaled by the
+    analytic acceptance model: each target forward verifies ``spec_k``
+    draft tokens and emits ``spec_expected_tokens(alpha, k)`` tokens in
+    expectation, at ``1 + spec_overhead`` times the cost of a plain decode
+    step (the draft forwards).  Net per-stream decode rate::
+
+        decode_tps * spec_expected_tokens(alpha, k) / (1 + overhead) / share
+
+    ``spec_alpha`` defaults to the same ``SPEC_ALPHA0`` constant that seeds
+    the real engine's online EMA, so a freshly booted sim node and a
+    freshly booted ``SpecEngineExecutor`` report the same
+    ``expected_tokens_per_step`` and make identical admission decisions
+    (agreement test in ``tests/test_spec.py``).
+    """
+
+    def __init__(self, profile: BackendProfile,
+                 page_size: Optional[int] = None, *,
+                 spec_k: int = SPEC_K, spec_alpha: float = SPEC_ALPHA0,
+                 spec_overhead: float = SPEC_OVERHEAD) -> None:
+        super().__init__(profile, page_size)
+        self.spec_k = int(spec_k)
+        self.spec_alpha = float(spec_alpha)
+        self.spec_overhead = float(spec_overhead)
+
+    def expected_tokens_per_step(self) -> float:
+        return spec_expected_tokens(self.spec_alpha, self.spec_k)
+
+    def _speedup(self) -> float:
+        """Net decode-throughput multiplier (> 1 when speculation pays)."""
+        return self.expected_tokens_per_step() / (1.0 + self.spec_overhead)
+
+    def _decode_rate(self) -> float:
+        return super()._decode_rate() * self._speedup()
+
+    def load(self) -> ExecutorLoad:
+        return replace(super().load(),
+                       expected_tokens_per_step=self.expected_tokens_per_step())
+
+    def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
+        return self.profile.service_time(prompt_tokens,
+                                         output_tokens / self._speedup(),
+                                         len(self._streams) + 1)
+
+
 class DisaggTokenBucketExecutor(Executor):
     """Simulated disaggregated prefill/decode backend (DESIGN.md §6.1-disagg).
 
@@ -433,6 +512,7 @@ class DisaggTokenBucketExecutor(Executor):
         self._transfers: List[_Stream] = []    # on the wire
         self._handoffs: List[_Stream] = []     # landed, awaiting admission
         self._decode: List[_Stream] = []
+        self._handoff_bytes = 0                # cumulative KV bytes on the wire
         self._last_t = 0.0
         self._pending_ev = None
         self._loop: Optional[EventLoop] = None
@@ -521,7 +601,8 @@ class DisaggTokenBucketExecutor(Executor):
             pages_total=self.decode_pages_total,
             prefill_kv_used=pre_used,
             prefill_kv_budget=pre_budget,
-            transfer_inflight=len(wire))
+            transfer_inflight=len(wire),
+            handoff_bytes=self._handoff_bytes)
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         share = max(1.0, (len(self._decode) + 1) / self.profile.saturation)
@@ -587,6 +668,8 @@ class DisaggTokenBucketExecutor(Executor):
             s.prompt_left = 0.0
             s.first_token_at = now
             self._transfers.append(s)
+            self._handoff_bytes += (max(1, s.prompt_total)
+                                    * self.kv_bytes_per_token)
             self._loop.schedule(self.transfer_s(s.prompt_total),
                                 lambda s=s: self._on_transfer_landed(s))
         done = [s for s in self._decode if s.output_left <= _EPS]

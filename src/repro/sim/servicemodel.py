@@ -54,6 +54,25 @@ KV_BYTES_PER_TOKEN = 2 * 36 * 8 * 128 * 2              # 147456 B/token
 TRANSFER_BYTES_PER_S = 1.25e9
 TRANSFER_BASE_S = 0.002
 
+# --- speculative decoding (DESIGN.md §6.1-spec) -----------------------------
+# Default draft depth: k draft tokens verified per target forward.
+SPEC_K = 4
+# Prior per-token draft acceptance rate.  This single constant seeds BOTH the
+# real engine's online EMA (Engine.spec_alpha) and the simulated
+# SpecTokenBucketExecutor's configured rate, so sim and engine start from the
+# same expected-tokens-per-step and their admission/estimate decisions agree
+# until real observations move the EMA (sim-vs-engine agreement test in
+# tests/test_spec.py, same pattern as paged_admit_ok).
+SPEC_ALPHA0 = 0.7
+# EMA step for the engine's online acceptance-rate estimate: per verify step,
+# alpha <- (1 - beta) * alpha + beta * (accepted / k).
+SPEC_EMA_BETA = 0.1
+# Fractional per-verify-step overhead of running the draft model (k draft
+# forwards of a ~10x smaller model plus the verify's extra query positions,
+# relative to one target decode step).  The sim charges it against decode
+# throughput; the real engine measures it (EngineStats.draft_wall_s).
+SPEC_OVERHEAD = 0.15
+
 
 @dataclass(frozen=True)
 class BackendProfile:

@@ -129,19 +129,41 @@ class TestBenchSchema:
             check_bench_schema(payload)
 
     def test_schema_checker_rejects_mix_drift(self):
-        """Schema 3 pins the disagg-vs-colocated mixed-workload section."""
+        """Schema 4 keeps pinning the disagg-vs-colocated mixed-workload
+        section (incl. the surfaced transfer pipeline depth)."""
         import json
 
         from benchmarks.run import check_bench_schema
         payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
-        assert payload["schema"] == 3
+        assert payload["schema"] == 4
         assert "ttft_speedup_prompt_heavy" in payload["mix"]
-        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
-        del broken["mix"]["disagg"]["handoffs"]
-        with pytest.raises(AssertionError):
-            check_bench_schema(broken)
+        for key in ("handoffs", "transfer_inflight_peak"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["mix"]["disagg"][key]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
         broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
         del broken["mix"]["slot"]["avg_ttft_prompt_heavy_s"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+
+    def test_schema_checker_rejects_spec_drift(self):
+        """Schema 4 pins the speculative-vs-paged decode-heavy section:
+        accepted-length distribution + effective decode tokens/s."""
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        spec = payload["spec"]
+        assert "speedup_decode_tokens_per_s" in spec
+        assert len(spec["spec"]["accept_hist"]) == spec["spec_k"] + 1
+        for key in ("accept_hist", "alpha_ema", "expected_tokens_per_step"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["spec"]["spec"][key]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        del broken["spec"]["paged"]["decode_tokens_per_s"]
         with pytest.raises(AssertionError):
             check_bench_schema(broken)
 

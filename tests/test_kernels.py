@@ -10,7 +10,9 @@ from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.flash_decode import flash_decode_tpu
 from repro.kernels.paged_decode import flash_paged_decode_tpu
 from repro.kernels.ref import (decode_ref, flash_ref, paged_decode_ref,
-                               reference_attention)
+                               paged_verify_ref, reference_attention,
+                               verify_ref)
+from repro.kernels.spec_verify import flash_paged_verify_tpu
 
 ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -168,6 +170,97 @@ def test_flash_paged_decode_property(b, page, hkv, rep, d, seed):
                                     jnp.float32)
     ref = paged_decode_ref(q, kp, vp, bt, ln)
     out = flash_paged_decode_tpu(q, kp, vp, bt, ln, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+def _paged_verify_case(key, b, kq, h, hkv, d, page, lengths, dtype):
+    """Random pool + block tables with pages covering ``lengths[i] + kq``
+    tokens per row — the kq new tokens' KV is 'already scattered' (random
+    data stands in for it); ``lengths`` is the valid count BEFORE them."""
+    alloc = [ln + kq for ln in lengths]
+    maxp = max(2, max(-(-a // page) for a in alloc) + 1)
+    n_pool = 1 + sum(-(-a // page) for a in alloc)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kq, h, d), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (n_pool, page, hkv, d),
+                           jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (n_pool, page, hkv, d),
+                           jnp.float32).astype(dtype)
+    bt = np.zeros((b, maxp), np.int32)
+    free = list(range(1, n_pool))
+    for i, a in enumerate(alloc):
+        for j in range(-(-a // page)):
+            bt[i, j] = free.pop()
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths, jnp.int32)
+
+
+VERIFY_SWEEP = [
+    # (b, kq, h, hkv, d, page, lengths)
+    (2, 4, 4, 2, 64, 16, (40, 25)),
+    (1, 3, 4, 1, 128, 16, (47,)),              # MQA, partial last page
+    (3, 2, 8, 2, 64, 32, (64, 1, 90)),         # exact-page + single-token
+    (2, 5, 4, 4, 32, 8, (0, 30)),              # empty-prefix row
+]
+
+
+@pytest.mark.parametrize("case", VERIFY_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_paged_verify_sweep(case, dtype):
+    b, kq, h, hkv, d, page, lengths = case
+    q, kp, vp, bt, ln = _paged_verify_case(
+        jax.random.PRNGKey(hash(case) % 2**31), b, kq, h, hkv, d, page,
+        lengths, dtype)
+    ref = paged_verify_ref(q.astype(jnp.float32), kp.astype(jnp.float32),
+                           vp.astype(jnp.float32), bt, ln)
+    out = flash_paged_verify_tpu(q, kp, vp, bt, ln, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=ATOL[dtype], rtol=1e-2)
+
+
+def test_verify_oracle_matches_reference_with_offset():
+    """verify_attention's per-query causal bound == naive reference
+    attention with a q_offset — the multi-token oracle is itself
+    validated."""
+    b, kq, h, hkv, d, ln = 2, 4, 4, 2, 64, 37
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    s = ln + kq + 5                      # trailing garbage must be masked
+    q = jax.random.normal(ks[0], (b, kq, h, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    out = verify_ref(q, kc, vc, jnp.asarray([ln, ln], jnp.int32))
+    ref = reference_attention(q, kc[:, :ln + kq], vc[:, :ln + kq],
+                              causal=True, q_offset=ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_verify_k1_reduces_to_paged_decode():
+    """With one query token the verify oracle is exactly the paged decode
+    oracle at cache_len + 1 (the token's KV already written)."""
+    q, kp, vp, bt, ln = _paged_verify_case(jax.random.PRNGKey(7), 2, 1, 4,
+                                           2, 64, 16, (40, 25), jnp.float32)
+    a = paged_verify_ref(q, kp, vp, bt, ln)
+    b_ = paged_decode_ref(q, kp, vp, bt, ln + 1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+@given(b=st.integers(1, 3), kq=st.integers(1, 5),
+       page=st.sampled_from([8, 16, 32]), hkv=st.sampled_from([1, 2]),
+       rep=st.sampled_from([1, 2, 3]), d=st.sampled_from([32, 64]),
+       seed=st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_flash_paged_verify_property(b, kq, page, hkv, rep, d, seed):
+    """Property: multi-token verify Pallas kernel == gather oracle for
+    random block tables, draft depths, page sizes, and per-row lengths
+    (incl. empty-prefix rows)."""
+    rng = np.random.default_rng(seed)
+    lengths = tuple(int(x) for x in rng.integers(0, 4 * page, size=b))
+    q, kp, vp, bt, ln = _paged_verify_case(jax.random.PRNGKey(seed), b, kq,
+                                           hkv * rep, hkv, d, page, lengths,
+                                           jnp.float32)
+    ref = paged_verify_ref(q, kp, vp, bt, ln)
+    out = flash_paged_verify_tpu(q, kp, vp, bt, ln, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
                                rtol=1e-3)
 

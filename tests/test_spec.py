@@ -1,0 +1,513 @@
+"""Speculative-decoding subsystem (DESIGN.md §6.1-spec).
+
+Five families of tests:
+
+1.  Acceptance model — ``spec_expected_tokens`` hits its closed-form
+    boundary values and the simulated ``SpecTokenBucketExecutor`` reduces
+    to prefill + output/(decode * speedup) exactly for a lone stream.
+2.  Engine parity — ``Engine(spec_draft=..., spec_k=...)`` greedy outputs
+    are bit-identical to the plain paged engine (the repo's standing
+    invariant), with an agreeing draft (every draft accepted), a
+    disagreeing draft (rejection path), under page-pool preemption
+    round-trips, and property-tested across random ``spec_k``, prompt
+    lengths, and pool geometries.
+3.  Multi-token emission — EOS inside an accepted draft run truncates
+    exactly like single-token decode; budgets are never exceeded.
+4.  Sim-vs-engine agreement — identical admit/deny sequences on identical
+    page budgets, and both executors boot reporting the same
+    ``expected_tokens_per_step`` because the engine's EMA is seeded from
+    the sim's ``SPEC_ALPHA0`` constant.
+5.  Acceptance-aware dispatch — ``Network._phase_pressure`` discounts a
+    spec node's decode pressure and ``_est_wait`` scales its effective
+    decode capacity, so decode-heavy requests chase spec-enabled nodes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Network, Node, NodePolicy
+from repro.core.node import QueuedRequest
+from repro.sim import (BackendProfile, EventLoop, SpecTokenBucketExecutor,
+                       TokenBucketExecutor)
+from repro.sim.executor import spec_expected_tokens
+from repro.sim.servicemodel import SPEC_ALPHA0
+from repro.sim.workload import Request
+
+
+def _qr(rid, prompt, output, t=0.0):
+    return QueuedRequest(
+        Request(rid=rid, origin="n", arrival=t, prompt_tokens=prompt,
+                output_tokens=output, slo_s=600.0),
+        enqueue_time=t, delegated=False, origin_node="n")
+
+
+class _Harness:
+    """A SpecTokenBucketExecutor on a bare loop, recording completions."""
+
+    def __init__(self, profile, **kw):
+        self.loop = EventLoop()
+        self.ex = SpecTokenBucketExecutor(profile, **kw)
+        self.done = {}
+        self.ex.bind(self.loop, self._cb)
+
+    def _cb(self, qr, started_at, first_token_at):
+        self.done[qr.req.rid] = dict(finish=self.loop.now,
+                                     started=started_at,
+                                     first_token=first_token_at)
+
+
+PROF = BackendProfile(prefill_tps=1e4, decode_tps=100.0, saturation=2,
+                      max_concurrency=8, quality=0.5, kv_token_budget=4096)
+
+
+# ---------------------------------------------------------------------------
+# 1. the acceptance model + sim analytics
+# ---------------------------------------------------------------------------
+
+class TestAcceptanceModel:
+    def test_boundaries(self):
+        # alpha = 0: every draft rejected, only the pending token lands
+        assert spec_expected_tokens(0.0, 4) == 1.0
+        # alpha = 1: all k drafts plus the bonus token
+        assert spec_expected_tokens(1.0, 4) == 5.0
+        # k = 0 degenerates to plain decode
+        assert spec_expected_tokens(0.9, 0) == 1.0
+
+    def test_closed_form(self):
+        a, k = 0.7, 4
+        assert spec_expected_tokens(a, k) == pytest.approx(
+            sum(a ** i for i in range(k + 1)))
+
+    def test_monotone_in_alpha_and_k(self):
+        prev = 0.0
+        for a in (0.0, 0.2, 0.5, 0.8, 0.99):
+            e = spec_expected_tokens(a, 4)
+            assert e > prev
+            prev = e
+        assert spec_expected_tokens(0.6, 6) > spec_expected_tokens(0.6, 2)
+
+    def test_clipped_outside_unit_interval(self):
+        assert spec_expected_tokens(-0.3, 3) == 1.0
+        assert spec_expected_tokens(1.7, 3) == 4.0
+
+
+class TestSpecSimExecutor:
+    def test_single_request_service_time(self):
+        """A lone stream finishes in prefill + output over the
+        speedup-scaled decode rate — the analytic reduction."""
+        h = _Harness(PROF, spec_k=4, spec_alpha=0.7, spec_overhead=0.15)
+        assert h.ex.admit(_qr("a", 200, 500))
+        h.loop.run()
+        speedup = spec_expected_tokens(0.7, 4) / 1.15
+        expected = 200 / PROF.prefill_tps + 500 / (PROF.decode_tps * speedup)
+        assert h.done["a"]["finish"] == pytest.approx(expected, rel=1e-6)
+
+    def test_alpha_zero_with_free_draft_matches_plain_bucket(self):
+        """alpha=0, overhead=0 degenerates to the plain TokenBucketExecutor."""
+        h = _Harness(PROF, spec_k=4, spec_alpha=0.0, spec_overhead=0.0)
+        assert h.ex.admit(_qr("a", 100, 300))
+        h.loop.run()
+        loop2, done2 = EventLoop(), {}
+        plain = TokenBucketExecutor(PROF)
+        plain.bind(loop2, lambda qr, s, f: done2.update({qr.req.rid: loop2.now}))
+        assert plain.admit(_qr("a", 100, 300))
+        loop2.run()
+        assert h.done["a"]["finish"] == pytest.approx(done2["a"], rel=1e-9)
+
+    def test_load_reports_expected_tokens_per_step(self):
+        h = _Harness(PROF, spec_k=3, spec_alpha=0.5)
+        ld = h.ex.load()
+        assert ld.expected_tokens_per_step == pytest.approx(
+            spec_expected_tokens(0.5, 3))
+        # non-spec backends report the neutral 1.0 default
+        plain = TokenBucketExecutor(PROF)
+        plain.bind(EventLoop(), lambda *a: None)
+        assert plain.load().expected_tokens_per_step == 1.0
+
+    def test_estimate_scales_with_speedup(self):
+        h = _Harness(PROF, spec_k=4, spec_alpha=0.8, spec_overhead=0.1)
+        plain_loop = EventLoop()
+        plain = TokenBucketExecutor(PROF)
+        plain.bind(plain_loop, lambda *a: None)
+        assert h.ex.estimate(256, 512) < plain.estimate(256, 512)
+
+    def test_admission_identical_to_plain_bucket(self):
+        """Speculation never changes WHAT fits, only how fast it drains:
+        the page/token admission rule is inherited unchanged."""
+        for kw in (dict(), dict(page_size=64)):
+            loop_a, loop_b = EventLoop(), EventLoop()
+            spec = SpecTokenBucketExecutor(PROF, spec_alpha=0.9, **kw)
+            plain = TokenBucketExecutor(PROF, **kw)
+            spec.bind(loop_a, lambda *a: None)
+            plain.bind(loop_b, lambda *a: None)
+            decisions = []
+            for i, (p, o) in enumerate(((1000, 1000), (1500, 1500),
+                                        (500, 500), (2000, 2000))):
+                decisions.append((spec.admit(_qr(f"s{i}", p, o)),
+                                  plain.admit(_qr(f"p{i}", p, o))))
+            for s, p in decisions:
+                assert s == p
+
+
+# ---------------------------------------------------------------------------
+# 2. real-engine parity (the standing bit-parity invariant)
+# ---------------------------------------------------------------------------
+
+_MODEL_CACHE = {}
+
+
+def _smoke_model():
+    if "cp" not in _MODEL_CACHE:
+        import jax
+        from repro.configs import get_config
+        from repro.models import registry
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        _MODEL_CACHE["cp"] = (cfg, registry.init(jax.random.PRNGKey(0), cfg))
+    return _MODEL_CACHE["cp"]
+
+
+def _draft_model():
+    if "draft" not in _MODEL_CACHE:
+        import jax
+        from repro.models import registry
+        cfg, _ = _smoke_model()
+        dcfg = cfg.draft()
+        _MODEL_CACHE["draft"] = (dcfg,
+                                 registry.init(jax.random.PRNGKey(9), dcfg))
+    return _MODEL_CACHE["draft"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _smoke_model()
+
+
+def _mk_reqs(seed, n=4, max_prompt=24, max_new_hi=10):
+    from repro.serving import GenRequest
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(5, max_prompt + 1))
+        out.append(GenRequest(
+            rid=f"r{i}",
+            tokens=rng.integers(2, 400, size=plen).astype(np.int32),
+            max_new=int(rng.integers(2, max_new_hi + 1))))
+    return out
+
+
+def _results_by_rid(reqs):
+    return {r.rid: np.asarray(r.result) for r in reqs}
+
+
+class TestSpecEngineParity:
+    def test_agreeing_draft_matches_paged_and_saves_steps(self, setup):
+        """Draft == target: every draft is accepted, outputs are
+        bit-identical, and the spec engine takes strictly fewer target
+        forwards than the plain paged engine."""
+        from repro.serving import Engine
+        cfg, params = setup
+        ref = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(3)))
+        spec = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                      page_size=16, spec_draft=(cfg, params), spec_k=3)
+        b = _results_by_rid(spec.serve(_mk_reqs(3)))
+        assert set(a) == set(b)
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert spec.stats.spec_steps < ref.stats.decode_steps
+        # an agreeing draft accepts every draft at every verify
+        assert spec.stats.spec_accepted == spec.stats.spec_drafted > 0
+        assert sum(spec.spec_accept_hist) == spec.spec_accept_hist[3] > 0
+        assert spec.load_snapshot()["pages_used"] == 0
+
+    def test_disagreeing_draft_matches_paged(self, setup):
+        """A random tiny draft mostly disagrees: the rejection path runs,
+        the EMA falls below its seed, and outputs stay bit-identical."""
+        from repro.serving import Engine
+        cfg, params = setup
+        dcfg, dparams = _draft_model()
+        ref = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(5)))
+        spec = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                      page_size=16, spec_draft=(dcfg, dparams), spec_k=3)
+        b = _results_by_rid(spec.serve(_mk_reqs(5)))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert spec.stats.spec_accepted < spec.stats.spec_drafted
+        assert spec.spec_alpha < SPEC_ALPHA0
+        assert spec.load_snapshot()["pages_used"] == 0
+
+    def test_tight_pool_preempts_and_stays_bit_identical(self, setup):
+        """Page-pool pressure under multi-token lookahead preempts LIFO;
+        the greedy restart reproduces outputs bit-identically."""
+        from repro.serving import Engine
+        cfg, params = setup
+        ref = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(7, n=5, max_new_hi=16)))
+        spec = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                      page_size=16, num_pages=6,
+                      spec_draft=(cfg, params), spec_k=2)
+        b = _results_by_rid(spec.serve(_mk_reqs(7, n=5, max_new_hi=16)))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert spec.stats.preempted > 0
+        snap = spec.load_snapshot()
+        assert snap["pages_used"] == 0
+        assert snap["free_pages"] == snap["pages_total"]
+
+    @given(spec_k=st.integers(1, 3), seed=st.integers(0, 10**6),
+           agreeing=st.booleans())
+    @settings(max_examples=3, deadline=None)
+    def test_random_workload_parity(self, spec_k, seed, agreeing):
+        """Property: spec == paged greedy outputs across random spec_k,
+        prompt lengths, budgets, and draft quality."""
+        from repro.serving import Engine
+        cfg, params = _smoke_model()
+        draft = (cfg, params) if agreeing else _draft_model()
+        ref = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(seed)))
+        spec = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=16, spec_draft=draft, spec_k=spec_k)
+        b = _results_by_rid(spec.serve(_mk_reqs(seed)))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+
+    @pytest.mark.slow
+    @given(spec_k=st.integers(1, 4), page_size=st.sampled_from([8, 16]),
+           pool=st.integers(4, 10), seed=st.integers(0, 10**6),
+           agreeing=st.booleans())
+    @settings(max_examples=8, deadline=None)
+    def test_random_geometry_parity_deep(self, spec_k, page_size, pool,
+                                         seed, agreeing):
+        """Deeper sweep (``-m slow``): random pool geometries force
+        preemption round-trips under multi-token lookahead."""
+        from repro.serving import Engine
+        cfg, params = _smoke_model()
+        draft = (cfg, params) if agreeing else _draft_model()
+        ref = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=page_size)
+        a = _results_by_rid(ref.serve(_mk_reqs(seed, n=5, max_new_hi=14)))
+        spec = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=page_size, num_pages=pool,
+                      spec_draft=draft, spec_k=spec_k)
+        b = _results_by_rid(spec.serve(_mk_reqs(seed, n=5, max_new_hi=14)))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+
+    def test_constructor_validation(self, setup):
+        from repro.serving import Engine
+        cfg, params = setup
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, params, spec_draft=(cfg, params))
+        with pytest.raises(ValueError, match="spec_k"):
+            Engine(cfg, params, paged=True, spec_draft=(cfg, params),
+                   spec_k=0)
+        with pytest.raises(ValueError, match="tokenizer"):
+            Engine(cfg, params, paged=True,
+                   spec_draft=(cfg.replace(vocab_size=17), params))
+
+    def test_spec_engine_is_greedy_only(self, setup):
+        from repro.serving import Engine, GenRequest
+        cfg, params = setup
+        spec = Engine(cfg, params, paged=True, spec_draft=(cfg, params))
+        with pytest.raises(ValueError, match="greedy"):
+            spec.submit(GenRequest(rid="t", tokens=np.arange(2, 8, dtype=np.int32),
+                                   max_new=4, temperature=0.7))
+
+
+# ---------------------------------------------------------------------------
+# 3. multi-token emission semantics
+# ---------------------------------------------------------------------------
+
+class TestMultiTokenEmission:
+    def test_eos_inside_accepted_run_truncates_identically(self, setup):
+        """Pick an EOS id the model actually emits mid-stream, so the EOS
+        lands inside an accepted draft run: the spec engine must truncate
+        exactly like the single-token paged engine."""
+        from repro.serving import Engine
+        cfg, params = setup
+        probe = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                       page_size=16)
+        emitted = _results_by_rid(probe.serve(_mk_reqs(3, max_new_hi=10)))
+        # an output token seen at position >= 2 of some request becomes EOS
+        eos = None
+        for toks in emitted.values():
+            if len(toks) >= 3:
+                eos = int(toks[2])
+                break
+        assert eos is not None
+        cfg2 = cfg.replace(eos_id=eos)
+        ref = Engine(cfg2, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16)
+        a = _results_by_rid(ref.serve(_mk_reqs(3, max_new_hi=10)))
+        spec = Engine(cfg2, params, max_batch=4, bucket=16, paged=True,
+                      page_size=16, spec_draft=(cfg2, params), spec_k=3)
+        b = _results_by_rid(spec.serve(_mk_reqs(3, max_new_hi=10)))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        # the EOS actually truncated something below its budget
+        assert any(len(v) < r.max_new for v, r in
+                   zip(a.values(), _mk_reqs(3, max_new_hi=10)))
+
+    def test_budgets_never_exceeded(self, setup):
+        """Multi-token acceptance must stop at max_new even when more
+        drafts matched."""
+        from repro.serving import Engine
+        cfg, params = setup
+        spec = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                      page_size=16, spec_draft=(cfg, params), spec_k=4)
+        reqs = _mk_reqs(13, n=4, max_new_hi=7)
+        done = spec.serve(reqs)
+        for r in done:
+            assert len(r.result) <= r.max_new
+
+
+# ---------------------------------------------------------------------------
+# 4. sim-vs-engine agreement
+# ---------------------------------------------------------------------------
+
+class TestSimEngineSpecAgreement:
+    def test_boot_expected_tokens_agree(self, setup):
+        """The engine's EMA is seeded from the sim's SPEC_ALPHA0 constant,
+        so a fresh sim node and a fresh engine node report the same
+        expected_tokens_per_step to dispatch."""
+        from repro.serving import Engine, SpecEngineExecutor
+        cfg, params = setup
+        k = 3
+        sim = _Harness(PROF, spec_k=k)
+        ex = SpecEngineExecutor(Engine(cfg, params, max_batch=2, bucket=16,
+                                       paged=True, page_size=16,
+                                       spec_draft=(cfg, params), spec_k=k))
+        ex.bind(None, lambda r, s, f: None)
+        assert (ex.load().expected_tokens_per_step
+                == sim.ex.load().expected_tokens_per_step
+                == pytest.approx(spec_expected_tokens(SPEC_ALPHA0, k)))
+
+    def test_admission_decisions_agree_on_identical_page_budget(self, setup):
+        """Same admit/deny sequence as the paged agreement test: the spec
+        executors inherit the page-granular rule (paged_admit_ok)
+        unchanged — speculation changes drain rate, not residency."""
+        from repro.serving import Engine, GenRequest, SpecEngineExecutor
+        cfg, params = setup
+        page, pool = 16, 8
+        prof = BackendProfile(prefill_tps=1e4, decode_tps=100.0, saturation=2,
+                              max_concurrency=8, quality=0.5,
+                              kv_token_budget=page * pool)
+        sim = _Harness(prof, page_size=page, spec_k=1)
+        eng = Engine(cfg, params, max_batch=8, bucket=16, paged=True,
+                     page_size=page, num_pages=pool,
+                     spec_draft=(cfg, params), spec_k=1)
+        ex = SpecEngineExecutor(eng, gate_on_pages=True)
+        ex.bind(None, lambda r, st_, ft: None)
+        rng = np.random.default_rng(5)
+        sim_dec, eng_dec = [], []
+        for i, plen in enumerate((40, 30, 50, 20)):     # pages 3, 2, 4, 2
+            sim_dec.append(sim.ex.admit(_qr(f"s{i}", plen, 64)))
+            ok = ex.admit(GenRequest(
+                rid=f"e{i}", tokens=rng.integers(2, 400, size=plen)
+                .astype(np.int32), max_new=64))
+            eng_dec.append(ok)
+            if ok:
+                ex.step()         # prefill claims the prompt pages for real
+        assert sim_dec == eng_dec == [True, True, False, True]
+        assert ex.load().pages_total == sim.ex.load().pages_total == pool
+
+    def test_engine_estimate_includes_draft_wall(self, setup):
+        """SpecEngineExecutor.estimate charges the draft's measured wall
+        time next to the target-side decode wall."""
+        from repro.serving import Engine, SpecEngineExecutor
+        cfg, params = setup
+        ex = SpecEngineExecutor(Engine(cfg, params, max_batch=2, bucket=16,
+                                       paged=True, page_size=16,
+                                       spec_draft=(cfg, params), spec_k=2))
+        ex.bind(None, lambda r, s, f: None)
+        assert ex.estimate(64, 64) == float("inf")     # uncalibrated
+        for r in _mk_reqs(21, n=2, max_new_hi=6):
+            assert ex.admit(r)
+        ex.drain()
+        st = ex.engine.stats
+        assert st.draft_wall_s > 0 and st.verify_wall_s > 0
+        est = ex.estimate(64, 64)
+        assert np.isfinite(est) and est > 0
+        # target-only rate would promise a faster (smaller) time
+        target_only = 64 / (st.decode_tokens / st.decode_wall_s) \
+            + 64 / (st.prefill_tokens / st.prefill_wall_s)
+        assert est >= target_only
+
+
+# ---------------------------------------------------------------------------
+# 5. acceptance-aware dispatch
+# ---------------------------------------------------------------------------
+
+class TestAcceptanceAwareDispatch:
+    def _net(self, spec_nodes=("n2",), alpha=0.9):
+        from repro.core import DuelParams
+        net = Network(mode="decentralized", seed=0, init_balance=100.0,
+                      power_of_two=True, duel=DuelParams(p_d=0.0))
+        pol = NodePolicy(accept_freq=1.0, target_utilization=100.0)
+        small = BackendProfile(prefill_tps=1e4, decode_tps=100.0,
+                               saturation=2, max_concurrency=8, quality=0.5,
+                               kv_token_budget=2048)
+        for nid in ("n0", "n1", "n2"):
+            if nid in spec_nodes:
+                factory = (lambda node: SpecTokenBucketExecutor(
+                    node.profile, spec_alpha=alpha))
+            else:
+                factory = (lambda node: TokenBucketExecutor(node.profile))
+            net.add_node(Node(nid, small, policy=pol,
+                              executor_factory=factory))
+        return net
+
+    def test_decode_pressure_discounted_by_acceptance_model(self):
+        """Equal KV occupancy, but the spec node's decode backlog drains
+        E[tokens/step] times faster — decode-heavy requests must see it as
+        less pressured, prompt-heavy requests as equally pressured."""
+        net = self._net()
+        n1, n2 = net.nodes["n1"], net.nodes["n2"]
+        for n in (n1, n2):
+            assert n.executor.admit(_qr(f"fill-{n.id}", 24, 1000))
+        net.loop.run(until=1.0)           # both streams are decoding now
+        decode_heavy = Request(rid="d", origin="n0", arrival=1.0,
+                               prompt_tokens=8, output_tokens=900,
+                               slo_s=600.0)
+        assert (net._phase_pressure(n2, decode_heavy)
+                < net._phase_pressure(n1, decode_heavy))
+        prompt_heavy = Request(rid="p", origin="n0", arrival=1.0,
+                               prompt_tokens=4000, output_tokens=1,
+                               slo_s=600.0)
+        # ~all-prefill mix: the discount applies only to the (negligible)
+        # decode share, so both nodes score essentially the same
+        assert net._phase_pressure(n2, prompt_heavy) == pytest.approx(
+            net._phase_pressure(n1, prompt_heavy), rel=1e-2)
+
+    def test_est_wait_scales_decode_capacity(self):
+        """The centralized estimator sees a spec node's backlog draining
+        faster on identical queues."""
+        net = self._net()
+        n1, n2 = net.nodes["n1"], net.nodes["n2"]
+        for n in (n1, n2):
+            assert n.executor.admit(_qr(f"fill-{n.id}", 24, 1500))
+        net.loop.run(until=1.0)
+        req = Request(rid="x", origin="n0", arrival=1.0, prompt_tokens=8,
+                      output_tokens=400, slo_s=600.0)
+        assert net._est_wait(n2, req) < net._est_wait(n1, req)
+
+    def test_decode_heavy_request_chases_spec_node(self):
+        """Power-of-two probing with equal occupancy routes the
+        decode-heavy request to the speculation-enabled candidate."""
+        net = self._net()
+        n1, n2 = net.nodes["n1"], net.nodes["n2"]
+        for n in (n1, n2):
+            assert n.executor.admit(_qr(f"fill-{n.id}", 24, 1000))
+        net.loop.run(until=1.0)
+        before = n2.executor.load().active_streams
+        req = Request(rid="x", origin="n0", arrival=1.0, prompt_tokens=8,
+                      output_tokens=900, slo_s=600.0)
+        assert net.try_offload(net.nodes["n0"], req)
+        net.loop.run(until=2.0)
+        assert n2.executor.load().active_streams > before
