@@ -23,6 +23,13 @@ performance trajectory is tracked PR over PR::
 The payload shape is pinned by ``check_bench_schema`` (validated here at
 write time and against the checked-in file by ``tests/test_compat.py``, so
 schema drift is caught in tier-1).
+
+``--lint`` runs the AST invariant linter (``repro.analysis``,
+DESIGN.md §7) over src/tests/benchmarks — a <10s jax-free pass that is
+also the first check of ``--smoke`` and whose rule/violation counts are
+recorded in the ``lint`` section of the --bench payload (schema 5)::
+
+    PYTHONPATH=src python benchmarks/run.py --lint
 """
 
 from __future__ import annotations
@@ -34,10 +41,13 @@ import time
 from typing import List
 
 # allow `python benchmarks/run.py` without the repo root on PYTHONPATH
-# (the sibling benchmark modules import as the ``benchmarks`` package)
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+# (the sibling benchmark modules import as the ``benchmarks`` package,
+# and repro imports from src/)
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO))
+sys.path.insert(0, str(_REPO / "src"))
 
-BENCH_SCHEMA_VERSION = 4
+BENCH_SCHEMA_VERSION = 5
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -57,6 +67,10 @@ SPEC_MODES = ("paged", "spec")
 SPEC_MODE_KEYS = ("decode_tokens", "decode_tokens_per_s", "wall_s", "served")
 SPEC_ONLY_KEYS = ("accept_hist", "alpha_ema", "expected_tokens_per_step",
                   "draft_wall_s", "verify_steps")
+# schema 5: static-analysis snapshot (DESIGN.md §7) — which rules ran and
+# the violation counts by disposition, so a silently growing baseline or
+# suppression set shows up in the PR-over-PR artifact diff
+LINT_KEYS = ("rules", "new", "suppressed", "baselined", "wall_s")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -97,6 +111,24 @@ def check_bench_schema(payload: dict) -> None:
     for k in SPEC_ONLY_KEYS:
         assert k in spec["spec"], f"spec.spec.{k} missing"
     assert len(spec["spec"]["accept_hist"]) == spec["spec_k"] + 1
+    lint = payload["lint"]
+    for k in LINT_KEYS:
+        assert k in lint, f"lint.{k} missing"
+    assert lint["new"] == 0, "lint.new must be 0 in a committed artifact"
+
+
+def _lint(verbose: bool = True) -> int:
+    """Run the AST invariant linter (DESIGN.md §7); jax-free and <10s."""
+    from repro.analysis import run_analysis
+    report = run_analysis(_REPO)
+    if verbose:
+        for f in report.new:
+            print(f"  {f.format()}", flush=True)
+        print(f"lint: {len(report.rules)} checkers, {len(report.new)} new "
+              f"/ {len(report.suppressed)} suppressed / "
+              f"{len(report.baselined)} baselined in {report.wall_s:.2f}s",
+              flush=True)
+    return 0 if report.ok else 1
 
 
 def _smoke() -> int:
@@ -273,7 +305,12 @@ def _smoke() -> int:
         m = net.run(reqs, until=300.0)
         assert len(m.completed) >= 20
 
+    def analysis_clean():
+        assert _lint(verbose=False) == 0, \
+            "repro.analysis found new violations (run --lint for details)"
+
     print("smoke: end-to-end sanity pass", flush=True)
+    check("static analysis (repro.analysis)", analysis_clean)
     check("model forward + prefill/decode consistency", model_roundtrip)
     check("serving engine generation", engine_generates)
     check("paged engine greedy-matches slot engine", paged_engine_matches_slot)
@@ -549,6 +586,17 @@ def _bench(out_path: str) -> int:
         **spec_out,
     }
 
+    # --- static-analysis snapshot (DESIGN.md §7) ----------------------------
+    from repro.analysis import run_analysis
+    lint_report = run_analysis(_REPO)
+    payload["lint"] = {
+        "rules": lint_report.rules,
+        "new": len(lint_report.new),
+        "suppressed": len(lint_report.suppressed),
+        "baselined": len(lint_report.baselined),
+        "wall_s": round(lint_report.wall_s, 3),
+    }
+
     check_bench_schema(payload)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -589,7 +637,12 @@ def main(argv=None) -> int:
                          "tokens/s)")
     ap.add_argument("--bench-out", default="BENCH_scheduling.json",
                     help="output path for --bench")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the AST invariant linter (repro.analysis) "
+                         "only; <10s, no jax import")
     args = ap.parse_args(argv)
+    if args.lint:
+        return _lint()
     if args.smoke:
         return _smoke()
     if args.bench:

@@ -1,0 +1,34 @@
+"""repro.analysis: AST-based invariant linter for the repo's contracts.
+
+One framework (``repro.analysis.framework``), five checkers
+(DESIGN.md §7):
+
+* ``compat-boundary`` — version-gated JAX symbols only via repro.compat
+* ``layering``       — import DAG, Executor contract, state boundaries
+* ``kernel-lint``    — Pallas kernel body / index-map / grid hygiene
+* ``twin-drift``     — sim twin and engines share one constant vocabulary
+* ``docs-anchors``   — DESIGN.md §-anchors resolve wherever cited
+
+Run it as ``python -m repro.analysis`` (see ``__main__``), from tier-1
+via ``tests/test_analysis.py``, or from ``benchmarks/run.py --lint``.
+Stdlib-only by design: importing this package must never pull in jax.
+"""
+
+from repro.analysis.framework import (BASELINE_FILE, SCAN_DIRS, Checker,
+                                      Finding, RepoIndex, Report,
+                                      all_checkers, load_baseline,
+                                      register, rule_matches, run_analysis,
+                                      save_baseline)
+
+# importing the checker modules is what populates the registry
+from repro.analysis import compatrules as _compatrules    # noqa: F401
+from repro.analysis import docanchors as _docanchors      # noqa: F401
+from repro.analysis import kernellint as _kernellint      # noqa: F401
+from repro.analysis import layering as _layering          # noqa: F401
+from repro.analysis import twindrift as _twindrift        # noqa: F401
+
+__all__ = [
+    "BASELINE_FILE", "SCAN_DIRS", "Checker", "Finding", "RepoIndex",
+    "Report", "all_checkers", "load_baseline", "register", "rule_matches",
+    "run_analysis", "save_baseline",
+]

@@ -1,0 +1,97 @@
+"""``python -m repro.analysis`` — run the invariant linter from the shell.
+
+Exit status 0 when no *new* findings (inline-suppressed and baselined
+ones are reported but do not fail); 1 otherwise.
+
+    python -m repro.analysis                      # human-readable
+    python -m repro.analysis --json               # machine-readable
+    python -m repro.analysis --rules layering,twin-drift
+    python -m repro.analysis --write-baseline     # grandfather current new
+    python -m repro.analysis --no-baseline        # strict: ignore baseline
+    python -m repro.analysis --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis.framework import (BASELINE_FILE, all_checkers,
+                                      run_analysis, save_baseline)
+
+
+def _default_root() -> pathlib.Path:
+    # src/repro/analysis/__main__.py -> repo root is four levels up
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based invariant linter (DESIGN.md §7)")
+    ap.add_argument("--root", type=pathlib.Path, default=None,
+                    help="repository root (default: this checkout)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated top-level rule ids to run")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON report instead of text")
+    ap.add_argument("--baseline", type=pathlib.Path, default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_FILE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline; every finding is new")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather the current new findings into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered checkers and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for c in all_checkers():
+            print(f"{c.rule_id:16s} {c.description}")
+        return 0
+
+    root = (args.root or _default_root()).resolve()
+    baseline_path = "" if args.no_baseline else args.baseline
+    report = run_analysis(root, rules=args.rules.split(",")
+                          if args.rules else None,
+                          baseline_path=baseline_path)
+
+    if args.write_baseline:
+        path = args.baseline or root / BASELINE_FILE
+        save_baseline(path, report.new + report.baselined)
+        print(f"wrote {len(report.new) + len(report.baselined)} entries "
+              f"to {path}")
+        return 0
+
+    if args.as_json:
+        payload = {
+            "root": str(root),
+            "rules": report.rules,
+            "wall_s": round(report.wall_s, 3),
+            "counts": {"new": len(report.new),
+                       "suppressed": len(report.suppressed),
+                       "baselined": len(report.baselined)},
+            "new": [f.__dict__ for f in report.new],
+            "suppressed": [f.__dict__ for f in report.suppressed],
+            "baselined": [f.__dict__ for f in report.baselined],
+        }
+        print(json.dumps(payload, indent=2))
+    else:
+        for f in report.new:
+            print(f.format())
+        for f in report.suppressed:
+            print(f"{f.format()}  [suppressed]")
+        for f in report.baselined:
+            print(f"{f.format()}  [baselined]")
+        print(f"{len(report.rules)} checkers, "
+              f"{len(report.new)} new / {len(report.suppressed)} "
+              f"suppressed / {len(report.baselined)} baselined findings "
+              f"in {report.wall_s:.2f}s")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

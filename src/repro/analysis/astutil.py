@@ -1,0 +1,132 @@
+"""Small shared AST helpers for the checkers (stdlib ``ast`` only)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, None for anything dynamic."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Dotted name of a call target (``functools.partial``, ``print``)."""
+    return dotted(call.func)
+
+
+def imported_modules(tree: ast.Module) -> Iterator[Tuple[str, int]]:
+    """(module_name, lineno) for every import, wherever it appears.
+
+    ``from x import y`` yields ``x`` AND ``x.y`` — ``y`` may be a
+    submodule, and layering rules must see that edge either way.
+    """
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield alias.name, node.lineno
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            yield node.module, node.lineno
+            for alias in node.names:
+                if alias.name != "*":
+                    yield f"{node.module}.{alias.name}", node.lineno
+
+
+def numpy_aliases(tree: ast.Module) -> Set[str]:
+    """Local names bound to the host ``numpy`` module (not jax.numpy)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy":
+                    out.add(alias.asname or "numpy")
+    return out
+
+
+def assigned_names(node: ast.AST) -> Set[str]:
+    """Names bound anywhere inside ``node`` (assignments, loops, with,
+    imports, nested defs) — a conservative local-scope approximation."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store,
+                                                          ast.Del)):
+            out.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            out.add(n.name)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for alias in n.names:
+                out.add((alias.asname or alias.name).split(".")[0])
+    return out
+
+
+def param_names(fn) -> Set[str]:
+    """All parameter names of a FunctionDef/Lambda."""
+    a = fn.args
+    params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    if a.vararg:
+        params.append(a.vararg)
+    if a.kwarg:
+        params.append(a.kwarg)
+    return {p.arg for p in params}
+
+
+def module_scope_names(tree: ast.Module) -> Set[str]:
+    """Names defined at module top level (defs, classes, imports,
+    assignments) — what a module-level function may reference freely."""
+    out: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        out.add(n.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            out.add(node.target.id)
+    return out
+
+
+def const_literal(node: ast.AST):
+    """(True, value) when ``node`` is a numeric/str/bool literal (allowing
+    unary +/-), else (False, None)."""
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub,
+                                                              ast.UAdd)):
+        ok, v = const_literal(node.operand)
+        if ok and isinstance(v, (int, float, complex)):
+            return True, -v if isinstance(node.op, ast.USub) else v
+        return False, None
+    if isinstance(node, ast.Constant) and isinstance(
+            node.value, (int, float, complex, str, bool)):
+        return True, node.value
+    return False, None
+
+
+class FunctionIndex:
+    """Functions of one module, addressable by name, with enclosing-scope
+    info: module-level defs plus defs nested one level inside them."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.module_level: Dict[str, ast.FunctionDef] = {}
+        self.parent: Dict[ast.FunctionDef, Optional[ast.FunctionDef]] = {}
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                self.module_level[node.name] = node
+                self.parent[node] = None
+                for inner in ast.walk(node):
+                    if isinstance(inner, ast.FunctionDef) and inner is not node:
+                        self.parent.setdefault(inner, node)

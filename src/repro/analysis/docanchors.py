@@ -1,0 +1,112 @@
+"""docs-anchors: DESIGN.md §-anchors cited anywhere must resolve.
+
+Code and the planning docs cite DESIGN.md sections by anchor (``§6.1``,
+``§6.1-disagg``, ...).  Renaming or deleting a section must fail loudly
+instead of leaving dangling references — the executor layer is meant to
+be learnable from the docs without reading PR history.  Three sub-rules:
+
+* ``docs-anchors/required`` — DESIGN.md keeps the pinned section set the
+  rest of the repo is written against.
+* ``docs-anchors/markdown`` — every §-anchor in the referrer markdown
+  files (ROADMAP.md, CHANGES.md, README.md, and DESIGN.md's own body)
+  resolves to a DESIGN.md heading.
+* ``docs-anchors/python`` — a §-anchor in Python source is checked when
+  it is *attributed to DESIGN.md*: the text ``DESIGN.md`` appears within
+  ~80 characters before the anchor, looking across the previous line so
+  wrapped docstrings like ``(DESIGN.md\\n§6.1-spec)`` still count.
+  Anchors citing the paper or EXPERIMENTS (``§5``, ``§A.2``, ``§Perf``)
+  carry no DESIGN.md attribution and are ignored.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterable, Set
+
+from repro.analysis.framework import Checker, Finding, RepoIndex, register
+
+# a §-anchor: "§6.1", "§6.1-paged", "§Arch-applicability" — trailing
+# punctuation (".", ")", ":") is prose, not part of the anchor
+ANCHOR = re.compile(r"§[A-Za-z0-9](?:[A-Za-z0-9.\-]*[A-Za-z0-9])?")
+
+DESIGN = "DESIGN.md"
+
+# markdown files whose §-anchors all refer to DESIGN.md sections
+MARKDOWN_REFERRERS = ("ROADMAP.md", "CHANGES.md", "README.md", DESIGN)
+
+# the section set the rest of the repo is written against
+REQUIRED_ANCHORS = ("§6.1", "§6.1-paged", "§6.1-disagg", "§6.1-spec",
+                    "§6.2", "§6.3", "§7", "§Arch-applicability")
+
+# how far back attribution text may sit from the anchor it qualifies
+_ATTRIBUTION_WINDOW = 80
+
+
+@register
+class DocAnchorsChecker(Checker):
+    rule_id = "docs-anchors"
+    description = ("DESIGN.md §-anchors cited from markdown or "
+                   "DESIGN.md-attributed Python docstrings resolve to a "
+                   "real heading")
+
+    def run(self, repo: RepoIndex) -> Iterable[Finding]:
+        if not repo.exists(DESIGN):
+            yield Finding("docs-anchors/required", DESIGN, 0,
+                          "DESIGN.md is missing")
+            return
+        defined = self._defined(repo)
+
+        for a in REQUIRED_ANCHORS:
+            if a not in defined:
+                yield Finding(
+                    "docs-anchors/required", DESIGN, 0,
+                    f"DESIGN.md lost its {a} heading (rename it back or "
+                    f"update every referrer first)")
+
+        for name in MARKDOWN_REFERRERS:
+            if not repo.exists(name):
+                yield Finding("docs-anchors/markdown", name, 0,
+                              f"referrer {name} is missing")
+                continue
+            for i, line in enumerate(repo.lines(name), 1):
+                if name == DESIGN and line.lstrip().startswith("#"):
+                    continue                  # heading defines, not cites
+                for ref in ANCHOR.findall(line):
+                    if ref not in defined:
+                        yield Finding(
+                            "docs-anchors/markdown", name, i,
+                            f"dangling DESIGN.md anchor {ref} (rename the "
+                            f"section back or update the referrer)")
+
+        for rel in repo.py_files():
+            lines = repo.lines(rel)
+            for i, line in enumerate(lines, 1):
+                prev = lines[i - 2] if i >= 2 else ""
+                joined = prev + " " + line
+                offset = len(prev) + 1
+                last_end = 0
+                for m in ANCHOR.finditer(joined):
+                    # attribution must sit between the previous anchor and
+                    # this one — "(DESIGN.md §6.1); the paper's §5" leaves
+                    # §5 unattributed even though DESIGN.md is nearby
+                    window = joined[max(0, m.start() - _ATTRIBUTION_WINDOW,
+                                        last_end):m.start()]
+                    last_end = m.end()
+                    if m.start() < offset:
+                        continue              # prev line's anchor: already
+                    if DESIGN not in window:  # reported on its own turn
+                        continue              # paper/EXPERIMENTS citation
+                    if m.group(0) not in defined:
+                        yield Finding(
+                            "docs-anchors/python", rel, i,
+                            f"dangling DESIGN.md anchor {m.group(0)} "
+                            f"(cited here but DESIGN.md has no such "
+                            f"heading)")
+
+    @staticmethod
+    def _defined(repo: RepoIndex) -> Set[str]:
+        out: Set[str] = set()
+        for line in repo.lines(DESIGN):
+            if line.lstrip().startswith("#"):
+                out.update(ANCHOR.findall(line))
+        return out

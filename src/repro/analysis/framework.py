@@ -1,0 +1,275 @@
+"""Static-analysis framework: findings, suppressions, baseline, registry.
+
+The repo's architectural contracts (DESIGN.md §7) — the compat boundary,
+the layering DAG, kernel hygiene, sim/engine twin agreement, and doc
+anchors — used to be defended by string greps scattered across the test
+suite.  This package replaces them with one AST-based analyzer:
+
+* ``Finding(rule_id, path, line, msg)`` — one structured violation.
+* ``RepoIndex`` — the shared view of the repository every checker reads:
+  file listing per scan dir, text/line access, and a **per-file parse
+  cache** so five checkers parsing the same tree cost one ``ast.parse``.
+* ``Checker`` + ``register`` — the checker registry.  A checker owns one
+  top-level rule id (``compat-boundary``, ``layering``, ...) and may emit
+  findings under sub-rule ids (``layering/import-dag``); suppressions and
+  rule selection match either the full id or the top-level prefix.
+* inline suppressions — ``# repro: allow[rule-id]`` on the offending line
+  (or on a comment line directly above it) waives that rule there.  Used
+  for *intentional* exceptions with a one-line justification; accidental
+  regressions have no comment and fail.
+* baseline — a committed JSON file (``analysis_baseline.json`` at the repo
+  root) of grandfathered findings, matched by ``(rule, path, msg)`` (no
+  line numbers, so unrelated edits don't churn it).  New violations fail
+  while baselined ones are only tracked.  The goal state — enforced by
+  ``tests/test_analysis.py`` — is an *empty* baseline.
+
+Stdlib-only (``ast``): no new dependencies.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+import re
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# directories scanned relative to the repo root (missing ones are skipped)
+SCAN_DIRS = ("src", "tests", "benchmarks")
+
+# committed baseline of grandfathered findings, repo-root relative
+BASELINE_FILE = "analysis_baseline.json"
+
+# inline suppression: "# repro: allow[rule-a, rule-b/sub]"
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_\-/,\s]+)\]")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a specific source location."""
+
+    rule_id: str
+    path: str          # repo-root-relative posix path
+    line: int          # 1-based; 0 for whole-file findings
+    msg: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule_id}] {self.msg}"
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: line numbers shift on unrelated edits, so
+        grandfathered findings are matched by (rule, path, msg)."""
+        return (self.rule_id, self.path, self.msg)
+
+
+def rule_matches(selector: str, rule_id: str) -> bool:
+    """``selector`` selects ``rule_id`` exactly or as its top-level prefix
+    (``layering`` matches ``layering/import-dag``)."""
+    return rule_id == selector or rule_id.startswith(selector + "/")
+
+
+class RepoIndex:
+    """Read-only repository view shared by all checkers in one run.
+
+    Texts, line splits, parsed ASTs, and suppression tables are cached per
+    file, so the cost of N checkers is one parse per file plus N
+    traversals.  Files that fail to parse are reported once through
+    ``parse_errors`` (the runner turns them into findings) and excluded
+    from ``tree``-based analysis.
+    """
+
+    def __init__(self, root, scan_dirs: Sequence[str] = SCAN_DIRS) -> None:
+        self.root = pathlib.Path(root).resolve()
+        self.scan_dirs = tuple(d for d in scan_dirs
+                               if (self.root / d).is_dir())
+        self.parse_errors: Dict[str, str] = {}
+        self._py_files: Optional[List[str]] = None
+        self._text: Dict[str, str] = {}
+        self._lines: Dict[str, List[str]] = {}
+        self._tree: Dict[str, Optional[ast.Module]] = {}
+        self._suppress: Dict[str, Dict[int, Set[str]]] = {}
+
+    # ------------------------------------------------------------------ files
+    def py_files(self) -> List[str]:
+        """Sorted repo-relative paths of every Python file in scope."""
+        if self._py_files is None:
+            out: List[str] = []
+            for d in self.scan_dirs:
+                out.extend(p.relative_to(self.root).as_posix()
+                           for p in (self.root / d).rglob("*.py"))
+            self._py_files = sorted(out)
+        return list(self._py_files)
+
+    def exists(self, rel: str) -> bool:
+        return (self.root / rel).is_file()
+
+    def text(self, rel: str) -> str:
+        if rel not in self._text:
+            self._text[rel] = (self.root / rel).read_text()
+        return self._text[rel]
+
+    def lines(self, rel: str) -> List[str]:
+        if rel not in self._lines:
+            self._lines[rel] = self.text(rel).splitlines()
+        return self._lines[rel]
+
+    def tree(self, rel: str) -> Optional[ast.Module]:
+        """Parsed AST for ``rel`` (cached), or None on syntax error."""
+        if rel not in self._tree:
+            try:
+                self._tree[rel] = ast.parse(self.text(rel), filename=rel)
+            except SyntaxError as e:
+                self._tree[rel] = None
+                self.parse_errors[rel] = f"line {e.lineno}: {e.msg}"
+        return self._tree[rel]
+
+    def module_name(self, rel: str) -> Optional[str]:
+        """Importable dotted name for ``rel`` (``src/repro/sim/x.py`` ->
+        ``repro.sim.x``), or None for non-importable layouts."""
+        parts = pathlib.PurePosixPath(rel).with_suffix("").parts
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if not parts:
+            return None
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts) if parts else None
+
+    # ---------------------------------------------------------- suppressions
+    def suppressions(self, rel: str) -> Dict[int, Set[str]]:
+        """line -> allowed rule selectors.  A comment-only allow line also
+        covers the next line, so long statements can carry a justification
+        comment above them."""
+        if rel not in self._suppress:
+            table: Dict[int, Set[str]] = {}
+            for i, line in enumerate(self.lines(rel), 1):
+                m = _ALLOW_RE.search(line)
+                if not m:
+                    continue
+                rules = {tok.strip() for tok in m.group(1).split(",")
+                         if tok.strip()}
+                table.setdefault(i, set()).update(rules)
+                if line.lstrip().startswith("#"):      # comment-only line
+                    table.setdefault(i + 1, set()).update(rules)
+            self._suppress[rel] = table
+        return self._suppress[rel]
+
+    def is_suppressed(self, f: Finding) -> bool:
+        if not f.path.endswith(".py"):
+            return False
+        table = self.suppressions(f.path)
+        return any(rule_matches(sel, f.rule_id)
+                   for sel in table.get(f.line, ()))
+
+
+class Checker:
+    """One registered rule family.  Subclasses set ``rule_id`` and
+    ``description`` and yield ``Finding``s from ``run``; sub-rules use ids
+    of the form ``<rule_id>/<sub>``."""
+
+    rule_id: str = ""
+    description: str = ""
+
+    def run(self, repo: RepoIndex) -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Checker] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the checker registry."""
+    inst = cls()
+    if not inst.rule_id:
+        raise ValueError(f"{cls.__name__} has no rule_id")
+    if inst.rule_id in _REGISTRY:
+        raise ValueError(f"duplicate checker rule_id {inst.rule_id!r}")
+    _REGISTRY[inst.rule_id] = inst
+    return cls
+
+
+def all_checkers() -> List[Checker]:
+    # the checker modules self-register on package import (repro.analysis
+    # imports them); sorting keeps output deterministic
+    return [(_REGISTRY[k]) for k in sorted(_REGISTRY)]
+
+
+# ------------------------------------------------------------------ baseline
+def load_baseline(path) -> List[Tuple[str, str, str]]:
+    """Baseline entries as (rule, path, msg) keys; missing file = empty."""
+    p = pathlib.Path(path)
+    if not p.is_file():
+        return []
+    payload = json.loads(p.read_text())
+    return [(e["rule"], e["path"], e["msg"])
+            for e in payload.get("entries", [])]
+
+
+def save_baseline(path, findings: Sequence[Finding]) -> None:
+    payload = {
+        "comment": "grandfathered analysis findings; see DESIGN.md §7 — "
+                   "the goal state is an empty list",
+        "entries": [{"rule": f.rule_id, "path": f.path, "msg": f.msg}
+                    for f in sorted(findings)],
+    }
+    pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+# -------------------------------------------------------------------- runner
+@dataclass
+class Report:
+    """Outcome of one analysis pass over a repository."""
+
+    new: List[Finding] = field(default_factory=list)        # fail the run
+    suppressed: List[Finding] = field(default_factory=list)  # inline allows
+    baselined: List[Finding] = field(default_factory=list)   # grandfathered
+    rules: List[str] = field(default_factory=list)           # checkers run
+    wall_s: float = 0.0
+
+    @property
+    def all_findings(self) -> List[Finding]:
+        return sorted(self.new + self.suppressed + self.baselined)
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+
+def run_analysis(root, rules: Optional[Sequence[str]] = None,
+                 baseline_path=None,
+                 scan_dirs: Sequence[str] = SCAN_DIRS) -> Report:
+    """Run the registered checkers over the repo at ``root``.
+
+    ``rules`` selects checkers by top-level id (None = all).
+    ``baseline_path``: None = ``<root>/analysis_baseline.json`` when it
+    exists; pass an explicit path to force one, or "" to disable.
+    """
+    t0 = time.perf_counter()
+    repo = RepoIndex(root, scan_dirs)
+    checkers = [c for c in all_checkers()
+                if rules is None
+                or any(rule_matches(sel, c.rule_id)
+                       or c.rule_id.startswith(sel) for sel in rules)]
+    raw: List[Finding] = []
+    for checker in checkers:
+        raw.extend(checker.run(repo))
+    for rel, err in sorted(repo.parse_errors.items()):
+        raw.append(Finding("parse-error", rel, 0, err))
+
+    if baseline_path is None:
+        baseline_path = repo.root / BASELINE_FILE
+    baseline = list(load_baseline(baseline_path)) if baseline_path else []
+
+    report = Report(rules=[c.rule_id for c in checkers])
+    for f in sorted(set(raw)):
+        if repo.is_suppressed(f):
+            report.suppressed.append(f)
+        elif f.key() in baseline:
+            baseline.remove(f.key())       # multiset semantics
+            report.baselined.append(f)
+        else:
+            report.new.append(f)
+    report.wall_s = time.perf_counter() - t0
+    return report

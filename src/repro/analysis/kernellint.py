@@ -1,0 +1,281 @@
+"""kernel-lint: hygiene for Pallas kernel bodies and their wrappers.
+
+A Pallas kernel body is traced once and compiled; Python-level effects
+inside it either disappear silently or poison the trace.  This checker
+finds every kernel body reachable from a ``pl.pallas_call`` (resolving
+``functools.partial(kernel, ...)`` bindings) and enforces
+(DESIGN.md §7):
+
+* ``kernel-lint/side-effects`` — no host-side calls in a kernel body:
+  ``print``/``breakpoint``/``input``/``open``/``exec``/``eval``, host
+  ``numpy`` (``np.*``) ops, and no ``global``/``nonlocal`` statements.
+* ``kernel-lint/closure`` — the kernel body must not capture names from
+  an enclosing function scope.  Closure capture is how tracers leak into
+  a kernel (the wrapper's arrays are visible to a nested def); static
+  values must be bound explicitly via ``functools.partial`` keywords so
+  they are parameters, not ambient state.  Module-level kernels with
+  module-global references are fine.
+* ``kernel-lint/index-map`` — BlockSpec ``index_map`` callables must be
+  pure index arithmetic: single-expression bodies, no assignments, and no
+  calls beyond ``pl.ds``/``pl.dslice``/``pl.multiple_of`` and
+  ``min``/``max``/``divmod``.  (Scalar-prefetch ref reads are
+  subscripts, not calls, and stay legal.)
+* ``kernel-lint/grid-divisibility`` — a grid axis computed as ``x // b``
+  silently drops remainder tokens when ``b`` does not divide ``x``.  The
+  wrapper must carry evidence of divisibility for each such divisor:
+  either pad arithmetic mentioning ``% b`` or an
+  ``assert ... % b == 0``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.astutil import (FunctionIndex, assigned_names,
+                                    call_name, module_scope_names,
+                                    numpy_aliases, param_names)
+from repro.analysis.framework import Checker, Finding, RepoIndex, register
+
+FORBIDDEN_CALLS = frozenset({"print", "breakpoint", "input", "open",
+                             "exec", "eval"})
+INDEX_MAP_CALL_WHITELIST = frozenset({"ds", "dslice", "multiple_of",
+                                      "min", "max", "divmod"})
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    return name is not None and name.split(".")[-1] == "pallas_call"
+
+
+def _is_blockspec(node: ast.Call) -> bool:
+    name = call_name(node)
+    return name is not None and name.split(".")[-1] == "BlockSpec"
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call) and call_name(node) is not None
+            and call_name(node).split(".")[-1] == "partial")
+
+
+@register
+class KernelLintChecker(Checker):
+    rule_id = "kernel-lint"
+    description = ("Pallas kernel bodies: no host side effects, no "
+                   "closure capture, pure index maps, guarded grid "
+                   "divisions")
+
+    def run(self, repo: RepoIndex) -> Iterable[Finding]:
+        for rel in repo.py_files():
+            tree = repo.tree(rel)
+            if tree is None:
+                continue
+            text = repo.text(rel)
+            if "pallas_call" not in text and "BlockSpec" not in text:
+                continue                      # cheap pre-filter
+            yield from self._check_module(rel, tree)
+
+    # ------------------------------------------------------------ plumbing
+    def _check_module(self, rel: str, tree: ast.Module) -> List[Finding]:
+        out: List[Finding] = []
+        fidx = FunctionIndex(tree)
+        mod_names = module_scope_names(tree)
+        np_names = numpy_aliases(tree)
+
+        # wrapper function -> its local name->value assignments (for
+        # resolving `kernel = functools.partial(_body, ...)` and
+        # `grid = (...)` indirections)
+        def local_assigns(fn: ast.FunctionDef) -> Dict[str, ast.AST]:
+            binds: Dict[str, ast.AST] = {}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    binds[node.targets[0].id] = node.value
+            return binds
+
+        def nested_defs(fn: ast.FunctionDef) -> Dict[str, ast.FunctionDef]:
+            return {n.name: n for n in ast.walk(fn)
+                    if isinstance(n, ast.FunctionDef) and n is not fn}
+
+        def resolve_fn(node: ast.AST, binds: Dict[str, ast.AST],
+                       wrapper: Optional[ast.FunctionDef]):
+            """Follow Name -> assignment -> functools.partial -> def,
+            checking wrapper-local (nested) defs before module scope."""
+            inner = nested_defs(wrapper) if wrapper is not None else {}
+            for _ in range(4):                 # bounded chase
+                if isinstance(node, ast.Name):
+                    if node.id in binds:
+                        node = binds[node.id]
+                    elif node.id in inner:
+                        return inner[node.id]
+                    elif node.id in fidx.module_level:
+                        return fidx.module_level[node.id]
+                    else:
+                        return None
+                elif _is_partial(node):
+                    node = node.args[0] if node.args else None
+                elif isinstance(node, ast.Lambda):
+                    return node
+                elif isinstance(node, ast.FunctionDef):
+                    return node
+                else:
+                    return None
+            return None
+
+        for wrapper in fidx.module_level.values():
+            binds = local_assigns(wrapper)
+            for node in ast.walk(wrapper):
+                if not isinstance(node, ast.Call):
+                    continue
+                if _is_pallas_call(node):
+                    kernel = resolve_fn(node.args[0], binds, wrapper) \
+                        if node.args else None
+                    if isinstance(kernel, ast.FunctionDef):
+                        out.extend(self._check_kernel_body(
+                            rel, kernel, fidx, mod_names, np_names))
+                    out.extend(self._check_grid(rel, node, binds, wrapper))
+                elif _is_blockspec(node):
+                    imap = None
+                    if len(node.args) >= 2:
+                        imap = node.args[1]
+                    for kw in node.keywords:
+                        if kw.arg == "index_map":
+                            imap = kw.value
+                    if imap is not None:
+                        fn = resolve_fn(imap, binds, wrapper)
+                        if fn is not None:
+                            out.extend(self._check_index_map(rel, fn))
+        return out
+
+    # --------------------------------------------------------- kernel body
+    def _check_kernel_body(self, rel: str, fn: ast.FunctionDef,
+                           fidx: FunctionIndex, mod_names: Set[str],
+                           np_names: Set[str]) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                out.append(Finding(
+                    "kernel-lint/side-effects", rel, node.lineno,
+                    f"'{'global' if isinstance(node, ast.Global) else 'nonlocal'}'"
+                    f" inside Pallas kernel '{fn.name}' (kernel bodies "
+                    f"must be effect-free)"))
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                if name is None:
+                    continue
+                root, leaf = name.split(".")[0], name.split(".")[-1]
+                if name in FORBIDDEN_CALLS or leaf == "breakpoint":
+                    out.append(Finding(
+                        "kernel-lint/side-effects", rel, node.lineno,
+                        f"host-side call '{name}' inside Pallas kernel "
+                        f"'{fn.name}' (traced once, then silent — use "
+                        f"pl.debug_print or lift it out)"))
+                elif root in np_names:
+                    out.append(Finding(
+                        "kernel-lint/side-effects", rel, node.lineno,
+                        f"host numpy call '{name}' inside Pallas kernel "
+                        f"'{fn.name}' (use jnp — numpy executes at trace "
+                        f"time on the host)"))
+
+        # closure capture: free names of the kernel must resolve to module
+        # scope, not to an enclosing function's locals (tracer hazard)
+        parent = fidx.parent.get(fn)
+        if parent is not None:
+            local = param_names(fn) | assigned_names(fn)
+            outer = (param_names(parent) | assigned_names(parent)) - local
+            free = {n.id for n in ast.walk(fn)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)} - local - mod_names
+            captured = sorted(free & outer)
+            if captured:
+                out.append(Finding(
+                    "kernel-lint/closure", rel, fn.lineno,
+                    f"Pallas kernel '{fn.name}' captures "
+                    f"{', '.join(captured)} from the enclosing function "
+                    f"scope; bind statics via functools.partial keywords "
+                    f"instead (closure capture is how tracers leak in)"))
+        return out
+
+    # ----------------------------------------------------------- index map
+    def _check_index_map(self, rel: str, fn) -> List[Finding]:
+        out: List[Finding] = []
+        if isinstance(fn, ast.Lambda):
+            body_stmts: List[ast.AST] = []
+            exprs: List[ast.AST] = [fn.body]
+        else:
+            body_stmts = list(fn.body)
+            # tolerate a leading docstring
+            if body_stmts and isinstance(body_stmts[0], ast.Expr) \
+                    and isinstance(body_stmts[0].value, ast.Constant) \
+                    and isinstance(body_stmts[0].value.value, str):
+                body_stmts = body_stmts[1:]
+            exprs = [s.value for s in body_stmts
+                     if isinstance(s, ast.Return) and s.value is not None]
+            impure = [s for s in body_stmts if not isinstance(s, ast.Return)]
+            if impure:
+                out.append(Finding(
+                    "kernel-lint/index-map", rel, impure[0].lineno,
+                    f"index_map '{getattr(fn, 'name', '<lambda>')}' has "
+                    f"non-return statements; index maps must be pure "
+                    f"index arithmetic"))
+        for expr in exprs:
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Call):
+                    name = call_name(node) or "<dynamic>"
+                    if name.split(".")[-1] not in INDEX_MAP_CALL_WHITELIST:
+                        out.append(Finding(
+                            "kernel-lint/index-map", rel, node.lineno,
+                            f"index_map calls '{name}'; only "
+                            f"{sorted(INDEX_MAP_CALL_WHITELIST)} are "
+                            f"recognized as pure index arithmetic"))
+        return out
+
+    # -------------------------------------------------- grid divisibility
+    def _check_grid(self, rel: str, call: ast.Call,
+                    binds: Dict[str, ast.AST],
+                    wrapper: ast.FunctionDef) -> List[Finding]:
+        out: List[Finding] = []
+        grid_nodes: List[ast.AST] = []
+        for kw in call.keywords:
+            if kw.arg in ("grid", "grid_spec"):
+                grid_nodes.append(kw.value)
+        resolved: List[ast.AST] = []
+        for g in grid_nodes:
+            if isinstance(g, ast.Name) and g.id in binds:
+                g = binds[g.id]
+            if isinstance(g, ast.Call):       # GridSpec(...)-style wrapper
+                inner = [kw.value for kw in g.keywords if kw.arg == "grid"]
+                for node in inner:
+                    if isinstance(node, ast.Name) and node.id in binds:
+                        node = binds[node.id]
+                    resolved.append(node)
+            else:
+                resolved.append(g)
+
+        # divisibility evidence available in this wrapper, per divisor name
+        evidence: Set[str] = set()
+        for node in ast.walk(wrapper):
+            if isinstance(node, (ast.Assign, ast.Assert)):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.BinOp) \
+                            and isinstance(sub.op, ast.Mod) \
+                            and isinstance(sub.right, ast.Name):
+                        evidence.add(sub.right.id)
+
+        for g in resolved:
+            if not isinstance(g, (ast.Tuple, ast.List)):
+                continue
+            for dim in g.elts:
+                if isinstance(dim, ast.BinOp) \
+                        and isinstance(dim.op, ast.FloorDiv) \
+                        and isinstance(dim.right, ast.Name) \
+                        and dim.right.id not in evidence:
+                    out.append(Finding(
+                        "kernel-lint/grid-divisibility", rel, dim.lineno,
+                        f"grid axis floor-divides by '{dim.right.id}' "
+                        f"with no divisibility evidence in "
+                        f"'{wrapper.name}' (pad with '% "
+                        f"{dim.right.id}' arithmetic or assert "
+                        f"'.. % {dim.right.id} == 0' — a non-dividing "
+                        f"block silently drops tokens)"))
+        return out

@@ -1,0 +1,139 @@
+"""twin-drift: the sim twin and the engines must share one source of truth.
+
+The analytic simulator (``repro.sim``) is the executable spec the serving
+engines are validated against (DESIGN.md §6.2, §6.3): the twin tests
+assert that ``EngineExecutor`` and ``TokenBucketExecutor`` agree because
+they *compute from the same constants and predicates*.  That guarantee
+dies silently the moment an engine module re-defines ``SPEC_K`` or
+re-implements ``paged_admit_ok`` locally — both copies keep passing their
+own tests while drifting apart.  Two sub-rules:
+
+* ``twin-drift/shared-name`` — names exported by the service model
+  (public ``ALL_CAPS`` constants of ``repro.sim.servicemodel``) and the
+  shared admission predicates of ``repro.sim.executor`` may not be
+  re-defined by any other ``src/`` or ``benchmarks/`` module; import them.
+* ``twin-drift/duplicate-const`` — a public ``ALL_CAPS`` module-level
+  constant literal defined under the same name in two or more ``src/``
+  modules is a drift hazard even when the values currently agree; hoist
+  one definition and import it.  (Private ``_NAME`` constants are
+  exempt — the leading underscore is an explicit claim of module-local
+  meaning.)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.astutil import const_literal
+from repro.analysis.framework import Checker, Finding, RepoIndex, register
+
+# where the shared vocabulary is defined
+SERVICEMODEL = "src/repro/sim/servicemodel.py"
+SIM_EXECUTOR = "src/repro/sim/executor.py"
+SIM_PREFIX = "src/repro/sim/"
+
+# admission/cost predicates shared by sim twins and engines alike
+SHARED_PREDICATES = frozenset({"pages_for", "paged_admit_ok",
+                               "spec_expected_tokens"})
+
+
+def _is_shared_const_name(name: str) -> bool:
+    return (name.isupper() and not name.startswith("_")
+            and any(c.isalpha() for c in name))
+
+
+def _module_constants(tree: ast.Module) -> Dict[str, Tuple[int, ast.AST]]:
+    """Public ALL_CAPS module-level assignments: name -> (line, value)."""
+    out: Dict[str, Tuple[int, ast.AST]] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and _is_shared_const_name(tgt.id):
+                    out[tgt.id] = (node.lineno, node.value)
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name) \
+                and node.value is not None \
+                and _is_shared_const_name(node.target.id):
+            out[node.target.id] = (node.lineno, node.value)
+    return out
+
+
+@register
+class TwinDriftChecker(Checker):
+    rule_id = "twin-drift"
+    description = ("engines import sim/servicemodel constants and "
+                   "predicates instead of re-defining them; no duplicated "
+                   "ALL_CAPS constant literals across src/ modules")
+
+    def run(self, repo: RepoIndex) -> Iterable[Finding]:
+        yield from self._shared_names(repo)
+        yield from self._duplicate_consts(repo)
+
+    # --------------------------------------------------------- shared names
+    def _shared_names(self, repo: RepoIndex) -> Iterable[Finding]:
+        vocab: Dict[str, str] = {}          # name -> defining module
+        sm_tree = repo.tree(SERVICEMODEL) if repo.exists(SERVICEMODEL) \
+            else None
+        if sm_tree is not None:
+            for name in _module_constants(sm_tree):
+                vocab[name] = "repro.sim.servicemodel"
+        for name in SHARED_PREDICATES:
+            vocab[name] = "repro.sim.executor"
+        if not vocab:
+            return
+
+        for rel in repo.py_files():
+            if rel.startswith(SIM_PREFIX) or rel.startswith("tests/"):
+                continue          # the home itself; tests may build fakes
+            if not (rel.startswith("src/") or rel.startswith("benchmarks/")):
+                continue
+            tree = repo.tree(rel)
+            if tree is None:
+                continue
+            for node in ast.walk(tree):
+                hits: List[Tuple[str, int]] = []
+                if isinstance(node, ast.Assign):
+                    hits = [(t.id, node.lineno) for t in node.targets
+                            if isinstance(t, ast.Name) and t.id in vocab]
+                elif isinstance(node, ast.AnnAssign) \
+                        and isinstance(node.target, ast.Name) \
+                        and node.target.id in vocab:
+                    hits = [(node.target.id, node.lineno)]
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) \
+                        and node.name in vocab:
+                    hits = [(node.name, node.lineno)]
+                for name, line in hits:
+                    yield Finding(
+                        "twin-drift/shared-name", rel, line,
+                        f"re-defines '{name}', which is owned by "
+                        f"{vocab[name]}; import it so the sim twin and "
+                        f"the engines cannot drift apart")
+
+    # ----------------------------------------------------- duplicate consts
+    def _duplicate_consts(self, repo: RepoIndex) -> Iterable[Finding]:
+        # name -> [(rel, line, value)] across src/ modules
+        sites: Dict[str, List[Tuple[str, int, object]]] = {}
+        for rel in repo.py_files():
+            if not rel.startswith("src/"):
+                continue
+            tree = repo.tree(rel)
+            if tree is None:
+                continue
+            for name, (line, value) in _module_constants(tree).items():
+                ok, lit = const_literal(value)
+                if ok:
+                    sites.setdefault(name, []).append((rel, line, lit))
+
+        for name, defs in sorted(sites.items()):
+            if len(defs) < 2:
+                continue
+            paths = sorted(d[0] for d in defs)
+            for rel, line, _lit in sorted(defs):
+                others = ", ".join(p for p in paths if p != rel)
+                yield Finding(
+                    "twin-drift/duplicate-const", rel, line,
+                    f"constant '{name}' is also defined in {others}; "
+                    f"hoist one shared definition and import it "
+                    f"(same-value copies still drift)")

@@ -37,6 +37,10 @@ INPUT_SHAPES: Dict[str, InputShape] = {
     "long_500k": InputShape("long_500k", 524288, 1, "decode"),
 }
 
+# sliding window applied when long_500k runs on a full-attention arch; a
+# per-model config may override by defining LONG_CONTEXT_WINDOW itself
+DEFAULT_LONG_CONTEXT_WINDOW = 4096
+
 
 def get_config(arch: str, shape: Optional[str] = None) -> ModelConfig:
     """Resolve an architecture config; `long_500k` on a full-attention arch
@@ -46,7 +50,8 @@ def get_config(arch: str, shape: Optional[str] = None) -> ModelConfig:
     mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
     cfg: ModelConfig = mod.CONFIG
     if shape == "long_500k" and cfg.family in ("dense", "moe", "vlm", "audio"):
-        window = getattr(mod, "LONG_CONTEXT_WINDOW", 4096)
+        window = getattr(mod, "LONG_CONTEXT_WINDOW",
+                         DEFAULT_LONG_CONTEXT_WINDOW)
         cfg = cfg.replace(name=cfg.name + "-window",
                           sliding_window=window)
     return cfg

@@ -18,5 +18,3 @@ CONFIG = ModelConfig(
     rope_theta=7.5e4,
     tie_embeddings=True,
 )
-
-LONG_CONTEXT_WINDOW = 4096

@@ -17,5 +17,3 @@ CONFIG = ModelConfig(
     norm_type="layernorm",
     rope_theta=5e5,
 )
-
-LONG_CONTEXT_WINDOW = 4096

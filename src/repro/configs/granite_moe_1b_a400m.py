@@ -16,5 +16,3 @@ CONFIG = ModelConfig(
     top_k=8,
     rope_theta=1e4,
 )
-
-LONG_CONTEXT_WINDOW = 4096

@@ -21,5 +21,3 @@ CONFIG = ModelConfig(
     embeds_input=True,
     rope_theta=1e6,
 )
-
-LONG_CONTEXT_WINDOW = 4096

@@ -15,5 +15,3 @@ CONFIG = ModelConfig(
     qk_norm=True,
     rope_theta=1e6,
 )
-
-LONG_CONTEXT_WINDOW = 4096

@@ -17,6 +17,3 @@ CONFIG = ModelConfig(
     use_bias=True,
     rope_theta=1e5,
 )
-
-# sliding-window variant used only for the long_500k decode shape
-LONG_CONTEXT_WINDOW = 4096

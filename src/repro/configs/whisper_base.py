@@ -19,5 +19,3 @@ CONFIG = ModelConfig(
     use_bias=True,
     tie_embeddings=True,
 )
-
-LONG_CONTEXT_WINDOW = 4096

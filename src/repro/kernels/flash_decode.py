@@ -23,8 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat.pallascompat import tpu_compiler_params
-
-NEG_INF = -1e30
+from repro.models.attention import NEG_INF
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,

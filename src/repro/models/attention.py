@@ -18,6 +18,9 @@ import jax.numpy as jnp
 
 from repro.compat import meshenv
 
+# shared masking constant: the Pallas kernels import this rather than
+# re-defining it, so the oracle and the kernels cannot disagree on what
+# "masked out" means (finite so exp() underflows cleanly, never NaN)
 NEG_INF = -1e30
 
 

@@ -58,11 +58,17 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 # norms / activations
 # ---------------------------------------------------------------------------
 
+def _per_channel(v: jax.Array, ndim: int) -> jax.Array:
+    """Reshape a (D,) per-channel vector for an explicit rank-``ndim``
+    broadcast; the suite runs with rank promotion set to "raise"."""
+    return v.reshape((1,) * (ndim - 1) + v.shape)
+
+
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     dt = x.dtype
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
-    return (x * scale.astype(jnp.float32)).astype(dt)
+    return (x * _per_channel(scale.astype(jnp.float32), x.ndim)).astype(dt)
 
 
 def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
@@ -72,7 +78,8 @@ def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
     y = (x - mu) * jax.lax.rsqrt(var + eps)
-    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+    return (y * _per_channel(scale.astype(jnp.float32), x.ndim)
+            + _per_channel(bias.astype(jnp.float32), x.ndim)).astype(dt)
 
 
 def apply_norm(x: jax.Array, p: dict, norm_type: str) -> jax.Array:
@@ -103,7 +110,8 @@ def rope_freqs(head_dim: int, theta: float) -> jax.Array:
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: (B, S, H, D); positions: (B, S) int32."""
     freqs = rope_freqs(x.shape[-1], theta)                    # (D/2,)
-    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    ang = (positions[..., None].astype(jnp.float32)
+           * freqs[None, None, :])                            # (B, S, D/2)
     cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
@@ -127,7 +135,7 @@ def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
         positions.astype(jnp.float32),                         # (B,S,3)
         jnp.broadcast_to(sec[None, None, :], positions.shape[:2] + sec.shape),
         axis=-1)                                               # (B,S,D/2)
-    ang = pos * freqs                                          # (B,S,D/2)
+    ang = pos * freqs[None, None, :]                           # (B,S,D/2)
     cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -91,7 +91,9 @@ def _project_qkv(lp: Dict, cfg: ModelConfig, h: jax.Array, positions: jax.Array
     k = h @ lp["wk"]
     v = h @ lp["wv"]
     if cfg.use_bias:
-        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = q + lp["bq"][None, None, :]
+        k = k + lp["bk"][None, None, :]
+        v = v + lp["bv"][None, None, :]
     if not runtime.attn_batch_only():
         q = cm.shard(q, "batch", None, "model")
         k = cm.shard(k, "batch", None, "model")
@@ -118,11 +120,11 @@ def _mlp(lp: Dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
         return (jax.nn.silu(g) * u) @ lp["w_down"]
     u = h @ lp["w_up"]
     if cfg.use_bias:
-        u = u + lp["b_up"]
+        u = u + lp["b_up"][None, None, :]
     u = cm.shard(u, "batch", None, "model")
     out = cm.gelu(u) @ lp["w_down"]
     if cfg.use_bias:
-        out = out + lp["b_down"]
+        out = out + lp["b_down"][None, None, :]
     return out
 
 
@@ -135,7 +137,7 @@ def _block_train(lp: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
                            skip_masked_blocks=skip_masked)
     attn = attn.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ lp["wo"]
     if cfg.use_bias:
-        attn = attn + lp["bo"]
+        attn = attn + lp["bo"][None, None, :]
     if cfg.parallel_block:
         return cm.shard(x + attn + _mlp(lp, cfg, h), "batch", "seq", None)
     x = x + attn
@@ -248,7 +250,7 @@ def _block_decode(lp: Dict, cfg: ModelConfig, x: jax.Array, kv: Dict,
         attn = decode_attention(q, kf, vf, n_valid)
     attn = attn.reshape(b, 1, cfg.q_dim) @ lp["wo"]
     if cfg.use_bias:
-        attn = attn + lp["bo"]
+        attn = attn + lp["bo"][None, None, :]
     if cfg.parallel_block:
         return x + attn + _mlp(lp, cfg, h), kv
     x = x + attn
@@ -337,7 +339,7 @@ def _block_decode_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
     attn = decode_attention(q, kg, vg, lengths + 1)
     attn = attn.reshape(b, 1, cfg.q_dim) @ lp["wo"]
     if cfg.use_bias:
-        attn = attn + lp["bo"]
+        attn = attn + lp["bo"][None, None, :]
     if cfg.parallel_block:
         return x + attn + _mlp(lp, cfg, h), pools
     x = x + attn
@@ -413,7 +415,7 @@ def _block_verify_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
     attn = verify_attention(q, kg, vg, lengths)
     attn = attn.reshape(b, kq, cfg.q_dim) @ lp["wo"]
     if cfg.use_bias:
-        attn = attn + lp["bo"]
+        attn = attn + lp["bo"][None, None, :]
     if cfg.parallel_block:
         return x + attn + _mlp(lp, cfg, h), pools
     x = x + attn
@@ -507,7 +509,7 @@ def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
                                q_chunk=min(q_chunk, s), kv_chunk=min(kv_chunk, s))
         attn = attn.reshape(b, s, cfg.q_dim) @ lp["wo"]
         if cfg.use_bias:
-            attn = attn + lp["bo"]
+            attn = attn + lp["bo"][None, None, :]
         if cfg.parallel_block:
             x = x + attn + _mlp(lp, cfg, h)
         else:

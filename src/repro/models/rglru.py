@@ -128,8 +128,8 @@ def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     out = jnp.zeros_like(u, shape=u.shape)
     for j in range(cw):
         shifted = jnp.pad(u, [(0, 0), (j, 0), (0, 0)])[:, : u.shape[1]]
-        out = out + shifted * w[j]
-    return out + b
+        out = out + shifted * w[j][None, None, :]
+    return out + b[None, None, :]
 
 
 def _rglru_gates(rp: Dict, u: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -137,7 +137,7 @@ def _rglru_gates(rp: Dict, u: jax.Array) -> Tuple[jax.Array, jax.Array]:
     uf = u.astype(jnp.float32)
     r = jax.nn.sigmoid(uf @ rp["w_a"].astype(jnp.float32))
     i = jax.nn.sigmoid(uf @ rp["w_i"].astype(jnp.float32))
-    log_a = -C_RGLRU * jax.nn.softplus(rp["lam"]) * r
+    log_a = -C_RGLRU * jax.nn.softplus(rp["lam"])[None, None, :] * r
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     return a, beta * i * uf
@@ -181,7 +181,7 @@ def _rec_block(rp: Dict, cfg: ModelConfig, x: jax.Array,
         # hist[-1] is u_t and the train conv is out_t = Σ_j w[j]·u_{t-j},
         # so the kernel applies reversed over the history window.
         conv = (hist * rp["conv_w"][::-1][None]).sum(axis=1, keepdims=True) \
-            + rp["conv_b"]
+            + rp["conv_b"][None, None, :]
         new_conv_state = hist[:, 1:]
         h_new = rglru_step(rp, conv, h0)
         out = (y * h_new[:, None].astype(y.dtype)) @ rp["w_o"]

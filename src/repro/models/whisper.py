@@ -84,10 +84,16 @@ def _heads(cfg, x, n):
     return x.reshape(x.shape[0], x.shape[1], n, cfg.head_dim)
 
 
+def _bias(b):
+    # rank-3 activations + rank-1 bias: broadcast explicitly (the test
+    # suite runs with rank promotion set to "raise")
+    return b[None, None, :]
+
+
 def _attn_proj(ap, cfg, hq, hkv):
-    q = _heads(cfg, hq @ ap["wq"] + ap["bq"], cfg.n_heads)
+    q = _heads(cfg, hq @ ap["wq"] + _bias(ap["bq"]), cfg.n_heads)
     k = _heads(cfg, hkv @ ap["wk"], cfg.n_kv_heads)
-    v = _heads(cfg, hkv @ ap["wv"] + ap["bv"], cfg.n_kv_heads)
+    v = _heads(cfg, hkv @ ap["wv"] + _bias(ap["bv"]), cfg.n_kv_heads)
     return q, k, v
 
 
@@ -103,10 +109,10 @@ def encode(params: Dict, cfg: ModelConfig, embeds: jax.Array) -> jax.Array:
         q, k, v = _attn_proj(ap, cfg, h, h)
         a = flash_attention(q, k, v, causal=False,
                             q_chunk=min(512, s), kv_chunk=min(512, s))
-        x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ ap["wo"] + ap["bo"]
+        x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ ap["wo"] + _bias(ap["bo"])
         h2 = cm.apply_norm(x, mp["ln"], "layernorm")
-        x = x + (cm.gelu(h2 @ mp["w_up"] + mp["b_up"]) @ mp["w_down"]
-                 + mp["b_down"])
+        x = x + (cm.gelu(h2 @ mp["w_up"] + _bias(mp["b_up"])) @ mp["w_down"]
+                 + _bias(mp["b_down"]))
         return cm.shard(x, "batch", "seq", None), None
 
     x, _ = jax.lax.scan(jax.checkpoint(step), x,
@@ -122,14 +128,15 @@ def _decoder_block(lp, cfg, x, enc_out, positions, q_chunk):
     q, k, v = _attn_proj(sp, cfg, h, h)
     a = flash_attention(q, k, v, causal=True, q_chunk=min(q_chunk, s),
                         kv_chunk=min(q_chunk, s))
-    x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ sp["wo"] + sp["bo"]
+    x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ sp["wo"] + _bias(sp["bo"])
     h = cm.apply_norm(x, cp["ln"], "layernorm")
     q, k, v = _attn_proj(cp, cfg, h, enc_out)
     a = flash_attention(q, k, v, causal=False, q_chunk=min(q_chunk, s),
                         kv_chunk=min(512, enc_out.shape[1]))
-    x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ cp["wo"] + cp["bo"]
+    x = x + a.reshape(*x.shape[:2], cfg.q_dim) @ cp["wo"] + _bias(cp["bo"])
     h = cm.apply_norm(x, mp["ln"], "layernorm")
-    x = x + cm.gelu(h @ mp["w_up"] + mp["b_up"]) @ mp["w_down"] + mp["b_down"]
+    x = (x + cm.gelu(h @ mp["w_up"] + _bias(mp["b_up"])) @ mp["w_down"]
+         + _bias(mp["b_down"]))
     return cm.shard(x, "batch", "seq", None)
 
 
@@ -168,14 +175,15 @@ def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
         q, k, v = _attn_proj(sp, cfg, h, h)
         a = flash_attention(q, k, v, causal=True, q_chunk=min(q_chunk, s),
                             kv_chunk=min(q_chunk, s))
-        x = x + a.reshape(b, s, cfg.q_dim) @ sp["wo"] + sp["bo"]
+        x = x + a.reshape(b, s, cfg.q_dim) @ sp["wo"] + _bias(sp["bo"])
         h = cm.apply_norm(x, cp["ln"], "layernorm")
         qc, kc, vc = _attn_proj(cp, cfg, h, enc_out)
         a = flash_attention(qc, kc, vc, causal=False, q_chunk=min(q_chunk, s),
                             kv_chunk=min(512, enc_out.shape[1]))
-        x = x + a.reshape(b, s, cfg.q_dim) @ cp["wo"] + cp["bo"]
+        x = x + a.reshape(b, s, cfg.q_dim) @ cp["wo"] + _bias(cp["bo"])
         h = cm.apply_norm(x, mp["ln"], "layernorm")
-        x = x + cm.gelu(h @ mp["w_up"] + mp["b_up"]) @ mp["w_down"] + mp["b_down"]
+        x = (x + cm.gelu(h @ mp["w_up"] + _bias(mp["b_up"])) @ mp["w_down"]
+             + _bias(mp["b_down"]))
         padw = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
         return x, (jnp.pad(k, padw), jnp.pad(v, padw), kc, vc)
 
@@ -205,13 +213,14 @@ def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array):
         kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
         vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
         a = decode_attention(q, kc, vc, jnp.minimum(length + 1, cap))
-        x = x + a.reshape(b, 1, cfg.q_dim) @ sp["wo"] + sp["bo"]
+        x = x + a.reshape(b, 1, cfg.q_dim) @ sp["wo"] + _bias(sp["bo"])
         h = cm.apply_norm(x, cp["ln"], "layernorm")
-        q = _heads(cfg, h @ cp["wq"] + cp["bq"], cfg.n_heads)
+        q = _heads(cfg, h @ cp["wq"] + _bias(cp["bq"]), cfg.n_heads)
         a = decode_attention(q, ck, cv, jnp.asarray(ck.shape[1], jnp.int32))
-        x = x + a.reshape(b, 1, cfg.q_dim) @ cp["wo"] + cp["bo"]
+        x = x + a.reshape(b, 1, cfg.q_dim) @ cp["wo"] + _bias(cp["bo"])
         h = cm.apply_norm(x, mp["ln"], "layernorm")
-        x = x + cm.gelu(h @ mp["w_up"] + mp["b_up"]) @ mp["w_down"] + mp["b_down"]
+        x = (x + cm.gelu(h @ mp["w_up"] + _bias(mp["b_up"])) @ mp["w_down"]
+             + _bias(mp["b_down"]))
         return x, (kc, vc)
 
     x, (k_new, v_new) = jax.lax.scan(

@@ -135,15 +135,15 @@ def _mlstm_qkvif(mp: Dict, cfg: ModelConfig, x: jax.Array):
     conv = jnp.zeros_like(u)
     for j in range(cw):
         shifted = jnp.pad(u, [(0, 0), (j, 0), (0, 0)])[:, :t]
-        conv = conv + shifted * mp["conv_w"][j]
-    conv = jax.nn.silu(conv + mp["conv_b"])
+        conv = conv + shifted * mp["conv_w"][j][None, None, :]
+    conv = jax.nn.silu(conv + mp["conv_b"][None, None, :])
     ch = conv.reshape(b, t, H, dh).astype(jnp.float32)
     uh = u.reshape(b, t, H, dh).astype(jnp.float32)
     q = jnp.einsum("bthd,hde->bthe", ch, mp["wq"].astype(jnp.float32))
     k = jnp.einsum("bthd,hde->bthe", ch, mp["wk"].astype(jnp.float32)) / dh ** 0.5
     v = jnp.einsum("bthd,hde->bthe", uh, mp["wv"].astype(jnp.float32))
     it = conv.astype(jnp.float32) @ mp["w_i"]                    # (B,T,H)
-    ft = conv.astype(jnp.float32) @ mp["w_f"] + mp["b_f"]
+    ft = conv.astype(jnp.float32) @ mp["w_f"] + mp["b_f"][None, None, :]
     return q, k, v, it, ft, g, u
 
 
@@ -244,7 +244,7 @@ def _mlstm_block(mp: Dict, cfg: ModelConfig, x: jax.Array, state=None,
         g = h_in @ mp["w_gate"]
         hist = jnp.concatenate([conv_state, u], axis=1)           # (B,cw,ud)
         conv = (hist * mp["conv_w"][::-1][None]).sum(1, keepdims=True) \
-            + mp["conv_b"]
+            + mp["conv_b"][None, None, :]
         conv = jax.nn.silu(conv)
         H = cfg.n_heads
         dh = ud // H
@@ -254,7 +254,7 @@ def _mlstm_block(mp: Dict, cfg: ModelConfig, x: jax.Array, state=None,
         k = jnp.einsum("bthd,hde->bthe", ch, mp["wk"].astype(jnp.float32)) / dh ** 0.5
         v = jnp.einsum("bthd,hde->bthe", uh, mp["wv"].astype(jnp.float32))
         it = conv.astype(jnp.float32) @ mp["w_i"]
-        ft = conv.astype(jnp.float32) @ mp["w_f"] + mp["b_f"]
+        ft = conv.astype(jnp.float32) @ mp["w_f"] + mp["b_f"][None, None, :]
         hseq, new_state = mlstm_recurrent_step(q, k, v, it, ft, state)
         new_conv = hist[:, 1:]
     else:
@@ -276,7 +276,7 @@ def _slstm_block(sp: Dict, cfg: ModelConfig, x: jax.Array, state=None):
     # precompute input contributions for all t
     zx = xin @ sp["w_z"].astype(jnp.float32)
     ix = xin @ sp["w_i"].astype(jnp.float32)
-    fx = xin @ sp["w_f"].astype(jnp.float32) + sp["b_f"]
+    fx = xin @ sp["w_f"].astype(jnp.float32) + sp["b_f"][None, None, :]
     ox = xin @ sp["w_o"].astype(jnp.float32)
     if state is None:
         zeros = jnp.zeros((b, d), jnp.float32)

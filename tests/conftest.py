@@ -5,6 +5,11 @@ The root ``conftest.py`` bootstraps ``sys.path`` and the hypothesis shim;
 this file verifies the environment actually works (repro importable, jax
 present, property-test API available) and aborts collection with one clear
 diagnostic when it doesn't.
+
+It also turns on strict JAX numerics for the whole suite: implicit rank
+promotion (``(4,) + (2, 4)``-style broadcasts) is the classic source of
+silently wrong attention masks, so tier-1 runs with
+``jax_numpy_rank_promotion="raise"`` — shape intent must be written out.
 """
 
 import pytest
@@ -34,4 +39,10 @@ def _guard() -> None:
             "test environment broken:\n  - " + "\n  - ".join(problems))
 
 
+def _strict_jax() -> None:
+    import jax
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+
+
 _guard()
+_strict_jax()
