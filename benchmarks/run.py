@@ -14,9 +14,12 @@ caught before a full pytest run::
 ``--bench`` emits a machine-readable ``BENCH_scheduling.json`` (SLO
 attainment per mode, avg/p95 latency, simulated requests/s, real-engine
 decode tokens/s and admitted concurrency for paged vs slot vs wave
-batching, the disagg-vs-colocated TTFT mix, and the speculative-vs-paged
-decode-heavy comparison with its accepted-length distribution) so the
-performance trajectory is tracked PR over PR::
+batching, the disagg-vs-colocated TTFT mix, the speculative-vs-paged
+decode-heavy comparison with its accepted-length distribution, and — new
+in schema 6 — the pinned kernel microbench: slot vs paged vs
+quantized-paged decode/spec-verify timings at fixed shapes, the autotuned
+``pages_per_step``, and the int8 admission 2x demo) so the performance
+trajectory is tracked PR over PR::
 
     PYTHONPATH=src python benchmarks/run.py --bench
 
@@ -27,7 +30,7 @@ schema drift is caught in tier-1).
 ``--lint`` runs the AST invariant linter (``repro.analysis``,
 DESIGN.md §7) over src/tests/benchmarks — a <10s jax-free pass that is
 also the first check of ``--smoke`` and whose rule/violation counts are
-recorded in the ``lint`` section of the --bench payload (schema 5)::
+recorded in the ``lint`` section of the --bench payload::
 
     PYTHONPATH=src python benchmarks/run.py --lint
 """
@@ -47,7 +50,7 @@ _REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_REPO))
 sys.path.insert(0, str(_REPO / "src"))
 
-BENCH_SCHEMA_VERSION = 5
+BENCH_SCHEMA_VERSION = 6
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -71,6 +74,14 @@ SPEC_ONLY_KEYS = ("accept_hist", "alpha_ema", "expected_tokens_per_step",
 # the violation counts by disposition, so a silently growing baseline or
 # suppression set shows up in the PR-over-PR artifact diff
 LINT_KEYS = ("rules", "new", "suppressed", "baselined", "wall_s")
+# schema 6: pinned kernel microbench (DESIGN.md §Perf-kernels) — paged vs
+# slot vs quantized-paged decode and spec-verify timings at fixed shapes,
+# the pages_per_step the autotune sweep recorded, and the int8 admission
+# demo (same page budget, fp vs kv_quant engine) whose 2x is asserted here
+KERNEL_DECODE_MODES = ("slot", "paged", "paged_quant")
+KERNEL_VERIFY_MODES = ("paged", "paged_quant")
+KERNEL_TUNING_KEYS = ("page_size", "head_dim", "hkv", "pages_per_step")
+KERNEL_ADMISSION_KEYS = ("num_pages", "page_size", "paged", "paged_quant")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -101,6 +112,13 @@ def check_bench_schema(payload: dict) -> None:
             assert k in mix[mode], f"mix.{mode}.{k} missing"
     for k in ("handoffs", "handoff_bytes", "transfer_inflight_peak"):
         assert k in mix["disagg"], f"mix.disagg.{k} missing"
+    # schema 6 perf bar: the tuned paged engine (carry-borne pools, donated
+    # buffers, device-resident width-trimmed tables — DESIGN.md
+    # §Perf-kernels) must not decode slower than slot batching on the mix
+    assert (mix["paged"]["decode_tokens_per_s"]
+            >= mix["slot"]["decode_tokens_per_s"]), (
+        f"mix paged decode {mix['paged']['decode_tokens_per_s']} tok/s "
+        f"regressed below slot {mix['slot']['decode_tokens_per_s']}")
     spec = payload["spec"]
     for k in ("workload", "spec_k", "speedup_decode_tokens_per_s"):
         assert k in spec, f"spec.{k} missing"
@@ -115,6 +133,28 @@ def check_bench_schema(payload: dict) -> None:
     for k in LINT_KEYS:
         assert k in lint, f"lint.{k} missing"
     assert lint["new"] == 0, "lint.new must be 0 in a committed artifact"
+    kern = payload["kernel"]
+    for k in ("shapes", "tuning", "decode", "spec_verify", "admission"):
+        assert k in kern, f"kernel.{k} missing"
+    for mode in KERNEL_DECODE_MODES:
+        assert mode in kern["decode"], f"kernel.decode.{mode} missing"
+        assert "us_per_call" in kern["decode"][mode], \
+            f"kernel.decode.{mode}.us_per_call missing"
+    for mode in KERNEL_VERIFY_MODES:
+        assert mode in kern["spec_verify"], f"kernel.spec_verify.{mode} missing"
+        assert "us_per_call" in kern["spec_verify"][mode], \
+            f"kernel.spec_verify.{mode}.us_per_call missing"
+    for k in KERNEL_TUNING_KEYS:
+        assert k in kern["tuning"], f"kernel.tuning.{k} missing"
+    adm = kern["admission"]
+    for k in KERNEL_ADMISSION_KEYS:
+        assert k in adm, f"kernel.admission.{k} missing"
+    # schema 6 capacity bar: int8 KV pages halve bytes per token, so on the
+    # same page budget the kv_quant engine must keep at least twice the
+    # concurrent residents of the fp paged engine (DESIGN.md §6.1-paged)
+    assert adm["paged_quant"] >= 2 * adm["paged"], (
+        f"quantized admission {adm['paged_quant']} < "
+        f"2x fp admission {adm['paged']}")
 
 
 def _lint(verbose: bool = True) -> int:
@@ -585,6 +625,101 @@ def _bench(out_path: str) -> int:
             / max(spec_out["paged"]["decode_tokens_per_s"], 1e-9), 2),
         **spec_out,
     }
+
+    # --- pinned kernel microbench (DESIGN.md §Perf-kernels) -----------------
+    # Fixed shapes, interpret mode, forced Pallas path: slot (contiguous
+    # cache) vs paged (block tables) vs quantized-paged (int8 pools + scale
+    # pools) decode, plus the multi-token spec-verify pair.  The fp paged
+    # entries are bit-exactness-tested elsewhere (tests/test_kernels.py);
+    # here the timings and the autotuned pages_per_step are tracked PR over
+    # PR so a grid/tuning regression shows up in the artifact diff.
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.ref import paged_decode_ref, paged_decode_quant_ref
+    from repro.kernels.tuning import autotune_paged_decode
+    from repro.models.attention import kv_quantize
+
+    kb, kh, khkv, kd = 2, 8, 2, 64
+    kpage, kmaxp, kpool, spec_k = 16, 4, 16, 3
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    kq1 = jax.random.normal(ks[0], (kb, 1, kh, kd), jnp.float32)
+    kqv = jax.random.normal(ks[1], (kb, spec_k + 1, kh, kd), jnp.float32)
+    kp = jax.random.normal(ks[2], (kpool, kpage, khkv, kd), jnp.float32)
+    vp = jax.random.normal(ks[3], (kpool, kpage, khkv, kd), jnp.float32)
+    kbt = jnp.arange(kb * kmaxp, dtype=jnp.int32).reshape(kb, kmaxp)
+    klens = jnp.asarray([40, 57], jnp.int32)
+    kq_i8, k_scale = kv_quantize(kp)
+    vq_i8, v_scale = kv_quantize(vp)
+    kcache = kp[:kb * kmaxp].reshape(kb, kmaxp * kpage, khkv, kd)
+    vcache = vp[:kb * kmaxp].reshape(kb, kmaxp * kpage, khkv, kd)
+    kcl = jnp.asarray(57, jnp.int32)
+
+    def _us(fn, *args, iters=3, **kw):
+        jax.block_until_ready(fn(*args, **kw))       # warm / trace
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args, **kw))
+        return round((time.perf_counter() - t0) / iters * 1e6, 1)
+
+    tuned = autotune_paged_decode(kq1, kp, vp, kbt, klens,
+                                  candidates=(1, 2, 4))
+    pps = tuned.pages_per_step
+    out_paged = ops.paged_decode(kq1, kp, vp, kbt, klens, backend="pallas",
+                                 pages_per_step=pps)
+    err_paged = float(jnp.max(jnp.abs(
+        out_paged - paged_decode_ref(kq1, kp, vp, kbt, klens))))
+    out_quant = ops.paged_decode_quant(kq1, kq_i8, vq_i8, k_scale, v_scale,
+                                       kbt, klens, backend="pallas",
+                                       pages_per_step=pps)
+    err_quant = float(jnp.max(jnp.abs(
+        out_quant - paged_decode_quant_ref(kq1, kq_i8, vq_i8, k_scale,
+                                           v_scale, kbt, klens))))
+    payload["kernel"] = {
+        "shapes": {"batch": kb, "heads": kh, "kv_heads": khkv,
+                   "head_dim": kd, "page_size": kpage, "pages_per_row": kmaxp,
+                   "pool_pages": kpool, "spec_k": spec_k},
+        "tuning": {"page_size": kpage, "head_dim": kd, "hkv": khkv,
+                   "pages_per_step": pps},
+        "decode": {
+            "slot": {"us_per_call": _us(
+                ops.decode, kq1, kcache, vcache, kcl, backend="pallas")},
+            "paged": {"us_per_call": _us(
+                ops.paged_decode, kq1, kp, vp, kbt, klens,
+                backend="pallas", pages_per_step=pps),
+                "max_err_vs_oracle": round(err_paged, 8)},
+            "paged_quant": {"us_per_call": _us(
+                ops.paged_decode_quant, kq1, kq_i8, vq_i8, k_scale, v_scale,
+                kbt, klens, backend="pallas", pages_per_step=pps),
+                "max_err_vs_oracle": round(err_quant, 8)},
+        },
+        "spec_verify": {
+            "paged": {"us_per_call": _us(
+                ops.paged_verify, kqv, kp, vp, kbt, klens,
+                backend="pallas", pages_per_step=pps)},
+            "paged_quant": {"us_per_call": _us(
+                ops.paged_verify_quant, kqv, kq_i8, vq_i8, k_scale, v_scale,
+                kbt, klens, backend="pallas", pages_per_step=pps)},
+        },
+    }
+
+    # int8 admission demo: same tight page budget, 8 queued one-page
+    # requests (prompt 15 + 1 new token stays inside one 16-token page) —
+    # the kv_quant engine's doubled pool (repro.sim.executor
+    # .quantized_pages) must keep >= 2x the concurrent residents
+    adm_pages = 4
+    adm_out = {}
+    for label, quant in (("paged", False), ("paged_quant", True)):
+        acfg = cfg.replace(kv_quant=True) if quant else cfg
+        eng = Engine(acfg, params, max_batch=8, bucket=16, paged=True,
+                     page_size=page_size, num_pages=adm_pages)
+        reqs = [GenRequest(rid=f"adm{i}",
+                           tokens=np.arange(2, 17).astype(np.int32),
+                           max_new=1) for i in range(8)]
+        eng.serve(reqs)
+        adm_out[label] = eng.stats.peak_resident
+    payload["kernel"]["admission"] = {
+        "num_pages": adm_pages, "page_size": page_size, **adm_out}
 
     # --- static-analysis snapshot (DESIGN.md §7) ----------------------------
     from repro.analysis import run_analysis

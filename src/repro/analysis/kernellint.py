@@ -24,7 +24,16 @@ finds every kernel body reachable from a ``pl.pallas_call`` (resolving
   silently drops remainder tokens when ``b`` does not divide ``x``.  The
   wrapper must carry evidence of divisibility for each such divisor:
   either pad arithmetic mentioning ``% b`` or an
-  ``assert ... % b == 0``.
+  ``assert ... % b == 0``.  Divisors may be plain names or dotted
+  attributes — a tunable ``// tuning.pages_per_step`` needs the same
+  ``% tuning.pages_per_step`` evidence as a literal block size.
+* ``kernel-lint/dequant-import`` — a module that builds Pallas calls and
+  touches quantized KV must IMPORT ``kv_quantize``/``kv_dequantize``
+  from ``repro.models.attention``, never re-define them: the pack/unpack
+  convention (per-token-per-head scales, trailing 1-dim) is a cross-layer
+  contract with the page pools and the oracles, and a local copy drifts
+  silently.  (Checked module-wide because kernel bodies are often passed
+  as parameters, which resolution cannot chase.)
 """
 
 from __future__ import annotations
@@ -41,6 +50,22 @@ FORBIDDEN_CALLS = frozenset({"print", "breakpoint", "input", "open",
                              "exec", "eval"})
 INDEX_MAP_CALL_WHITELIST = frozenset({"ds", "dslice", "multiple_of",
                                       "min", "max", "divmod"})
+# quantized-KV pack/unpack helpers: single source of truth for the scale
+# layout, shared by kernels, oracles, and the page pools
+DEQUANT_HELPERS = frozenset({"kv_quantize", "kv_dequantize"})
+ATTENTION_MODULE = "repro.models.attention"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
 
 
 def _is_pallas_call(node: ast.Call) -> bool:
@@ -74,6 +99,8 @@ class KernelLintChecker(Checker):
             if "pallas_call" not in text and "BlockSpec" not in text:
                 continue                      # cheap pre-filter
             yield from self._check_module(rel, tree)
+            if "pallas_call" in text:
+                yield from self._check_dequant_imports(rel, tree)
 
     # ------------------------------------------------------------ plumbing
     def _check_module(self, rel: str, tree: ast.Module) -> List[Finding]:
@@ -253,29 +280,78 @@ class KernelLintChecker(Checker):
                 resolved.append(g)
 
         # divisibility evidence available in this wrapper, per divisor name
+        # (plain or dotted: a tunable '// tuning.pages_per_step' needs
+        # '% tuning.pages_per_step' evidence just like a literal block size)
         evidence: Set[str] = set()
         for node in ast.walk(wrapper):
             if isinstance(node, (ast.Assign, ast.Assert)):
                 for sub in ast.walk(node):
                     if isinstance(sub, ast.BinOp) \
-                            and isinstance(sub.op, ast.Mod) \
-                            and isinstance(sub.right, ast.Name):
-                        evidence.add(sub.right.id)
+                            and isinstance(sub.op, ast.Mod):
+                        name = _dotted(sub.right)
+                        if name is not None:
+                            evidence.add(name)
 
         for g in resolved:
             if not isinstance(g, (ast.Tuple, ast.List)):
                 continue
             for dim in g.elts:
-                if isinstance(dim, ast.BinOp) \
-                        and isinstance(dim.op, ast.FloorDiv) \
-                        and isinstance(dim.right, ast.Name) \
-                        and dim.right.id not in evidence:
+                if not (isinstance(dim, ast.BinOp)
+                        and isinstance(dim.op, ast.FloorDiv)):
+                    continue
+                divisor = _dotted(dim.right)
+                if divisor is not None and divisor not in evidence:
                     out.append(Finding(
                         "kernel-lint/grid-divisibility", rel, dim.lineno,
-                        f"grid axis floor-divides by '{dim.right.id}' "
+                        f"grid axis floor-divides by '{divisor}' "
                         f"with no divisibility evidence in "
                         f"'{wrapper.name}' (pad with '% "
-                        f"{dim.right.id}' arithmetic or assert "
-                        f"'.. % {dim.right.id} == 0' — a non-dividing "
+                        f"{divisor}' arithmetic or assert "
+                        f"'.. % {divisor} == 0' — a non-dividing "
                         f"block silently drops tokens)"))
+        return out
+
+    # ------------------------------------------------------ dequant imports
+    def _check_dequant_imports(self, rel: str,
+                               tree: ast.Module) -> List[Finding]:
+        """Module-wide (kernel bodies are routinely passed as parameters,
+        so per-kernel resolution cannot see them): in a module that builds
+        ``pallas_call``s, the quantized-KV helpers must come from
+        ``repro.models.attention``."""
+        out: List[Finding] = []
+        imported: Set[str] = set()        # bare names bound by the import
+        mod_aliases: Set[str] = set()     # module aliases for dotted calls
+        for node in tree.body:
+            if isinstance(node, ast.ImportFrom):
+                if node.module == ATTENTION_MODULE:
+                    imported |= {a.asname or a.name for a in node.names
+                                 if a.name in DEQUANT_HELPERS}
+                elif node.module == "repro.models":
+                    mod_aliases |= {a.asname or a.name for a in node.names
+                                    if a.name == "attention"}
+            elif isinstance(node, ast.Import):
+                mod_aliases |= {a.asname or a.name.split(".")[0]
+                                for a in node.names
+                                if a.name == ATTENTION_MODULE}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in DEQUANT_HELPERS:
+                out.append(Finding(
+                    "kernel-lint/dequant-import", rel, node.lineno,
+                    f"'{node.name}' re-defined in a Pallas module; the "
+                    f"quantized-KV pack/unpack convention lives in "
+                    f"{ATTENTION_MODULE} — import it (a local copy "
+                    f"drifts from the pools and oracles silently)"))
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                if name is None or name.split(".")[-1] not in DEQUANT_HELPERS:
+                    continue
+                ok = (name in imported if "." not in name
+                      else name.split(".")[0] in mod_aliases)
+                if not ok:
+                    out.append(Finding(
+                        "kernel-lint/dequant-import", rel, node.lineno,
+                        f"call to '{name}' does not resolve to an import "
+                        f"from {ATTENTION_MODULE}; the scale layout is a "
+                        f"cross-layer contract — import the shared helper"))
         return out

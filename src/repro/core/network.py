@@ -27,6 +27,8 @@ from repro.core.node import Node, QueuedRequest
 from repro.core.pos import pos_sample, pos_sample_one
 from repro.sim.events import EventLoop
 from repro.sim.metrics import CompletedRequest, MetricsCollector
+from repro.sim.servicemodel import (KV_BYTES_PER_TOKEN, TRANSFER_BYTES_PER_S,
+                                    TRANSFER_EMA_BETA)
 from repro.sim.workload import Request
 
 TREASURY = "__treasury__"
@@ -81,6 +83,11 @@ class Network:
         self.credit_trace: List[Tuple[float, str, float]] = []  # (t, node, credit)
         self.block_confirmations: List[int] = []
         self._shutdown = False
+        # per-node observed KV-transfer rate (disagg handoffs), learned from
+        # ExecutorLoad.handoff_bytes deltas; seeded with the static link
+        # constant so routing is unchanged until observations arrive
+        self._transfer_rate_ema: Dict[str, float] = {}
+        self._transfer_obs: Dict[str, Tuple[float, int]] = {}
 
         # seed the treasury that funds duel bonuses / judge fees
         self._apply_ops([CreditOp("mint", "", TREASURY, 1e9)], proposer=None)
@@ -210,10 +217,38 @@ class Network:
         backlog += ld.pending_decode_tokens
         cap = (node.profile.decode_tps * node.profile.saturation
                * ld.expected_tokens_per_step)
-        return (backlog / cap
-                + ld.pending_prefill_tokens / node.profile.prefill_tps
-                + node.executor.estimate(req.prompt_tokens,
-                                         req.output_tokens))
+        est = (backlog / cap
+               + ld.pending_prefill_tokens / node.profile.prefill_tps
+               + node.executor.estimate(req.prompt_tokens,
+                                        req.output_tokens))
+        # disagg backends queue this request's prefilled KV behind the
+        # handoffs already on the wire; charge them at the node's LEARNED
+        # transfer rate rather than the static link constant
+        rate = self._observe_transfer_rate(node, ld)
+        if ld.transfer_inflight > 0:
+            est += (ld.transfer_inflight * req.prompt_tokens
+                    * KV_BYTES_PER_TOKEN / rate)
+        return est
+
+    def _observe_transfer_rate(self, node: Node, ld) -> float:
+        """Per-node EMA of the observed KV handoff rate (DESIGN.md
+        §6.1-disagg): every load snapshot exposes cumulative
+        ``handoff_bytes``, so the bytes moved between two sightings over
+        the elapsed sim time is a direct throughput sample of that node's
+        actual link — which the static ``TRANSFER_BYTES_PER_S`` model
+        cannot see.  Zero-byte windows are skipped (an idle link is not a
+        slow link)."""
+        now = self.loop.now
+        rate = self._transfer_rate_ema.get(node.id, TRANSFER_BYTES_PER_S)
+        last = self._transfer_obs.get(node.id)
+        self._transfer_obs[node.id] = (now, ld.handoff_bytes)
+        if last is not None:
+            dt = now - last[0]
+            db = ld.handoff_bytes - last[1]
+            if dt > 0.0 and db > 0:
+                rate += TRANSFER_EMA_BETA * (db / dt - rate)
+                self._transfer_rate_ema[node.id] = rate
+        return rate
 
     def _phase_pressure(self, node: Node, req: Request) -> float:
         """Phase-aware load score in [0, 1]: each phase's KV occupancy

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.flash_decode import flash_decode_tpu
 from repro.kernels.paged_decode import flash_paged_decode_tpu
-from repro.kernels.ref import (decode_ref, flash_ref, paged_decode_ref,
+from repro.kernels.ref import (decode_ref, flash_ref, paged_decode_quant_ref,
+                               paged_decode_ref, paged_verify_quant_ref,
                                paged_verify_ref)
 from repro.kernels.spec_verify import flash_paged_verify_tpu
 
@@ -49,22 +50,48 @@ def decode(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None,
     return decode_ref(q, k_cache, v_cache, cache_len, window=window)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "pages_per_step"))
 def paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
-                 backend: str = "auto", interpret: bool = True) -> jax.Array:
+                 backend: str = "auto", interpret: bool = True,
+                 pages_per_step: Optional[int] = None) -> jax.Array:
     """Block-table paged decode. q: (B,1,H,D); pools: (P,page,Hkv,D);
-    block_tables: (B,maxp) int32; lengths: (B,) int32."""
+    block_tables: (B,maxp) int32; lengths: (B,) int32.  ``pages_per_step``
+    overrides the recorded kernel tuning (Pallas path only)."""
     use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
     if use_pallas:
         return flash_paged_decode_tpu(q, k_pool, v_pool, block_tables,
                                       lengths,
+                                      pages_per_step=pages_per_step,
                                       interpret=interpret and not _on_tpu())
     return paged_decode_ref(q, k_pool, v_pool, block_tables, lengths)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "pages_per_step"))
+def paged_decode_quant(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                       lengths, *, backend: str = "auto",
+                       interpret: bool = True,
+                       pages_per_step: Optional[int] = None) -> jax.Array:
+    """Int8 block-table paged decode (DESIGN.md §6.1-paged): int8 pools
+    plus (P,page,Hkv,1) per-token-per-head scale pools riding the same
+    block-table indirection; dequantized in the kernel body."""
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if use_pallas:
+        return flash_paged_decode_tpu(q, k_pool, v_pool, block_tables,
+                                      lengths, k_scale=k_scale,
+                                      v_scale=v_scale,
+                                      pages_per_step=pages_per_step,
+                                      interpret=interpret and not _on_tpu())
+    return paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                  block_tables, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "pages_per_step"))
 def paged_verify(q, k_pool, v_pool, block_tables, lengths, *,
-                 backend: str = "auto", interpret: bool = True) -> jax.Array:
+                 backend: str = "auto", interpret: bool = True,
+                 pages_per_step: Optional[int] = None) -> jax.Array:
     """Multi-token speculative verify over paged KV (DESIGN.md §6.1-spec).
     q: (B,K,H,D) — K new tokens whose KV is already in the pool; pools:
     (P,page,Hkv,D); block_tables: (B,maxp) int32; lengths: (B,) int32
@@ -73,5 +100,25 @@ def paged_verify(q, k_pool, v_pool, block_tables, lengths, *,
     if use_pallas:
         return flash_paged_verify_tpu(q, k_pool, v_pool, block_tables,
                                       lengths,
+                                      pages_per_step=pages_per_step,
                                       interpret=interpret and not _on_tpu())
     return paged_verify_ref(q, k_pool, v_pool, block_tables, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "pages_per_step"))
+def paged_verify_quant(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                       lengths, *, backend: str = "auto",
+                       interpret: bool = True,
+                       pages_per_step: Optional[int] = None) -> jax.Array:
+    """Int8 multi-token speculative verify over paged KV: int8 pools plus
+    scale pools, dequantized in the kernel body (DESIGN.md §6.1-spec)."""
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if use_pallas:
+        return flash_paged_verify_tpu(q, k_pool, v_pool, block_tables,
+                                      lengths, k_scale=k_scale,
+                                      v_scale=v_scale,
+                                      pages_per_step=pages_per_step,
+                                      interpret=interpret and not _on_tpu())
+    return paged_verify_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                  block_tables, lengths)

@@ -7,8 +7,15 @@ import jax.numpy as jnp
 
 from repro.models.attention import (decode_attention as decode_ref,
                                     flash_attention as flash_ref,
-                                    reference_attention,
+                                    kv_dequantize, reference_attention,
                                     verify_attention as verify_ref)
+
+
+def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(P, page, ...) pool + (B, maxp) table -> (B, maxp*page, ...) view."""
+    b, maxp = block_tables.shape
+    page = pool.shape[1]
+    return pool[block_tables].reshape((b, maxp * page) + pool.shape[2:])
 
 
 def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -25,10 +32,27 @@ def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     and defers to the dense per-row-length decode oracle.  Returns
     (B, 1, H, D).
     """
-    b, maxp = block_tables.shape
-    page, hkv, d = k_pool.shape[1:]
-    k = k_pool[block_tables].reshape(b, maxp * page, hkv, d)
-    v = v_pool[block_tables].reshape(b, maxp * page, hkv, d)
+    k = _gather_pages(k_pool, block_tables)
+    v = _gather_pages(v_pool, block_tables)
+    return decode_ref(q, k, v, lengths)
+
+
+def paged_decode_quant_ref(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, k_scale_pool: jax.Array,
+                           v_scale_pool: jax.Array,
+                           block_tables: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """Oracle for int8 paged decode attention (DESIGN.md §6.1-paged).
+
+    Pools are int8 with per-token-per-head scale pools (P, page, Hkv, 1)
+    riding the same block-table indirection.  Gathers pages and scales,
+    dequantizes via the shared ``models.attention.kv_dequantize``, and
+    defers to the fp oracle.  Returns (B, 1, H, D).
+    """
+    k = kv_dequantize(_gather_pages(k_pool, block_tables),
+                      _gather_pages(k_scale_pool, block_tables), q.dtype)
+    v = kv_dequantize(_gather_pages(v_pool, block_tables),
+                      _gather_pages(v_scale_pool, block_tables), q.dtype)
     return decode_ref(q, k, v, lengths)
 
 
@@ -46,12 +70,27 @@ def paged_verify_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     Gathers each row's pages into a contiguous view and defers to the
     dense multi-token verify oracle.  Returns (B, K, H, D).
     """
-    b, maxp = block_tables.shape
-    page, hkv, d = k_pool.shape[1:]
-    k = k_pool[block_tables].reshape(b, maxp * page, hkv, d)
-    v = v_pool[block_tables].reshape(b, maxp * page, hkv, d)
+    k = _gather_pages(k_pool, block_tables)
+    v = _gather_pages(v_pool, block_tables)
+    return verify_ref(q, k, v, lengths)
+
+
+def paged_verify_quant_ref(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, k_scale_pool: jax.Array,
+                           v_scale_pool: jax.Array,
+                           block_tables: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """Oracle for int8 multi-token verify attention: gather + dequantize
+    (shared ``models.attention.kv_dequantize``), then the fp verify
+    oracle.  Returns (B, K, H, D).
+    """
+    k = kv_dequantize(_gather_pages(k_pool, block_tables),
+                      _gather_pages(k_scale_pool, block_tables), q.dtype)
+    v = kv_dequantize(_gather_pages(v_pool, block_tables),
+                      _gather_pages(v_scale_pool, block_tables), q.dtype)
     return verify_ref(q, k, v, lengths)
 
 
 __all__ = ["decode_ref", "flash_ref", "reference_attention",
-           "paged_decode_ref", "paged_verify_ref", "verify_ref"]
+           "paged_decode_ref", "paged_decode_quant_ref",
+           "paged_verify_ref", "paged_verify_quant_ref", "verify_ref"]

@@ -10,38 +10,39 @@ single-token ``paged_decode`` is the *per-query* causal bound: draft query
 ``<= lengths[b] + j``, so each query row of the block gets its own length
 limit instead of the row-wide scalar.
 
-The block-table indirection is identical to ``paged_decode``: the table and
-per-row base lengths are scalar-prefetched to SMEM, and the BlockSpec
-``index_map`` resolves logical page ``ip`` of row ``b`` to physical page
-``bt[b, ip]`` so the pager can stream pool pages HBM->VMEM ahead of the
-body.  One grid step covers one page per (batch row × kv head); the K query
-positions of all ``rep`` grouped heads ride in one ``(K*rep, d)`` q block,
-with the online-softmax carry in VMEM scratch.
+Layout and tuning are shared with ``paged_decode`` (DESIGN.md
+§Perf-kernels): head-fused ``(P, Hkv, page, D)`` pool blocks, a
+``(B, padded_pages // pages_per_step)`` grid with the block table padded
+to a multiple of ``pages_per_step`` using scratch-page entries, and the
+same scalar-prefetch index maps.  The K query positions of all ``rep``
+grouped heads ride in one ``(hkv, K*rep, d)`` q block.  The quantized
+variant dequantizes int8 pages in-body via
+``models.attention.kv_dequantize``, same as the decode kernel.
 
-Entries of the block table past a row's allocation may point anywhere (the
-engine points them at the scratch page 0); they are DMA'd but fully masked.
-The jnp oracle is ``ref.paged_verify_ref``.
+The jnp oracles are ``ref.paged_verify_ref`` / ``ref.paged_verify_quant_ref``.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.compat.pallascompat import tpu_compiler_params
-from repro.models.attention import NEG_INF
+from repro.models.attention import NEG_INF, kv_dequantize
+from repro.kernels.paged_decode import _paged_attention
 
 
-def _verify_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, page: int, hkv: int,
-                   rep: int, scale: float):
+def _verify_kernel(bt_ref, len_ref, q_ref, *refs, page: int, pps: int,
+                   quant: bool, scale: float, rep: int):
+    """refs: k×pps, v×pps[, k_scale×pps, v_scale×pps], o, acc, m, l."""
     ip = pl.program_id(1)
     np_ = pl.num_programs(1)
-    base_len = len_ref[pl.program_id(0) // hkv]
+    base_len = len_ref[pl.program_id(0)]
+    n_in = pps * (4 if quant else 2)
+    k_refs, v_refs = refs[:pps], refs[pps:2 * pps]
+    ks_refs = refs[2 * pps:3 * pps] if quant else ()
+    vs_refs = refs[3 * pps:4 * pps] if quant else ()
+    o_ref, acc_ref, m_ref, l_ref = refs[n_in:]
 
     @pl.when(ip == 0)
     def _init():
@@ -49,25 +50,33 @@ def _verify_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(jnp.float32)                   # (K*rep, d)
-    k = k_ref[0].astype(jnp.float32)                   # (page, d)
-    v = v_ref[0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-    # logical token positions of this page vs each query's own causal bound:
-    # q block row r is draft query j = r // rep, at absolute position
+    q = q_ref[0].astype(jnp.float32)                   # (hkv, K*rep, d)
+    # q-block row r is draft query j = r // rep, at absolute position
     # base_len + j, attending positions <= base_len + j
-    k_pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    q_idx = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], 1), 0) // rep
-    s = jnp.where(k_pos <= base_len + q_idx, s, NEG_INF)
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (1, q.shape[1], 1), 1) // rep
+    for j in range(pps):
+        if quant:
+            k = kv_dequantize(k_refs[j][0], ks_refs[j][0][..., None],
+                              jnp.float32)             # (hkv, page, d)
+            v = kv_dequantize(v_refs[j][0], vs_refs[j][0][..., None],
+                              jnp.float32)
+        else:
+            k = k_refs[j][0].astype(jnp.float32)
+            v = v_refs[j][0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,)))) * scale
+        k_pos = (ip * pps + j) * page + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, page), 2)
+        s = jnp.where(k_pos <= base_len + q_idx, s, NEG_INF)
 
-    m_prev, l_prev = m_ref[...], l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[..., None])
-    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
-    acc_ref[...] = (acc_ref[...] * alpha[..., None]
-                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
-    m_ref[...] = m_new
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                        + jax.lax.dot_general(p, v,
+                                              (((2,), (1,)), ((0,), (0,)))))
+        m_ref[...] = m_new
 
     @pl.when(ip == np_ - 1)
     def _finalize():
@@ -78,60 +87,17 @@ def _verify_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 def flash_paged_verify_tpu(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array, *,
+                           k_scale=None, v_scale=None,
+                           pages_per_step=None,
                            interpret: bool = True) -> jax.Array:
     """q: (B, K, H, D) — K new tokens per row, whose KV is already in the
     pool at positions ``lengths[b] .. lengths[b]+K-1``; pools:
     (P, page, Hkv, D); block_tables: (B, maxp) int32; lengths: (B,) int32
-    valid tokens per row BEFORE the K new tokens.
-
-    Returns (B, K, H, D).
+    valid tokens per row BEFORE the K new tokens.  For int8 pools pass
+    ``k_scale``/``v_scale``: (P, page, Hkv, 1) per-token-per-head scales.
+    ``pages_per_step`` overrides the recorded tuning.  Returns (B, K, H, D).
     """
-    b, kq, h, d = q.shape
-    page, hkv = k_pool.shape[1], k_pool.shape[2]
-    maxp = block_tables.shape[1]
-    assert h % hkv == 0
-    rep = h // hkv
-
-    # (B, K, H, D) -> (B*Hkv, K*rep, D): group the rep query heads of each
-    # kv head, keeping the K draft positions adjacent so the kernel can
-    # recover each q-block row's draft index as row // rep
-    qr = (q.reshape(b, kq, hkv, rep, d).transpose(0, 2, 1, 3, 4)
-          .reshape(b * hkv, kq * rep, d))
-    kr = k_pool.transpose(0, 2, 1, 3).reshape(-1, page, d)
-    vr = v_pool.transpose(0, 2, 1, 3).reshape(-1, page, d)
-    bt = block_tables.astype(jnp.int32)
-    lens = lengths.astype(jnp.int32)
-
-    def kv_index(bh, ip, bt_ref, len_ref):
-        # physical page for (row bh//hkv, logical page ip), head bh%hkv
-        return (bt_ref[bh // hkv, ip] * hkv + bh % hkv, 0, 0)
-
-    grid = (b * hkv, maxp)
-    kernel = functools.partial(_verify_kernel, page=page, hkv=hkv, rep=rep,
-                               scale=d ** -0.5)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, kq * rep, d),
-                             lambda bh, ip, bt, ln: (bh, 0, 0)),
-                pl.BlockSpec((1, page, d), kv_index),
-                pl.BlockSpec((1, page, d), kv_index),
-            ],
-            out_specs=pl.BlockSpec((1, kq * rep, d),
-                                   lambda bh, ip, bt, ln: (bh, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((kq * rep, d), jnp.float32),
-                pltpu.VMEM((kq * rep,), jnp.float32),
-                pltpu.VMEM((kq * rep,), jnp.float32),
-            ],
-        ),
-        out_shape=jax.ShapeDtypeStruct((b * hkv, kq * rep, d), q.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-    )(bt, lens, qr, kr, vr)
-    return (out.reshape(b, hkv, kq, rep, d).transpose(0, 2, 1, 3, 4)
-            .reshape(b, kq, h, d))
+    kq = q.shape[1]
+    return _paged_attention(q, k_pool, v_pool, block_tables, lengths,
+                            k_scale, v_scale, pages_per_step, interpret,
+                            _verify_kernel, kq=kq)

@@ -53,11 +53,21 @@ def main(argv=None) -> int:
                          "paged)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per verify step")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="store KV pages as int8 with per-token-per-head "
+                         "scale pools — half the bytes per resident token, "
+                         "so the same HBM budget admits ~2x the concurrent "
+                         "requests (DESIGN.md §6.1-paged; implies paged)")
     args = ap.parse_args(argv)
     if args.spec and args.disagg:
         ap.error("--spec and --disagg are separate backends; pick one")
+    if args.kv_quant and args.disagg:
+        ap.error("--kv-quant is colocated-only: KV handoffs carry fp "
+                 "pages (DESIGN.md §6.1-paged)")
 
     cfg = get_config(args.arch).smoke().replace(dtype="float32")
+    if args.kv_quant:
+        cfg = cfg.replace(kv_quant=True)
     print(f"spinning up {args.nodes} nodes serving {cfg.name}")
     rng = np.random.default_rng(args.seed)
     draft_cfg = draft_params = None
@@ -90,7 +100,7 @@ def main(argv=None) -> int:
         else:
             executors[nid] = EngineExecutor(
                 Engine(cfg, params, max_batch=4, bucket=32, seed=i,
-                       paged=args.paged))
+                       paged=args.paged or args.kv_quant))
         prof = make_profile("qwen3-8b", "RTX3090", "sglang",
                             quality=0.4 + 0.15 * i)
         pol = NodePolicy(offload_util_threshold=0.15,

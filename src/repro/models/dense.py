@@ -282,60 +282,117 @@ def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: jax.Array
 
 
 # ---------------------------------------------------------------- paged decode
+PAGED_POOL_NAMES = ("k_pool", "v_pool", "k_scale_pool", "v_scale_pool")
+
+
 def init_paged_pools(cfg: ModelConfig, num_pages: int, page_size: int,
                      dtype=None) -> Dict:
     """Allocate the shared KV page pools: {"k_pool","v_pool"} each
     (L, P, page, Hkv, dh).  Page 0 is conventionally the engine's scratch
-    page (writes for unallocated rows land there and are never attended)."""
-    dt = dtype or _dt(cfg)
+    page (writes for unallocated rows land there and are never attended).
+
+    With ``cfg.kv_quant`` the pools are int8 and two parallel *scale pools*
+    {"k_scale_pool","v_scale_pool"} (L, P, page, Hkv, 1) bf16 ride the same
+    block-table indirection — one per-(token, head) scale per pool entry
+    (DESIGN.md §6.1-paged).
+    """
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        sshape = shape[:-1] + (1,)
+        return {"k_pool": jnp.zeros(shape, jnp.int8),
+                "v_pool": jnp.zeros(shape, jnp.int8),
+                "k_scale_pool": jnp.zeros(sshape, jnp.bfloat16),
+                "v_scale_pool": jnp.zeros(sshape, jnp.bfloat16)}
+    dt = dtype or _dt(cfg)
     return {"k_pool": jnp.zeros(shape, dt), "v_pool": jnp.zeros(shape, dt)}
 
 
 def prefill_to_pages(pools: Dict, kv: Dict, phys_pages: jax.Array) -> Dict:
     """Scatter a contiguous prefill cache into pool pages.
 
-    pools: {"k_pool","v_pool"} (L, P, page, Hkv, dh); kv: {"k","v"}
-    (L, n, plen, Hkv, dh) with plen a multiple of the page size;
+    pools: {"k_pool","v_pool"[,"k_scale_pool","v_scale_pool"]}
+    (L, P, page, Hkv, dh|1); kv: {"k","v"[,"k_scale","v_scale"]}
+    (L, n, plen, Hkv, dh|1) with plen a multiple of the page size — a
+    quantized prefill cache is scattered as-is, NOT re-quantized, so paged
+    pages hold bit-identical values to the slot cache;
     phys_pages: (n, plen//page) int32 physical page per (row, logical page).
     Entries for pages past a row's real prompt point at the scratch page 0
     (several rows may alias it; the garbage is masked by per-row lengths).
     """
     page = pools["k_pool"].shape[2]
     out = {}
-    for name in ("k", "v"):
+    for pname in PAGED_POOL_NAMES:
+        if pname not in pools:
+            continue
+        name = pname[:-5]                              # strip "_pool"
         L, n, plen = kv[name].shape[:3]
         src = kv[name].reshape((L, n, plen // page, page) + kv[name].shape[3:])
-        out[name + "_pool"] = pools[name + "_pool"].at[:, phys_pages].set(src)
+        out[pname] = pools[pname].at[:, phys_pages].set(src)
     return out
 
 
-def _block_decode_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
-                        block_tables: jax.Array, lengths: jax.Array,
-                        phys_page: jax.Array, page_slot: jax.Array
-                        ) -> Tuple[jax.Array, Dict]:
-    """One layer, one token, against this layer's KV page pool.
+def _gather_layer_pages(pools: Dict, l: jax.Array, block_tables: jax.Array,
+                        cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Gather layer ``l``'s pages into contiguous (B, maxp*page, Hkv, dh)
+    K/V, dequantizing int8 pools through their scale pools (the same
+    ``kv_dequantize`` the slot path uses, so quantized-paged stays
+    bit-identical to quantized-slot)."""
+    from repro.models.attention import kv_dequantize
+    b, maxp = block_tables.shape
+    page = pools["k_pool"].shape[2]
 
-    x: (B,1,d); pools: {"k","v"} (P, page, Hkv, dh); block_tables: (B, maxp);
-    lengths: (B,) valid tokens per row; phys_page/page_slot: (B,) physical
-    page and in-page slot where this token's KV is written (rows without an
-    allocated page are pointed at the scratch page 0 by the engine — their
-    write is garbage that a later real write or mask supersedes).
+    def gather(pname):
+        p = pools[pname][l][block_tables]
+        return p.reshape((b, maxp * page) + p.shape[3:])
+
+    kg, vg = gather("k_pool"), gather("v_pool")
+    if "k_scale_pool" in pools:
+        kg = kv_dequantize(kg, gather("k_scale_pool"), _dt(cfg))
+        vg = kv_dequantize(vg, gather("v_scale_pool"), _dt(cfg))
+    return kg, vg
+
+
+def _scatter_pool_writes(pools: Dict, l: jax.Array, phys_page: jax.Array,
+                         page_slot: jax.Array, k: jax.Array, v: jax.Array,
+                         squeeze: bool) -> Dict:
+    """Write new-token KV into layer ``l``'s pages, quantizing on page
+    write for int8 pools.  k/v: (B, K, Hkv, dh); phys_page/page_slot: (B,)
+    when ``squeeze`` (single token) else (B, K)."""
+    from repro.models.attention import kv_quantize
+    writes = {"k_pool": k, "v_pool": v}
+    if "k_scale_pool" in pools:
+        writes["k_pool"], writes["k_scale_pool"] = kv_quantize(k)
+        writes["v_pool"], writes["v_scale_pool"] = kv_quantize(v)
+    return {name: pools[name].at[l, phys_page, page_slot].set(
+                w[:, 0] if squeeze else w)
+            for name, w in writes.items()}
+
+
+def _block_decode_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
+                        l: jax.Array, block_tables: jax.Array,
+                        lengths: jax.Array, phys_page: jax.Array,
+                        page_slot: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One layer, one token, against layer ``l`` of the KV page pools.
+
+    x: (B,1,d); pools: full (L, P, page, Hkv, dh|1) arrays carried through
+    the layer scan — indexing layer ``l`` here (instead of slicing pools as
+    scan xs) keeps the update in-place under buffer donation, so decode
+    cost does not scale with pool size (§Perf-kernels); block_tables:
+    (B, maxp); lengths: (B,) valid tokens per row; phys_page/page_slot:
+    (B,) physical page and in-page slot where this token's KV is written
+    (rows without an allocated page are pointed at the scratch page 0 by
+    the engine — their write is garbage that a later real write or mask
+    supersedes).
     """
     b = x.shape[0]
-    maxp = block_tables.shape[1]
-    page = pools["k"].shape[1]
     h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
     pos = jnp.broadcast_to(jnp.reshape(lengths, (-1, 1)), (b, 1))
     if cfg.mrope:
         pos = jnp.broadcast_to(jnp.reshape(lengths, (-1, 1, 1)), (b, 1, 3))
     q, k, v = _project_qkv(lp, cfg, h, pos)
-    pools = {"k": pools["k"].at[phys_page, page_slot].set(k[:, 0]),
-             "v": pools["v"].at[phys_page, page_slot].set(v[:, 0])}
-    kg = pools["k"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
-                                          cfg.head_dim)
-    vg = pools["v"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
-                                          cfg.head_dim)
+    pools = _scatter_pool_writes(pools, l, phys_page, page_slot, k, v,
+                                 squeeze=True)
+    kg, vg = _gather_layer_pages(pools, l, block_tables, cfg)
     attn = decode_attention(q, kg, vg, lengths + 1)
     attn = attn.reshape(b, 1, cfg.q_dim) @ lp["wo"]
     if cfg.use_bias:
@@ -351,13 +408,19 @@ def paged_decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
                       token: jax.Array) -> Tuple[jax.Array, Dict]:
     """One decode step against paged KV (DESIGN.md §6.1, paged backend).
 
-    cache: {"k_pool"/"v_pool": (L, P, page, Hkv, dh),
+    cache: {"k_pool"/"v_pool": (L, P, page, Hkv, dh)
+            [, "k_scale_pool"/"v_scale_pool": (L, P, page, Hkv, 1)],
             "block_tables": (B, maxp) int32, "lengths": (B,) int32};
     token: (B,1).  Every row decodes at its own depth; the new token's KV is
     scattered into physical page ``bt[b, lengths[b] // page]`` at slot
-    ``lengths[b] % page``.  The engine guarantees that page is allocated for
-    rows that are actually decoding; riding-along rows resolve to the
-    scratch page 0.  Returns (logits, cache with lengths+1).
+    ``lengths[b] % page`` (quantize-on-write for int8 pools).  The engine
+    guarantees that page is allocated for rows that are actually decoding;
+    riding-along rows resolve to the scratch page 0.
+
+    The pools ride the layer scan as **carry** (layer picked by index), not
+    as sliced xs — under ``jax.jit(..., donate_argnums=...)`` the scatter
+    is then a true in-place update and step cost is independent of pool
+    size (§Perf-kernels).  Returns (logits, cache with lengths+1).
     """
     x = jnp.take(params["embed"], token, axis=0)
     bt = cache["block_tables"]
@@ -368,50 +431,48 @@ def paged_decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
     page_idx = jnp.minimum(lengths // page, maxp - 1)
     phys_page = bt[rows, page_idx]
     page_slot = lengths % page
+    pool_names = [n for n in PAGED_POOL_NAMES if n in cache]
 
-    def step(x, xs):
-        lp, pools = xs
-        x, pools = _block_decode_paged(lp, cfg, x, pools, bt, lengths,
+    def step(carry, xs):
+        x, pools = carry
+        lp, l = xs
+        x, pools = _block_decode_paged(lp, cfg, x, pools, l, bt, lengths,
                                        phys_page, page_slot)
-        return x, pools
+        return (x, pools), None
 
-    x, pools_new = jax.lax.scan(
-        step, x, (params["layers"],
-                  {"k": cache["k_pool"], "v": cache["v_pool"]}),
+    (x, pools_new), _ = jax.lax.scan(
+        step, (x, {n: cache[n] for n in pool_names}),
+        (params["layers"], jnp.arange(cfg.n_layers)),
         unroll=runtime.scan_unroll())
     x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
     logits = logits_of(params, cfg, x)
-    return logits, {"k_pool": pools_new["k"], "v_pool": pools_new["v"],
-                    "block_tables": bt, "lengths": lengths + 1}
+    return logits, {**pools_new, "block_tables": bt, "lengths": lengths + 1}
 
 
 def _block_verify_paged(lp: Dict, cfg: ModelConfig, x: jax.Array, pools: Dict,
-                        block_tables: jax.Array, lengths: jax.Array,
-                        phys_page: jax.Array, page_slot: jax.Array
-                        ) -> Tuple[jax.Array, Dict]:
-    """One layer, K new tokens, against this layer's KV page pool
+                        l: jax.Array, block_tables: jax.Array,
+                        lengths: jax.Array, phys_page: jax.Array,
+                        page_slot: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One layer, K new tokens, against layer ``l`` of the KV page pools
     (speculative verify, DESIGN.md §6.1-spec).
 
-    x: (B,K,d); pools: {"k","v"} (P, page, Hkv, dh); block_tables: (B, maxp);
-    lengths: (B,) valid tokens per row BEFORE the K new tokens;
-    phys_page/page_slot: (B,K) physical page and in-page slot where token
-    j's KV is written (position ``lengths[b]+j``; rows without an allocated
-    page there are pointed at the scratch page 0 by the engine).
+    x: (B,K,d); pools: full (L, P, page, Hkv, dh|1) arrays carried through
+    the layer scan (same in-place-under-donation layout as
+    ``_block_decode_paged``); block_tables: (B, maxp); lengths: (B,) valid
+    tokens per row BEFORE the K new tokens; phys_page/page_slot: (B,K)
+    physical page and in-page slot where token j's KV is written (position
+    ``lengths[b]+j``; rows without an allocated page there are pointed at
+    the scratch page 0 by the engine).
     """
     b, kq = x.shape[:2]
-    maxp = block_tables.shape[1]
-    page = pools["k"].shape[1]
     h = cm.apply_norm(x, lp["ln1"], cfg.norm_type)
     pos = lengths[:, None] + jnp.arange(kq, dtype=lengths.dtype)[None, :]
     if cfg.mrope:
         pos = jnp.broadcast_to(pos[..., None], (b, kq, 3))
     q, k, v = _project_qkv(lp, cfg, h, pos)
-    pools = {"k": pools["k"].at[phys_page, page_slot].set(k),
-             "v": pools["v"].at[phys_page, page_slot].set(v)}
-    kg = pools["k"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
-                                          cfg.head_dim)
-    vg = pools["v"][block_tables].reshape(b, maxp * page, cfg.n_kv_heads,
-                                          cfg.head_dim)
+    pools = _scatter_pool_writes(pools, l, phys_page, page_slot, k, v,
+                                 squeeze=False)
+    kg, vg = _gather_layer_pages(pools, l, block_tables, cfg)
     attn = verify_attention(q, kg, vg, lengths)
     attn = attn.reshape(b, kq, cfg.q_dim) @ lp["wo"]
     if cfg.use_bias:
@@ -427,17 +488,20 @@ def paged_verify_step(params: Dict, cfg: ModelConfig, cache: Dict,
                       tokens: jax.Array) -> Tuple[jax.Array, Dict]:
     """One speculative verify step against paged KV (DESIGN.md §6.1-spec).
 
-    cache: {"k_pool"/"v_pool": (L, P, page, Hkv, dh),
+    cache: {"k_pool"/"v_pool": (L, P, page, Hkv, dh)
+            [, "k_scale_pool"/"v_scale_pool": (L, P, page, Hkv, 1)],
             "block_tables": (B, maxp) int32, "lengths": (B,) int32};
     tokens: (B, K) — the pending token followed by the k draft tokens.
     Token j's KV is scattered into physical page
-    ``bt[b, (lengths[b]+j) // page]`` at slot ``(lengths[b]+j) % page``,
-    then all K positions attend the gathered pages with per-query causal
-    bounds (query j sees positions ``<= lengths[b]+j``).  The engine
-    guarantees pages are allocated through ``lengths+K`` for verifying
-    rows; riding-along rows resolve to the scratch page 0.  Returns
-    (logits (B,K,V), cache) — ``lengths`` is NOT advanced: the engine owns
-    advancement, which depends on how many draft tokens were accepted.
+    ``bt[b, (lengths[b]+j) // page]`` at slot ``(lengths[b]+j) % page``
+    (quantize-on-write for int8 pools), then all K positions attend the
+    gathered pages with per-query causal bounds (query j sees positions
+    ``<= lengths[b]+j``).  The engine guarantees pages are allocated
+    through ``lengths+K`` for verifying rows; riding-along rows resolve to
+    the scratch page 0.  Pools are scan carry, in-place under donation
+    (§Perf-kernels).  Returns (logits (B,K,V), cache) — ``lengths`` is NOT
+    advanced: the engine owns advancement, which depends on how many draft
+    tokens were accepted.
     """
     x = jnp.take(params["embed"], tokens, axis=0)
     bt = cache["block_tables"]
@@ -450,21 +514,22 @@ def paged_verify_step(params: Dict, cfg: ModelConfig, cache: Dict,
     page_idx = jnp.minimum(pos_abs // page, maxp - 1)
     phys_page = bt[rows[:, None], page_idx]
     page_slot = pos_abs % page
+    pool_names = [n for n in PAGED_POOL_NAMES if n in cache]
 
-    def step(x, xs):
-        lp, pools = xs
-        x, pools = _block_verify_paged(lp, cfg, x, pools, bt, lengths,
+    def step(carry, xs):
+        x, pools = carry
+        lp, l = xs
+        x, pools = _block_verify_paged(lp, cfg, x, pools, l, bt, lengths,
                                        phys_page, page_slot)
-        return x, pools
+        return (x, pools), None
 
-    x, pools_new = jax.lax.scan(
-        step, x, (params["layers"],
-                  {"k": cache["k_pool"], "v": cache["v_pool"]}),
+    (x, pools_new), _ = jax.lax.scan(
+        step, (x, {n: cache[n] for n in pool_names}),
+        (params["layers"], jnp.arange(cfg.n_layers)),
         unroll=runtime.scan_unroll())
     x = cm.apply_norm(x, params["final_norm"], cfg.norm_type)
     logits = logits_of(params, cfg, x)
-    return logits, {"k_pool": pools_new["k"], "v_pool": pools_new["v"],
-                    "block_tables": bt, "lengths": lengths}
+    return logits, {**pools_new, "block_tables": bt, "lengths": lengths}
 
 
 def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> Dict:

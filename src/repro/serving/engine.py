@@ -54,7 +54,7 @@ import numpy as np
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
-from repro.sim.executor import paged_admit_ok, pages_for
+from repro.sim.executor import paged_admit_ok, pages_for, quantized_pages
 from repro.sim.servicemodel import SPEC_ALPHA0, SPEC_EMA_BETA, SPEC_K
 
 
@@ -202,20 +202,39 @@ class Engine:
                 raise ValueError(
                     "paged KV requires a paged-capable slot-decode family "
                     "(dense/vlm with full attention)")
-            if cfg.kv_quant:
-                raise ValueError("paged KV does not support kv_quant caches")
+            # the decode/verify caches are DONATED: with the pools carried
+            # through the layer scan (dense.paged_decode_step), donation
+            # makes the page scatter a true in-place update, so step cost
+            # is independent of pool size (§Perf-kernels).  Never reuse a
+            # cache array after passing it in — the engine always reads the
+            # returned cache.
             self._decode_paged = jax.jit(
-                lambda p, c, t: fam.paged_decode(p, cfg, c, t))
-            self._scatter_pages = jax.jit(fam.prefill_to_pages)
+                lambda p, c, t: fam.paged_decode(p, cfg, c, t),
+                donate_argnums=(1,))
+            self._scatter_pages = jax.jit(fam.prefill_to_pages,
+                                          donate_argnums=(0,))
             self._init_pools = fam.init_paged_pools
             usable = (int(num_pages) if num_pages is not None
                       else max_batch * pages_for(2 * bucket, self.page_size))
+            # int8 KV pages: the same HBM budget holds 2x the pages — the
+            # shared sim/engine capacity rule (DESIGN.md §6.1-paged)
+            usable = quantized_pages(usable, cfg.kv_quant)
             self._num_pages = usable + 1          # page 0 is scratch
             self._pools: Optional[Dict] = None    # lazy device alloc
+            self._pool_names = (("k_pool", "v_pool", "k_scale_pool",
+                                 "v_scale_pool") if cfg.kv_quant
+                                else ("k_pool", "v_pool"))
             self._free_pages: List[int] = list(range(1, self._num_pages))
             self._row_pages: List[List[int]] = [[] for _ in range(max_batch)]
             self._maxp = max(1, pages_for(2 * bucket, self.page_size))
             self._block_tables = np.zeros((max_batch, self._maxp), np.int32)
+            # device-resident block table + lengths (§Perf-kernels): the
+            # decode cache passes both through, so steady-state decode skips
+            # the per-step host->device upload; any host-side mutation
+            # (admission, release, page claim) marks them dirty
+            self._bt_dev: Optional[jax.Array] = None
+            self._len_dev: Optional[jax.Array] = None
+            self._tables_dirty = True
             # admission order, for LIFO preemption under pool pressure
             self._slot_seq = np.zeros(max_batch, np.int64)
             self._admit_seq = 0
@@ -243,7 +262,8 @@ class Engine:
             self.spec_draft_cfg = draft_cfg
             self.spec_draft_params = draft_params
             self._verify = jax.jit(
-                lambda p, c, t: fam.paged_verify(p, cfg, c, t))
+                lambda p, c, t: fam.paged_verify(p, cfg, c, t),
+                donate_argnums=(1,))
             self._draft_prefill = jax.jit(
                 lambda p, b, cap, lp: dfam.prefill(p, draft_cfg, b,
                                                    q_chunk=256, kv_chunk=256,
@@ -513,6 +533,28 @@ class Engine:
         wider[:, : self._maxp] = self._block_tables
         self._block_tables = wider
         self._maxp = maxp
+        self._tables_dirty = True
+
+    def _table_width(self, lookahead: int = 1) -> int:
+        """Logical-page width the decode block table needs this step: every
+        resident row's allocated pages, plus one column PAST the page its
+        next ``lookahead`` writes land in.  The extra column matters for
+        riding-along rows whose prompt exactly fills their pages: their
+        inert write targets the next (unallocated) logical page, and
+        without the column the clamped table lookup would alias slot 0 of
+        their own last real page.  Rounded up to a power of two (few jit
+        shapes), capped at the full table."""
+        need = 1
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            last_write = (int(self._lengths[i]) + lookahead - 1)
+            need = max(need, len(self._row_pages[i]),
+                       last_write // self.page_size + 1)
+        w = 1
+        while w < need:
+            w *= 2
+        return min(w, self._maxp)
 
     def _prefill_paged(self, take: List[Tuple[int, GenRequest]]) -> None:
         """Right-padded prompt prefill, then scatter the contiguous KV into
@@ -537,6 +579,7 @@ class Engine:
             self._lengths[i] = len(r.tokens)
             self._slot_seq[i] = self._admit_seq
             self._admit_seq += 1
+        self._tables_dirty = True
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
                                       plen, jnp.asarray(last))
@@ -590,6 +633,7 @@ class Engine:
         self._free_pages.extend(self._row_pages[i])
         self._row_pages[i] = []
         self._block_tables[i, :] = 0
+        self._tables_dirty = True
 
     def _preempt(self, i: int) -> None:
         """Reclaim row ``i``'s pages and requeue its request at the head of
@@ -635,6 +679,7 @@ class Engine:
                     idx = len(self._row_pages[i]) - 1
                     self._grow_block_tables(idx + 1)
                     self._block_tables[i, idx] = pg
+                    self._tables_dirty = True
                 else:
                     victims = [j for j, s in enumerate(self._slots)
                                if s is not None]
@@ -660,6 +705,8 @@ class Engine:
         assert self.paged, "KV handoff requires the paged backend"
         assert not self.spec, "KV handoff and speculative decoding are " \
             "separate backends (the draft cache does not travel)"
+        assert not self.cfg.kv_quant, "KV handoff carries fp pages only " \
+            "(quantized scale pools do not travel; DESIGN.md §6.1-paged)"
         out: List[KVHandoff] = []
         for i, s in enumerate(self._slots):
             if s is None or not s.out:
@@ -689,6 +736,8 @@ class Engine:
         assert self.paged and h.page_size == self.page_size
         assert not self.spec, "KV handoff and speculative decoding are " \
             "separate backends (the draft cache does not travel)"
+        assert not self.cfg.kv_quant, "KV handoff carries fp pages only " \
+            "(quantized scale pools do not travel; DESIGN.md §6.1-paged)"
         free_slots = [i for i, s in enumerate(self._slots) if s is None]
         if not free_slots:
             return False
@@ -724,6 +773,7 @@ class Engine:
         self._row_pages[i] = pages
         self._block_tables[i, :] = 0
         self._block_tables[i, :need] = pages
+        self._tables_dirty = True
         slot = _Slot(h.req)
         slot.out = list(h.out)
         self._slots[i] = slot
@@ -805,13 +855,28 @@ class Engine:
         if survivors:
             t0 = time.perf_counter()
             if self.paged:
-                cache = {**self._pools,
-                         "block_tables": jnp.asarray(self._block_tables),
-                         "lengths": jnp.asarray(self._lengths, jnp.int32)}
+                # trim the table to the pages live rows can actually touch
+                # and reuse the device-resident copy whenever no host-side
+                # mutation invalidated it (§Perf-kernels)
+                w = self._table_width()
+                if (self._tables_dirty or self._bt_dev is None
+                        or self._bt_dev.shape[1] != w):
+                    self._bt_dev = jnp.asarray(self._block_tables[:, :w])
+                    self._len_dev = jnp.asarray(self._lengths, jnp.int32)
+                cache = {**self._pools, "block_tables": self._bt_dev,
+                         "lengths": self._len_dev}
                 logits, cache = self._decode_paged(self.params, cache, cur)
                 logits.block_until_ready()
-                self._pools = {"k_pool": cache["k_pool"],
-                               "v_pool": cache["v_pool"]}
+                self._pools = {n: cache[n] for n in self._pool_names}
+                # the cache is donated: only the RETURNED tables/lengths are
+                # valid now.  They advanced every row by one; reuse is only
+                # sound when every active row was a survivor — a rider row
+                # (admitted mid-step) holds its prompt length on the host
+                # but length+1 on the device, so its next write would skip
+                # a position.  Any rider forces a re-upload.
+                self._bt_dev = cache["block_tables"]
+                self._len_dev = cache["lengths"]
+                self._tables_dirty = self.active_slots() != len(survivors)
             else:
                 cache = {**self._cache,
                          "length": jnp.asarray(self._lengths, jnp.int32)}
@@ -912,8 +977,12 @@ class Engine:
         #    2b (rejected drafts land beyond the valid length and are
         #    overwritten by the next verify at the same positions)
         toks = np.concatenate([cur_np[:, None], drafts], axis=1)
+        # spec lengths advance by a variable 1+a per row, so the device
+        # tables are rebuilt every verify (no resident reuse); the width is
+        # still trimmed to the pages the k+1 writes can touch
+        w = self._table_width(lookahead=self.spec_k + 1)
         cache = {**self._pools,
-                 "block_tables": jnp.asarray(self._block_tables),
+                 "block_tables": jnp.asarray(self._block_tables[:, :w]),
                  "lengths": jnp.asarray(self._lengths, jnp.int32)}
         t0 = time.perf_counter()
         vlogits, cache = self._verify(self.params, cache, jnp.asarray(toks))
@@ -921,7 +990,7 @@ class Engine:
         dt = time.perf_counter() - t0
         self.stats.decode_wall_s += dt
         self.stats.verify_wall_s += dt
-        self._pools = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"]}
+        self._pools = {n: cache[n] for n in self._pool_names}
         # the target's greedy choice at every position, with the same
         # vocab masking + argmax as sample(temperature=0)
         tgt = np.asarray(_greedy_tokens(vlogits, self.cfg.vocab_size))

@@ -300,18 +300,26 @@ class DisaggEngineExecutor(Executor):
             handoffs=a.handoffs, handoff_bytes=a.handoff_bytes)
 
     def step(self) -> List[GenRequest]:
-        """One disagg iteration: pump the prefill engine, extract and land
-        handoffs, pump the decode engine, and route decode-side
-        preemptions back to the prefill side."""
+        """One disagg iteration: pump the prefill engine, extract handoffs,
+        pump the decode engine, land the extracted handoffs, and route
+        decode-side preemptions back to the prefill side.
+
+        The extract -> decode -> land order makes the handoff copy
+        asynchronous: ``extract_handoffs`` only DISPATCHES the device-side
+        page gather (jax async dispatch returns before the copy runs), so
+        the gather overlaps the decode engine's step instead of being
+        forced inside its decode wall; the landed rows join the next
+        iteration's batch.  Byte accounting is unchanged — both ends still
+        count ``h.kv_bytes`` when the handoff object passes through."""
         finished: List[GenRequest] = []
         if self.prefill.has_work():
             finished.extend(self.prefill.step())   # may finish on prefill
         self._pending.extend(self.prefill.extract_handoffs())
+        if self.decode.has_work():
+            finished.extend(self.decode.step())    # overlaps pending copies
         while self._pending and self.decode.accept_handoff(self._pending[0]):
             h = self._pending.pop(0)
             self._reserved.pop(h.req.rid, None)    # reservation -> real pages
-        if self.decode.has_work():
-            finished.extend(self.decode.step())
         # decode-pool preemptions recompute via the prefill side, with the
         # decode pages they will need again re-reserved; reversed because
         # requeue() head-inserts — the oldest victim must end up first so

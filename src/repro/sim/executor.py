@@ -111,6 +111,18 @@ def paged_admit_ok(free_pages: int, prompt_tokens: int, page_size: int,
     return (not resident) or pages_for(prompt_tokens, page_size) <= free_pages
 
 
+def quantized_pages(num_pages: int, quantized: bool) -> int:
+    """THE quantized-pool capacity rule, shared by the simulated and real
+    backends (DESIGN.md §6.1-paged): int8 KV pages are half the bytes of
+    fp pages, so the same HBM budget holds **2x the pages** — admission and
+    preemption already meter pages, so capacity doubles with no further
+    rule changes.  ``num_pages`` is the fp-page count of the budget; the
+    scale pages ride in a parallel pool whose footprint (1/head_dim of the
+    values) is treated as overhead, not metered capacity.
+    """
+    return int(num_pages) * 2 if quantized else int(num_pages)
+
+
 def spec_expected_tokens(alpha: float, k: int) -> float:
     """THE speculative-decoding acceptance model, shared by the simulated
     and real backends (DESIGN.md §6.1-spec): with per-token draft
@@ -264,16 +276,23 @@ class TokenBucketExecutor(Executor):
     """
 
     def __init__(self, profile: BackendProfile,
-                 page_size: Optional[int] = None) -> None:
+                 page_size: Optional[int] = None,
+                 kv_quant: bool = False) -> None:
         self.profile = profile
         self.kv_budget = int(getattr(profile, "kv_token_budget", 0)
                              or profile.max_concurrency * KV_TOKENS_PER_STREAM)
         # page-granularity admission mode: the same KV budget expressed as a
         # pool of fixed-size pages, admitted on *prompt* pages only
         # (paged_admit_ok) — decode pages accrue as streams generate, so
-        # admission matches the real paged engine's notion of "full"
+        # admission matches the real paged engine's notion of "full".
+        # ``kv_quant`` applies the shared quantized-pool capacity rule
+        # (quantized_pages): int8 pages double the pool the same HBM holds,
+        # exactly as Engine(paged=True, kv_quant) does.
         self.page_size = page_size
-        self.pages_total = (self.kv_budget // page_size) if page_size else 0
+        self.kv_quant = bool(kv_quant)
+        self.pages_total = (quantized_pages(self.kv_budget // page_size,
+                                            self.kv_quant)
+                            if page_size else 0)
         self._streams: List[_Stream] = []
         self._last_t = 0.0
         self._pending_ev = None

@@ -53,6 +53,11 @@ KV_BYTES_PER_TOKEN = 2 * 36 * 8 * 128 * 2              # 147456 B/token
 # per-handoff setup cost (connection + block-table metadata)
 TRANSFER_BYTES_PER_S = 1.25e9
 TRANSFER_BASE_S = 0.002
+# EMA step for the router's per-node observed transfer rate: each completed
+# handoff window updates rate <- (1 - beta) * rate + beta * observed, seeded
+# from TRANSFER_BYTES_PER_S so routing matches the static model until real
+# ExecutorLoad.handoff_bytes observations move it (core/network._est_wait).
+TRANSFER_EMA_BETA = 0.2
 
 # --- speculative decoding (DESIGN.md §6.1-spec) -----------------------------
 # Default draft depth: k draft tokens verified per target forward.

@@ -56,6 +56,7 @@ DESIGN_OK = """\
     ### §6.1-paged Paged
     ### §6.1-disagg Disagg
     ### §6.1-spec Spec
+    ## §Perf-kernels Speed
     ## §6.2 Duels
     ## §6.3 Ledger
     ## §7 Analysis
@@ -270,6 +271,70 @@ class TestKernelLint:
         """})
         ids = rule_ids(analyze(root, "kernel-lint"))
         assert ids.count("kernel-lint/index-map") == 1
+
+    def test_tunable_attribute_divisor_needs_evidence(self, tmp_path):
+        # a grid axis divided by a tuning ATTRIBUTE (not a bare name) must
+        # carry the same % evidence; the bare-name check alone misses it
+        bad = {**MD_STUBS, "src/repro/kernels/x.py": """\
+            import functools
+            from jax.experimental import pallas as pl
+
+            def _k(x_ref, o_ref, *, b):
+                o_ref[...] = x_ref[...]
+
+            def run(x, tuning):
+                kernel = functools.partial(_k, b=tuning.pages_per_step)
+                return pl.pallas_call(
+                    kernel, grid=(x.shape[0] // tuning.pages_per_step,))(x)
+        """}
+        ids = rule_ids(analyze(mk_repo(tmp_path / "bad", bad), "kernel-lint"))
+        assert "kernel-lint/grid-divisibility" in ids
+        good = {**MD_STUBS, "src/repro/kernels/x.py": """\
+            import functools
+            from jax.experimental import pallas as pl
+
+            def _k(x_ref, o_ref, *, b):
+                o_ref[...] = x_ref[...]
+
+            def run(x, tuning):
+                pad = (-x.shape[0]) % tuning.pages_per_step
+                kernel = functools.partial(_k, b=tuning.pages_per_step)
+                return pl.pallas_call(
+                    kernel,
+                    grid=((x.shape[0] + pad) // tuning.pages_per_step,))(x)
+        """}
+        assert rule_ids(analyze(mk_repo(tmp_path / "good", good),
+                                "kernel-lint")) == []
+
+    def test_dequant_helper_redefined_in_pallas_module(self, tmp_path):
+        root = mk_repo(tmp_path, {**MD_STUBS, "src/repro/kernels/x.py": """\
+            from jax.experimental import pallas as pl
+
+            def kv_dequantize(q, scale, dtype):
+                return q.astype(dtype) * scale
+
+            def _k(x_ref, s_ref, o_ref):
+                o_ref[...] = kv_dequantize(x_ref[...], s_ref[...], float)
+
+            def run(x, s):
+                return pl.pallas_call(_k, grid=(1,))(x, s)
+        """})
+        ids = rule_ids(analyze(root, "kernel-lint"))
+        # both the local re-definition and the call resolving to it fire
+        assert ids.count("kernel-lint/dequant-import") == 2
+
+    def test_dequant_imported_from_attention_is_silent(self, tmp_path):
+        root = mk_repo(tmp_path, {**MD_STUBS, "src/repro/kernels/x.py": """\
+            from jax.experimental import pallas as pl
+            from repro.models.attention import kv_dequantize
+
+            def _k(x_ref, s_ref, o_ref):
+                o_ref[...] = kv_dequantize(x_ref[...], s_ref[...], float)
+
+            def run(x, s):
+                return pl.pallas_call(_k, grid=(1,))(x, s)
+        """})
+        assert rule_ids(analyze(root, "kernel-lint")) == []
 
 
 class TestTwinDrift:

@@ -101,13 +101,13 @@ class TestBenchSchema:
             check_bench_schema(payload)
 
     def test_schema_checker_rejects_mix_drift(self):
-        """Schema 5 keeps pinning the disagg-vs-colocated mixed-workload
+        """Schema 6 keeps pinning the disagg-vs-colocated mixed-workload
         section (incl. the surfaced transfer pipeline depth)."""
         import json
 
         from benchmarks.run import check_bench_schema
         payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
-        assert payload["schema"] == 5
+        assert payload["schema"] == 6
         assert "ttft_speedup_prompt_heavy" in payload["mix"]
         for key in ("handoffs", "transfer_inflight_peak"):
             broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
@@ -119,8 +119,41 @@ class TestBenchSchema:
         with pytest.raises(AssertionError):
             check_bench_schema(broken)
 
+    def test_schema_checker_rejects_kernel_drift(self):
+        """Schema 6 pins the kernel microbench: slot/paged/quantized-paged
+        timings, the autotuned pages_per_step, and the int8 admission demo
+        whose >= 2x concurrency bar is a hard assert — a capacity
+        regression in the quantized page pool fails tier-1, not just the
+        artifact diff."""
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        kern = payload["kernel"]
+        assert kern["admission"]["paged_quant"] >= 2 * kern["admission"]["paged"]
+        assert kern["tuning"]["pages_per_step"] >= 1
+        for key in ("slot", "paged", "paged_quant"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["kernel"]["decode"][key]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        del broken["kernel"]["spec_verify"]["paged_quant"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["kernel"]["admission"]["paged_quant"] = \
+            2 * broken["kernel"]["admission"]["paged"] - 1
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["mix"]["paged"]["decode_tokens_per_s"] = \
+            broken["mix"]["slot"]["decode_tokens_per_s"] - 1.0
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+
     def test_schema_checker_rejects_lint_drift(self):
-        """Schema 5 pins the static-analysis snapshot: rule list, counts
+        """Schema 6 pins the static-analysis snapshot: rule list, counts
         by disposition, and a hard zero on new violations — a baseline
         or suppression creep shows up in the artifact diff."""
         import json
@@ -140,7 +173,7 @@ class TestBenchSchema:
             check_bench_schema(broken)
 
     def test_schema_checker_rejects_spec_drift(self):
-        """Schema 5 pins the speculative-vs-paged decode-heavy section:
+        """Schema 6 pins the speculative-vs-paged decode-heavy section:
         accepted-length distribution + effective decode tokens/s."""
         import json
 

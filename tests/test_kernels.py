@@ -9,10 +9,15 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.flash_decode import flash_decode_tpu
 from repro.kernels.paged_decode import flash_paged_decode_tpu
-from repro.kernels.ref import (decode_ref, flash_ref, paged_decode_ref,
+from repro.kernels.ref import (decode_ref, flash_ref, paged_decode_quant_ref,
+                               paged_decode_ref, paged_verify_quant_ref,
                                paged_verify_ref, reference_attention,
                                verify_ref)
 from repro.kernels.spec_verify import flash_paged_verify_tpu
+from repro.kernels.tuning import (DEFAULT_TUNING, KernelTuning,
+                                  autotune_paged_decode, clear_tunings,
+                                  record_tuning, tuning_for)
+from repro.models.attention import kv_quantize
 
 ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -263,6 +268,154 @@ def test_flash_paged_verify_property(b, kq, page, hkv, rep, d, seed):
     out = flash_paged_verify_tpu(q, kp, vp, bt, ln, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
                                rtol=1e-3)
+
+
+@pytest.mark.parametrize("pps", [1, 2, 3, 4])
+def test_paged_decode_pages_per_step_sweep(pps):
+    """The tunable pages-per-step batching must be output-invariant: every
+    pps (including non-divisors of maxp, which exercise the scratch-page
+    padding) matches the gather oracle."""
+    case = (3, 8, 2, 64, 16, (40, 1, 90))
+    b, h, hkv, d, page, lengths = case
+    maxp = max(2, max(-(-ln // page) for ln in lengths) + 1)
+    n_pool = 1 + sum(-(-ln // page) for ln in lengths)
+    q, kp, vp, bt, ln = _paged_case(jax.random.PRNGKey(11), b, h, hkv, d,
+                                    page, n_pool, maxp, lengths, jnp.float32)
+    ref = paged_decode_ref(q, kp, vp, bt, ln)
+    out = flash_paged_decode_tpu(q, kp, vp, bt, ln, pages_per_step=pps,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("pps", [1, 2, 3])
+def test_paged_verify_pages_per_step_sweep(pps):
+    case = (2, 4, 4, 2, 64, 16, (40, 25))
+    b, kq, h, hkv, d, page, lengths = case
+    q, kp, vp, bt, ln = _paged_verify_case(jax.random.PRNGKey(13), b, kq, h,
+                                           hkv, d, page, lengths, jnp.float32)
+    ref = paged_verify_ref(q, kp, vp, bt, ln)
+    out = flash_paged_verify_tpu(q, kp, vp, bt, ln, pages_per_step=pps,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+def _quantize_pools(kp, vp):
+    kq_, ks_ = kv_quantize(kp)
+    vq_, vs_ = kv_quantize(vp)
+    return kq_, vq_, ks_, vs_
+
+
+@pytest.mark.parametrize("case", PAGED_SWEEP)
+def test_paged_decode_quant_kernel_matches_quant_oracle(case):
+    """In-kernel dequantize == gather-then-dequantize oracle (exact up to
+    fp accumulation order) for the int8 paged decode kernel."""
+    b, h, hkv, d, page, lengths = case
+    maxp = max(2, max(-(-ln // page) for ln in lengths) + 1)
+    n_pool = 1 + sum(-(-ln // page) for ln in lengths)
+    q, kp, vp, bt, ln = _paged_case(jax.random.PRNGKey(hash(case) % 2**31),
+                                    b, h, hkv, d, page, n_pool, maxp,
+                                    lengths, jnp.float32)
+    kq_, vq_, ks_, vs_ = _quantize_pools(kp, vp)
+    ref = paged_decode_quant_ref(q, kq_, vq_, ks_, vs_, bt, ln)
+    out = flash_paged_decode_tpu(q, kq_, vq_, bt, ln, k_scale=ks_,
+                                 v_scale=vs_, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("case", PAGED_SWEEP)
+def test_paged_decode_quant_tolerance_vs_fp(case):
+    """Tolerance oracle: int8 pages reproduce the fp attention output
+    within the quantization error budget (int8 per-token-per-head scales
+    keep the relative element error ~< 1/127 ~ 0.8%)."""
+    b, h, hkv, d, page, lengths = case
+    maxp = max(2, max(-(-ln // page) for ln in lengths) + 1)
+    n_pool = 1 + sum(-(-ln // page) for ln in lengths)
+    q, kp, vp, bt, ln = _paged_case(jax.random.PRNGKey(hash(case) % 2**31),
+                                    b, h, hkv, d, page, n_pool, maxp,
+                                    lengths, jnp.float32)
+    kq_, vq_, ks_, vs_ = _quantize_pools(kp, vp)
+    fp = paged_decode_ref(q, kp, vp, bt, ln)
+    out = flash_paged_decode_tpu(q, kq_, vq_, bt, ln, k_scale=ks_,
+                                 v_scale=vs_, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp), atol=0.12,
+                               rtol=0.05)
+
+
+@pytest.mark.parametrize("case", VERIFY_SWEEP)
+def test_paged_verify_quant_kernel_matches_quant_oracle(case):
+    b, kq, h, hkv, d, page, lengths = case
+    q, kp, vp, bt, ln = _paged_verify_case(
+        jax.random.PRNGKey(hash(case) % 2**31), b, kq, h, hkv, d, page,
+        lengths, jnp.float32)
+    kq_, vq_, ks_, vs_ = _quantize_pools(kp, vp)
+    ref = paged_verify_quant_ref(q, kq_, vq_, ks_, vs_, bt, ln)
+    out = flash_paged_verify_tpu(q, kq_, vq_, bt, ln, k_scale=ks_,
+                                 v_scale=vs_, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+@given(b=st.integers(1, 2), page=st.sampled_from([8, 16]),
+       hkv=st.sampled_from([1, 2]), rep=st.sampled_from([1, 2]),
+       pps=st.sampled_from([1, 2, 3]), seed=st.integers(0, 10**6))
+@settings(max_examples=8, deadline=None)
+def test_paged_decode_quant_property(b, page, hkv, rep, pps, seed):
+    """Property: int8 kernel == int8 oracle across random tables, page
+    sizes, lengths, AND pages-per-step (tuning must never change
+    results, only speed)."""
+    rng = np.random.default_rng(seed)
+    lengths = tuple(int(x) for x in rng.integers(0, 4 * page, size=b))
+    maxp = max(2, max(-(-ln // page) for ln in lengths) + 1)
+    n_pool = 1 + sum(-(-ln // page) for ln in lengths)
+    q, kp, vp, bt, ln = _paged_case(jax.random.PRNGKey(seed), b, hkv * rep,
+                                    hkv, 32, page, n_pool, maxp, lengths,
+                                    jnp.float32)
+    kq_, vq_, ks_, vs_ = _quantize_pools(kp, vp)
+    ref = paged_decode_quant_ref(q, kq_, vq_, ks_, vs_, bt, ln)
+    out = flash_paged_decode_tpu(q, kq_, vq_, bt, ln, k_scale=ks_,
+                                 v_scale=vs_, pages_per_step=pps,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+def test_tuning_registry_roundtrip():
+    clear_tunings()
+    try:
+        assert tuning_for(16, 64, 2) == DEFAULT_TUNING
+        record_tuning(16, 64, 2, KernelTuning(pages_per_step=4))
+        assert tuning_for(16, 64, 2).pages_per_step == 4
+        assert tuning_for(32, 64, 2) == DEFAULT_TUNING   # other key untouched
+    finally:
+        clear_tunings()
+
+
+def test_autotune_records_winner_and_kernel_uses_it():
+    """autotune sweeps the candidates, records the fastest for the shape
+    key, and the recorded choice feeds the kernel by default without
+    changing its output."""
+    clear_tunings()
+    try:
+        case = (2, 4, 2, 64, 16, (40, 25))
+        b, h, hkv, d, page, lengths = case
+        maxp = max(2, max(-(-ln // page) for ln in lengths) + 1)
+        n_pool = 1 + sum(-(-ln // page) for ln in lengths)
+        q, kp, vp, bt, ln = _paged_case(jax.random.PRNGKey(17), b, h, hkv,
+                                        d, page, n_pool, maxp, lengths,
+                                        jnp.float32)
+        t = autotune_paged_decode(q, kp, vp, bt, ln, candidates=(1, 2),
+                                  iters=1)
+        assert t.pages_per_step in (1, 2)
+        assert tuning_for(page, d, hkv) == t
+        ref = paged_decode_ref(q, kp, vp, bt, ln)
+        out = flash_paged_decode_tpu(q, kp, vp, bt, ln, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=1e-3)
+    finally:
+        clear_tunings()
 
 
 def test_jnp_flash_is_its_own_oracle():

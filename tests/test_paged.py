@@ -226,6 +226,87 @@ class TestConfiguredEos:
 
 
 # ---------------------------------------------------------------------------
+# int8 KV pages (DESIGN.md §6.1-paged, quantized pools)
+# ---------------------------------------------------------------------------
+
+class TestQuantizedPages:
+    """The int8 page pools must be invisible to the paging machinery:
+    quantized-paged generations match quantized-slot bit-for-bit (the
+    rounding is pinned by kernel tolerance oracles; THESE tests pin the
+    block-table indirection), the shared ``quantized_pages`` rule doubles
+    every capacity report, and preemption round-trips reproduce the same
+    quantized tokens."""
+
+    def test_quant_paged_matches_quant_slot_bitwise(self, setup):
+        from repro.serving import Engine
+        cfg, params = setup
+        qcfg = cfg.replace(kv_quant=True)
+        slot = Engine(qcfg, params, max_batch=2, bucket=16)
+        paged = Engine(qcfg, params, max_batch=3, bucket=16, paged=True,
+                       page_size=16, num_pages=8)
+        rs = slot.serve(_mk_reqs(7, n=4, max_new_hi=10))
+        rp = paged.serve(_mk_reqs(7, n=4, max_new_hi=10))
+        a, b = _results_by_rid(rs), _results_by_rid(rp)
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert paged.load_snapshot()["pages_used"] == 0
+
+    def test_quant_preemption_roundtrips_same_tokens(self, setup):
+        """LIFO preempt-and-requeue on an int8 pool: the greedy restart
+        re-quantizes the same prompt through the same pipeline, so the
+        reproduced tokens are bit-identical to the quantized-slot run."""
+        from repro.serving import Engine
+        cfg, params = setup
+        qcfg = cfg.replace(kv_quant=True)
+        slot = Engine(qcfg, params, max_batch=2, bucket=16)
+        # num_pages=2 doubles to 4 usable pages — tight enough to preempt
+        paged = Engine(qcfg, params, max_batch=4, bucket=16, paged=True,
+                       page_size=16, num_pages=2)
+        rs = slot.serve(_mk_reqs(7, n=5, max_new_hi=16))
+        rp = paged.serve(_mk_reqs(7, n=5, max_new_hi=16))
+        a, b = _results_by_rid(rs), _results_by_rid(rp)
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid])
+        assert paged.stats.preempted > 0          # the tight pool actually bit
+        assert paged.load_snapshot()["pages_used"] == 0
+
+    def test_quantized_pages_rule_shared_by_sim_and_engine(self, setup):
+        """THE capacity rule: the same nominal pool reports 2x pages on
+        both backends when quantized — sim and engine must agree or their
+        admission decisions drift."""
+        from repro.serving import Engine
+        from repro.sim.executor import quantized_pages
+        assert quantized_pages(8, False) == 8
+        assert quantized_pages(8, True) == 16
+        cfg, params = setup
+        eng = Engine(cfg.replace(kv_quant=True), params, max_batch=2,
+                     bucket=16, paged=True, page_size=16, num_pages=8)
+        sim = TokenBucketExecutor(BackendProfile(
+            prefill_tps=1e4, decode_tps=100.0, saturation=2,
+            max_concurrency=8, quality=0.5, kv_token_budget=16 * 8),
+            page_size=16, kv_quant=True)
+        assert sim.pages_total == 16 == eng.load_snapshot()["pages_total"]
+
+    def test_quant_page_accounting_conserved_under_churn(self, setup):
+        """Stepped churny serving on int8 pools: the one free list covers
+        page and scale pools alike, so pages_used + free_pages ==
+        pages_total at every step and the pool fully drains."""
+        from repro.serving import Engine
+        cfg, params = setup
+        eng = Engine(cfg.replace(kv_quant=True), params, max_batch=3,
+                     bucket=16, paged=True, page_size=8, num_pages=5)
+        for r in _mk_reqs(23, n=6, max_new_hi=12):
+            eng.submit(r)
+        while eng.has_work():
+            eng.step()
+            snap = eng.load_snapshot()
+            assert snap["pages_used"] + snap["free_pages"] \
+                == snap["pages_total"]
+            assert snap["kv_used"] == snap["pages_used"] * snap["page_size"]
+        assert eng.load_snapshot()["pages_used"] == 0
+
+
+# ---------------------------------------------------------------------------
 # executor-layer invariants
 # ---------------------------------------------------------------------------
 
@@ -322,6 +403,31 @@ class TestSimEngineAgreement:
         assert sim_dec == eng_dec == [True, True, False, True]
         assert ex.load().pages_used == sim.ex.load().pages_used == 7
         assert ex.load().pages_total == sim.ex.load().pages_total == pool
+
+    def test_go_offline_reclaims_doubled_quantized_pool(self):
+        """Churn on an int8 page pool: the doubled capacity is visible in
+        every load snapshot and every page (and with it its scale-pool
+        row — one free list covers both) is reclaimed after the node
+        drains offline."""
+        net = Network(mode="single", seed=0, init_balance=100.0)
+        prof = BackendProfile(prefill_tps=1e4, decode_tps=50.0, saturation=2,
+                              max_concurrency=8, quality=0.5,
+                              kv_token_budget=4096)
+        net.add_node(Node(
+            "n1", prof, policy=NodePolicy(),
+            executor_factory=lambda node: TokenBucketExecutor(
+                node.profile, page_size=64, kv_quant=True)))
+        net.add_node(Node("n2", make_profile(), policy=NodePolicy()))
+        reqs = [Request(rid=f"r{i}", origin="n1", arrival=0.1 * i,
+                        prompt_tokens=500, output_tokens=1000, slo_s=600.0)
+                for i in range(10)]
+        net.loop.schedule(5.0, lambda: net.nodes["n1"].go_offline())
+        m = net.run(reqs, until=500.0)
+        user = [c for c in m.completed if not c.is_duel_extra]
+        assert len(user) == 10                          # nothing stranded
+        ld = net.nodes["n1"].executor.load()
+        assert ld.pages_total == 2 * (4096 // 64)       # quantized_pages rule
+        assert ld.pages_used == 0 and ld.page_headroom == 1.0
 
     def test_go_offline_drains_paged_node_with_pages_reclaimed(self):
         """Churn: a paged node going offline hands queued requests back to
