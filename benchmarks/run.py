@@ -15,11 +15,14 @@ caught before a full pytest run::
 attainment per mode, avg/p95 latency, simulated requests/s, real-engine
 decode tokens/s and admitted concurrency for paged vs slot vs wave
 batching, the disagg-vs-colocated TTFT mix, the speculative-vs-paged
-decode-heavy comparison with its accepted-length distribution, and — new
-in schema 6 — the pinned kernel microbench: slot vs paged vs
-quantized-paged decode/spec-verify timings at fixed shapes, the autotuned
-``pages_per_step``, and the int8 admission 2x demo) so the performance
-trajectory is tracked PR over PR::
+decode-heavy comparison with its accepted-length distribution, the pinned
+kernel microbench — slot vs paged vs quantized-paged decode/spec-verify
+timings at fixed shapes, the autotuned ``pages_per_step``, and the int8
+admission 2x demo — and, new in schema 7, the ``gossip`` scale-out
+section: gossip-digest vs power-of-two probe routing at 100 and 1k sim
+nodes with SLO attainment and routing messages-per-request, whose >=3x
+message cut at matched SLO is asserted by ``check_bench_schema``) so the
+performance trajectory is tracked PR over PR::
 
     PYTHONPATH=src python benchmarks/run.py --bench
 
@@ -50,7 +53,7 @@ _REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_REPO))
 sys.path.insert(0, str(_REPO / "src"))
 
-BENCH_SCHEMA_VERSION = 6
+BENCH_SCHEMA_VERSION = 7
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -82,6 +85,15 @@ KERNEL_DECODE_MODES = ("slot", "paged", "paged_quant")
 KERNEL_VERIFY_MODES = ("paged", "paged_quant")
 KERNEL_TUNING_KEYS = ("page_size", "head_dim", "hkv", "pages_per_step")
 KERNEL_ADMISSION_KEYS = ("num_pages", "page_size", "paged", "paged_quant")
+# schema 7: gossip load-dissemination scale-out (DESIGN.md §6.2-gossip) —
+# gossip-digest vs power-of-two probe routing at 100 and 1k sim nodes;
+# the 10k point stays out of tier-1 behind `-m slow` (tests/test_scaling.py)
+GOSSIP_POINTS = ("100", "1000")
+GOSSIP_ROUTING_MODES = ("gossip", "probe")
+GOSSIP_MODE_KEYS = ("slo_attainment", "p95_latency_s",
+                    "routing_msgs_per_req", "gossip_msgs", "probes",
+                    "dispatches", "bounces", "delegation_rate", "n",
+                    "wall_s")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -149,6 +161,32 @@ def check_bench_schema(payload: dict) -> None:
     adm = kern["admission"]
     for k in KERNEL_ADMISSION_KEYS:
         assert k in adm, f"kernel.admission.{k} missing"
+    gos = payload["gossip"]
+    for k in ("workload", "slo_s", "points"):
+        assert k in gos, f"gossip.{k} missing"
+    for pt in GOSSIP_POINTS:
+        assert pt in gos["points"], f"gossip.points.{pt} missing"
+        entry = gos["points"][pt]
+        for k in ("msgs_ratio", "slo_gap"):
+            assert k in entry, f"gossip.points.{pt}.{k} missing"
+        for mode in GOSSIP_ROUTING_MODES:
+            assert mode in entry, f"gossip.points.{pt}.{mode} missing"
+            for k in GOSSIP_MODE_KEYS:
+                assert k in entry[mode], \
+                    f"gossip.points.{pt}.{mode}.{k} missing"
+    # schema 7 scale-out bar (ROADMAP item 1 / DESIGN.md §6.2-gossip): at
+    # 1k nodes the digest plane must cut routing messages-per-request at
+    # least 3x while holding SLO attainment within 2 points of the
+    # power-of-two probe baseline
+    big = gos["points"]["1000"]
+    assert (big["gossip"]["routing_msgs_per_req"]
+            < big["probe"]["routing_msgs_per_req"]), (
+        f"gossip routing msgs/req {big['gossip']['routing_msgs_per_req']} "
+        f"not below probe {big['probe']['routing_msgs_per_req']} at 1k nodes")
+    assert big["msgs_ratio"] >= 3.0, (
+        f"gossip message cut {big['msgs_ratio']}x < 3x at 1k nodes")
+    assert big["slo_gap"] <= 0.02, (
+        f"gossip-vs-probe SLO gap {big['slo_gap']} > 0.02 at 1k nodes")
     # schema 6 capacity bar: int8 KV pages halve bytes per token, so on the
     # same page budget the kv_quant engine must keep at least twice the
     # concurrent residents of the fp paged engine (DESIGN.md §6.1-paged)
@@ -345,6 +383,24 @@ def _smoke() -> int:
         m = net.run(reqs, until=300.0)
         assert len(m.completed) >= 20
 
+    def gossip_probe_parity():
+        # fast scale-out parity (DESIGN.md §6.2-gossip): on a small pool the
+        # digest plane must complete the same workload as probe routing
+        # without spending more routing messages per request
+        from benchmarks.scaling import run_scale_point
+        point = dict(hot=2, hot_ia=1.0, bg_ia=16.0, t_end=15.0,
+                     gossip_interval=1.0, view_cap=None)
+        res = {r: run_scale_point(20, r, point=point)
+               for r in ("gossip", "probe")}
+        g, p = res["gossip"], res["probe"]
+        assert g["n"] == g["n_submitted"], \
+            f"gossip dropped requests: {g['n']}/{g['n_submitted']}"
+        assert p["n"] == p["n_submitted"], \
+            f"probe dropped requests: {p['n']}/{p['n_submitted']}"
+        assert g["routing_msgs_per_req"] <= p["routing_msgs_per_req"], (
+            f"gossip routing cost {g['routing_msgs_per_req']} msgs/req "
+            f"above probe {p['routing_msgs_per_req']}")
+
     def analysis_clean():
         assert _lint(verbose=False) == 0, \
             "repro.analysis found new violations (run --lint for details)"
@@ -362,6 +418,8 @@ def _smoke() -> int:
           pallas_kernel_matches_oracle)
     check("mesh context + sharding constraint", mesh_context_sharding)
     check("decentralized protocol sim", protocol_sim)
+    check("gossip-vs-probe routing parity (20-node pool)",
+          gossip_probe_parity)
     dt = time.perf_counter() - t_start
     if failures:
         print(f"smoke FAILED ({len(failures)}): {failures} in {dt:.1f}s",
@@ -720,6 +778,10 @@ def _bench(out_path: str) -> int:
         adm_out[label] = eng.stats.peak_resident
     payload["kernel"]["admission"] = {
         "num_pages": adm_pages, "page_size": page_size, **adm_out}
+
+    # --- gossip scale-out: digest vs probe routing (DESIGN.md §6.2-gossip) --
+    from benchmarks.scaling import gossip_scaling_section
+    payload["gossip"] = gossip_scaling_section()
 
     # --- static-analysis snapshot (DESIGN.md §7) ----------------------------
     from repro.analysis import run_analysis

@@ -1,0 +1,139 @@
+"""Scale-out bench: gossip-digest vs probe-based routing at 100 / 1k / 10k
+sim nodes (DESIGN.md §6.2-gossip; ROADMAP item 1).
+
+A small hot minority of nodes is driven far past its capacity and must
+offload into a large pool that carries moderate background traffic of its
+own.  Both routing flavors share the identical gossip membership plane —
+the only difference is how an origin picks the delegate:
+
+* ``probe``  — PoS-sample candidates and probe each one's live load until
+  one accepts (the pre-gossip behavior; 2 messages per probe).  The bench
+  runs it with power-of-two choice — the strongest probe configuration
+  (each round probes two stake-weighted candidates and keeps the
+  phase-better one) — so the SLO bar gossip must match is the best the
+  probe plane achieves, at that plane's true message cost.
+* ``gossip`` — rank the local stale-digest table, dispatch to a
+  stake-weighted pick among the near-tied leaders, probe only contended
+  near-ties.
+
+Reported per point and mode: SLO attainment, p95 latency, and routing
+messages-per-request (probes x2 + dispatches + bounces over completed user
+requests) plus the gossip-plane message count for context.  The 100- and
+1k-node points feed the schema-7 ``gossip`` section of
+``BENCH_scheduling.json``; the 10k point runs behind ``-m slow``
+(``tests/test_scaling.py``) with partial views (``view_cap``), where full
+O(n) membership per node stops being realistic.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.core import DuelParams, Network, Node, NodePolicy
+from repro.sim import BackendProfile, WorkloadSpec
+from repro.sim.servicemodel import DIGEST_INTERVAL_S
+from repro.sim.workload import ArrivalPhase, make_requests
+
+# Small commodity nodes whose KV budget binds before the compute knee, so
+# occupancy is visible in the digest's headroom fields (kv budget of ~5
+# typical requests at the workload's 128-prompt/192-output means).
+_PROFILE = BackendProfile(prefill_tps=1e4, decode_tps=30.0, saturation=4,
+                          max_concurrency=16, quality=0.5,
+                          kv_token_budget=2048)
+
+# (hot nodes, hot 1/lambda, background 1/lambda, t_end, gossip interval,
+#  view cap) per pool size
+SCALE_POINTS: Dict[int, Dict] = {
+    100: dict(hot=8, hot_ia=1.0, bg_ia=16.0, t_end=40.0,
+              gossip_interval=DIGEST_INTERVAL_S, view_cap=None),
+    1000: dict(hot=32, hot_ia=1.0, bg_ia=16.0, t_end=40.0,
+               gossip_interval=2.0, view_cap=128),
+    10000: dict(hot=64, hot_ia=1.0, bg_ia=64.0, t_end=20.0,
+                gossip_interval=4.0, view_cap=64),
+}
+SLO_S = 60.0
+
+
+def build_scale_network(n_nodes: int, routing: str, seed: int = 0,
+                        point: Optional[Dict] = None):
+    """A ``Network`` of ``n_nodes`` identical commodity nodes plus the
+    hot/background workload specs for it."""
+    p = point or SCALE_POINTS[n_nodes]
+    net = Network(mode="decentralized", routing=routing, seed=seed,
+                  ledger_mode="shared", duel=DuelParams(p_d=0.0, k_judges=0),
+                  gossip_interval=p["gossip_interval"],
+                  suspect_after=1e9,            # no churn at these points
+                  restake_interval=None, init_balance=100.0,
+                  power_of_two=(routing == "probe"))
+    specs: List[WorkloadSpec] = []
+    for i in range(n_nodes):
+        nid = f"n{i:05d}"
+        net.add_node(Node(nid, _PROFILE, policy=NodePolicy(),
+                          view_cap=p["view_cap"]))
+        ia = p["hot_ia"] if i < p["hot"] else p["bg_ia"]
+        specs.append(WorkloadSpec(
+            nid, [ArrivalPhase(0.0, p["t_end"], ia)],
+            prompt_mean=128, output_mean=192, max_tokens=512, slo_s=SLO_S))
+    return net, specs
+
+
+def run_scale_point(n_nodes: int, routing: str, seed: int = 0,
+                    point: Optional[Dict] = None) -> Dict:
+    p = point or SCALE_POINTS[n_nodes]
+    net, specs = build_scale_network(n_nodes, routing, seed=seed, point=p)
+    reqs = make_requests(specs, seed=42 + seed)
+    t0 = time.perf_counter()
+    m = net.run(reqs, until=p["t_end"], trace_interval=None)
+    wall = time.perf_counter() - t0
+    n_user = len([c for c in m.completed if not c.is_duel_extra])
+    return {
+        "slo_attainment": round(m.slo_attainment(), 4),
+        "p95_latency_s": round(m.latency_percentile(95), 2),
+        "routing_msgs_per_req": round(
+            net.routing_messages / max(1, n_user), 3),
+        "gossip_msgs": net.msg_counts["gossip"],
+        "probes": net.msg_counts["probe"],
+        "dispatches": net.msg_counts["dispatch"],
+        "bounces": net.msg_counts["bounce"],
+        "delegation_rate": round(m.delegation_rate(), 3),
+        "n": n_user,
+        "n_submitted": len(reqs),
+        "wall_s": round(wall, 2),
+    }
+
+
+def gossip_scaling_section(seed: int = 0) -> Dict:
+    """The schema-7 ``gossip`` payload section: 100- and 1k-node points,
+    gossip vs probe routing (the 10k point stays behind ``-m slow``)."""
+    points: Dict[str, Dict] = {}
+    for n_nodes in (100, 1000):
+        modes = {r: run_scale_point(n_nodes, r, seed=seed)
+                 for r in ("gossip", "probe")}
+        g, pb = modes["gossip"], modes["probe"]
+        points[str(n_nodes)] = {
+            **modes,
+            "msgs_ratio": round(pb["routing_msgs_per_req"]
+                                / max(1e-9, g["routing_msgs_per_req"]), 2),
+            "slo_gap": round(abs(g["slo_attainment"]
+                                 - pb["slo_attainment"]), 4),
+        }
+    return {"workload": "hot-minority offload into moderate background pool",
+            "slo_s": SLO_S, "points": points}
+
+
+def main(rows: List[str]) -> None:
+    for n_nodes in (100, 1000):
+        for routing in ("gossip", "probe"):
+            r = run_scale_point(n_nodes, routing)
+            rows.append(
+                f"scaling_{n_nodes}_{routing},{r['wall_s'] * 1e6:.0f},"
+                f"slo={r['slo_attainment']:.3f};p95={r['p95_latency_s']:.1f};"
+                f"msgs_per_req={r['routing_msgs_per_req']:.2f};"
+                f"gossip_msgs={r['gossip_msgs']};n={r['n']}")
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    main(rows)
+    print("\n".join(rows))

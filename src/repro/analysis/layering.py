@@ -24,6 +24,12 @@ dragging the serving stack in.  Four sub-rules:
   (``_free_pages``, ``_block_tables``, ...) is private to
   ``repro.serving.engine``; everything else reads
   ``Engine.load_snapshot()`` / ``Executor.load()``.
+* ``layering/digest-construction`` — gossip ``LoadDigest`` payloads
+  (DESIGN.md §6.2-gossip) are constructed only in the executor layer
+  (``repro.sim.executor``); everything else — gossip, routing, benches,
+  tests — obtains them via ``Executor.digest()`` / ``make_load_digest``,
+  so a digest always reflects a real ``ExecutorLoad`` projection rather
+  than hand-rolled fields drifting from the load snapshot.
 """
 
 from __future__ import annotations
@@ -65,6 +71,11 @@ SERVICE_TIME_ALLOWED = ("src/repro/sim/executor.py",
 PRIVATE_STATE = frozenset({"_free_pages", "_row_pages", "_block_tables",
                            "_num_pages", "_pools", "_slot_seq"})
 PRIVATE_STATE_HOME = "src/repro/serving/engine.py"
+
+# gossip LoadDigest construction and its one sanctioned home (DESIGN.md
+# §6.2-gossip); everyone else calls Executor.digest() / make_load_digest
+DIGEST_CTOR = "LoadDigest"
+DIGEST_HOME = "src/repro/sim/executor.py"
 
 
 def _subpackage(module: str) -> str:
@@ -180,7 +191,8 @@ class LayeringChecker(Checker):
                 continue
             check_service = rel not in SERVICE_TIME_ALLOWED
             check_private = rel != PRIVATE_STATE_HOME
-            if not (check_service or check_private):
+            check_digest = rel != DIGEST_HOME
+            if not (check_service or check_private or check_digest):
                 continue
             for node in ast.walk(tree):
                 if check_service and isinstance(node, ast.Call) \
@@ -198,3 +210,13 @@ class LayeringChecker(Checker):
                         f"page-pool private '{node.attr}' accessed outside "
                         f"the paged engine (read Engine.load_snapshot() / "
                         f"Executor.load() instead)")
+                elif check_digest and isinstance(node, ast.Call) \
+                        and ((isinstance(node.func, ast.Name)
+                              and node.func.id == DIGEST_CTOR)
+                             or (isinstance(node.func, ast.Attribute)
+                                 and node.func.attr == DIGEST_CTOR)):
+                    yield Finding(
+                        "layering/digest-construction", rel, node.lineno,
+                        "LoadDigest constructed outside the executor layer "
+                        "(build digests via Executor.digest() / "
+                        "make_load_digest; DESIGN.md §6.2-gossip)")

@@ -1,14 +1,28 @@
-"""Gossip-driven peer synchronization (paper §A.2, Figure 10).
+"""Gossip-driven peer synchronization (paper §A.2, Figure 10) plus the
+load-dissemination plane (DESIGN.md §6.2-gossip).
 
 Every node keeps a local view: node_id -> PeerRecord(version, online, addr,
-last_seen).  In each gossip round a node exchanges its full view with a few
-random peers; each side keeps, per entry, the record with the higher
+last_seen, digest).  In each gossip round a node exchanges its full view with
+a few random peers; each side keeps, per entry, the record with the higher
 *version* (a per-origin monotonic counter bumped by the origin on any status /
-address change, and by heartbeats).  Offline detection: if an entry's
-heartbeat has not advanced within ``suspect_after`` sim-seconds, the node
-locally marks the peer offline (the mark itself gossips as a higher-version
-record only once the origin really stops heartbeating — a revived origin's
-own heartbeat always wins because it carries a newer version).
+address change, and by heartbeats).
+
+Two payloads ride the same versioned records:
+
+* **Load digests** — each heartbeat carries a compact ``LoadDigest`` of the
+  origin's ``ExecutorLoad`` (headrooms, phase backlogs, speculative speedup,
+  cumulative handoff bytes, snapshot timestamp).  Because the digest is
+  versioned by the same per-origin counter, anti-entropy merging propagates
+  the freshest digest for free; routers rank candidates from this stale
+  table with staleness discounting instead of probing every candidate.
+* **Dead reports** — when a peer's heartbeat goes stale past
+  ``suspect_after``, the suspecting node marks it offline *at the suspected
+  version*.  The merge rule treats offline-at-equal-version as newer, so
+  the suspicion spreads epidemically until the whole view agrees
+  (consensus), while a revived origin's own heartbeat — which always
+  carries a strictly higher version — overrides the report everywhere it
+  has spread.  A node that receives a dead report about *itself* refutes it
+  by jumping its own version past the report's.
 """
 
 from __future__ import annotations
@@ -18,6 +32,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.sim.executor import LoadDigest
+
 
 @dataclass(frozen=True)
 class PeerRecord:
@@ -26,22 +42,35 @@ class PeerRecord:
     online: bool
     addr: str
     heartbeat_time: float    # origin-local time of the last self-update
+    digest: Optional[LoadDigest] = None   # load digest published at heartbeat
 
 
 class PeerView:
-    """One node's local membership view."""
+    """One node's local membership view.
 
-    def __init__(self, self_id: str, addr: str, now: float = 0.0) -> None:
+    ``view_cap`` bounds the number of *remote* records retained (partial
+    views, HyParView-style): past the cap, merging evicts the records with
+    the stalest heartbeats.  ``None`` (the default) keeps full membership —
+    the cap only matters at the 10k-node scale where O(n) views per node
+    stop being realistic.
+    """
+
+    def __init__(self, self_id: str, addr: str, now: float = 0.0,
+                 view_cap: Optional[int] = None) -> None:
         self.self_id = self_id
+        self.view_cap = view_cap
         self.records: Dict[str, PeerRecord] = {
             self_id: PeerRecord(self_id, 1, True, addr, now)
         }
 
     # -- local mutations (the origin bumps its own version) ------------------
-    def heartbeat(self, now: float) -> None:
+    def heartbeat(self, now: float, digest: Optional[LoadDigest] = None) -> None:
+        """Bump own version; piggyback a fresh load digest when given (a
+        ``None`` digest keeps the previously published one)."""
         r = self.records[self.self_id]
-        self.records[self.self_id] = replace(r, version=r.version + 1,
-                                             heartbeat_time=now, online=True)
+        self.records[self.self_id] = replace(
+            r, version=r.version + 1, heartbeat_time=now, online=True,
+            digest=digest if digest is not None else r.digest)
 
     def set_offline(self, now: float) -> None:
         r = self.records[self.self_id]
@@ -55,24 +84,54 @@ class PeerView:
 
     # -- anti-entropy merge ---------------------------------------------------
     def merge(self, remote: Iterable[PeerRecord]) -> int:
-        """Keep the higher-version record per node. Returns #updates taken."""
+        """Per node, keep the higher-version record; at *equal* version a
+        dead report (offline) beats a live record, so suspicion propagates
+        without stealing the origin's version counter.  Returns #updates
+        taken."""
         taken = 0
         for rec in remote:
             mine = self.records.get(rec.node_id)
-            if mine is None or rec.version > mine.version:
+            if rec.node_id == self.self_id:
+                assert mine is not None
+                if mine.online and not rec.online and rec.version >= mine.version:
+                    # dead report about myself: refute it by jumping past
+                    # the report's version so the refutation wins merges.
+                    self.records[self.self_id] = replace(
+                        mine, version=rec.version + 1, online=True)
+                    taken += 1
+                continue
+            if (mine is None or rec.version > mine.version
+                    or (rec.version == mine.version
+                        and mine.online and not rec.online)):
                 self.records[rec.node_id] = rec
                 taken += 1
+        if taken:
+            self._evict_over_cap()
         return taken
 
+    def _evict_over_cap(self) -> None:
+        cap = self.view_cap
+        if cap is None:
+            return
+        extra = (len(self.records) - 1) - cap
+        if extra <= 0:
+            return
+        stalest = sorted(
+            (r.heartbeat_time, nid) for nid, r in self.records.items()
+            if nid != self.self_id)[:extra]
+        for _, nid in stalest:
+            del self.records[nid]
+
     def suspect_failures(self, now: float, suspect_after: float) -> List[str]:
-        """Locally mark peers offline whose heartbeat is stale."""
+        """Mark peers offline whose heartbeat is stale.  The mark keeps the
+        suspected version — the dead-at-equal-version merge rule then
+        gossips it to consensus, while the origin's next heartbeat (a
+        strictly higher version) revives it everywhere."""
         newly = []
         for nid, rec in list(self.records.items()):
             if nid == self.self_id or not rec.online:
                 continue
             if now - rec.heartbeat_time > suspect_after:
-                # local suspicion does NOT bump version: a live origin's next
-                # heartbeat (higher version) overrides it on merge.
                 self.records[nid] = replace(rec, online=False)
                 newly.append(nid)
         return newly
@@ -80,6 +139,11 @@ class PeerView:
     def online_peers(self) -> List[str]:
         return sorted(n for n, r in self.records.items()
                       if r.online and n != self.self_id)
+
+    def digest_of(self, nid: str) -> Optional[LoadDigest]:
+        """Last gossip-learned load digest for ``nid`` (None = never seen)."""
+        rec = self.records.get(nid)
+        return rec.digest if rec is not None else None
 
     def knows(self, nid: str) -> bool:
         return nid in self.records
@@ -96,11 +160,11 @@ def gossip_round(a: PeerView, b: PeerView) -> Tuple[int, int]:
 
 def rounds_to_convergence(views: Sequence[PeerView], rng: np.random.Generator,
                           fanout: int = 2, max_rounds: int = 64) -> int:
-    """Drive random pairwise gossip until all views agree; returns #rounds."""
-    def converged() -> bool:
-        base = {n: (r.version, r.online) for n, r in views[0].records.items()}
-        return all({n: (r.version, r.online) for n, r in v.records.items()} == base
-                   for v in views[1:])
+    """Drive random pairwise gossip until all views agree — including the
+    digest payloads, so convergence means every node also holds the same
+    load picture, not just the same membership.  Returns #rounds."""
+    def state(v: PeerView) -> Dict[str, Tuple[int, bool, Optional[LoadDigest]]]:
+        return {n: (r.version, r.online, r.digest) for n, r in v.records.items()}
 
     for rnd in range(1, max_rounds + 1):
         for v in views:
@@ -108,6 +172,7 @@ def rounds_to_convergence(views: Sequence[PeerView], rng: np.random.Generator,
             for w in rng.choice(len(peers), size=min(fanout, len(peers)),
                                 replace=False):
                 gossip_round(v, peers[int(w)])
-        if converged():
+        base = state(views[0])
+        if all(state(v) == base for v in views[1:]):
             return rnd
     return max_rounds

@@ -10,6 +10,19 @@ throughout the paper's evaluation (§6.1):
 * ``decentralized`` — the WWW.Serve protocol: policy-driven offloading,
                       PoS executor selection, probing, credit transactions,
                       duels, gossip-maintained membership.
+
+Decentralized offload routing itself has two flavors (DESIGN.md
+§6.2-gossip), selected by ``routing=``:
+
+* ``gossip`` (default) — rank candidates from the local stale-digest table
+  that gossip maintains, discounting each digest by its age; dispatch to
+  the top-ranked candidate outright and spend live probes only when the
+  top two are too close to call.  Per-request message cost is ~1
+  regardless of network size.
+* ``probe``           — the pre-gossip behavior: PoS-sample candidates and
+  probe each one's live load inline until one accepts (optionally
+  power-of-two).  Message cost grows with the probe budget; kept as the
+  scaling-bench baseline.
 """
 
 from __future__ import annotations
@@ -26,12 +39,26 @@ from repro.core.ledger import (CreditChain, CreditOp, LedgerError, SharedLedger)
 from repro.core.node import Node, QueuedRequest
 from repro.core.pos import pos_sample, pos_sample_one
 from repro.sim.events import EventLoop
+from repro.sim.executor import digest_staleness_weight
 from repro.sim.metrics import CompletedRequest, MetricsCollector
-from repro.sim.servicemodel import (KV_BYTES_PER_TOKEN, TRANSFER_BYTES_PER_S,
+from repro.sim.servicemodel import (DIGEST_PRESSURE_PRIOR, DIGEST_TIE_EPS,
+                                    KV_BYTES_PER_TOKEN, TRANSFER_BYTES_PER_S,
                                     TRANSFER_EMA_BETA)
 from repro.sim.workload import Request
 
 TREASURY = "__treasury__"
+
+
+def _mix_pressure(prefill_headroom: float, decode_headroom: float,
+                  expected_tokens_per_step: float, req: Request) -> float:
+    """Phase-mix pressure formula shared by live probes and gossip digests:
+    each phase's occupancy weighted by the request's token mix, decode
+    occupancy discounted by the speculative turnover factor."""
+    total = max(1, req.prompt_tokens + req.output_tokens)
+    wp = req.prompt_tokens / total
+    return (wp * (1.0 - prefill_headroom)
+            + (1.0 - wp) * (1.0 - decode_headroom)
+            / expected_tokens_per_step)
 
 
 @dataclass
@@ -56,10 +83,13 @@ class Network:
                  restake_interval: Optional[float] = 30.0,
                  restake_fraction: float = 0.5,
                  max_probes: int = 3,
-                 power_of_two: bool = False) -> None:
+                 power_of_two: bool = False,
+                 routing: str = "gossip") -> None:
         assert mode in ("single", "centralized", "decentralized")
         assert ledger_mode in ("shared", "chain")
+        assert routing in ("gossip", "probe")
         self.mode = mode
+        self.routing = routing
         self.ledger_mode = ledger_mode
         self.loop = EventLoop()
         self.rng = np.random.default_rng(seed)
@@ -88,6 +118,12 @@ class Network:
         # constant so routing is unchanged until observations arrive
         self._transfer_rate_ema: Dict[str, float] = {}
         self._transfer_obs: Dict[str, Tuple[float, int]] = {}
+        # message accounting (DESIGN.md §6.2-gossip): "probe" counts live
+        # load round-trips, "dispatch" delegated hand-offs, "bounce"
+        # delivery-time declines, "gossip" per-round view exchanges.  The
+        # scaling bench derives routing messages-per-request from these.
+        self.msg_counts: Dict[str, int] = {
+            "probe": 0, "dispatch": 0, "bounce": 0, "gossip": 0}
 
         # seed the treasury that funds duel bonuses / judge fees
         self._apply_ops([CreditOp("mint", "", TREASURY, 1e9)], proposer=None)
@@ -187,16 +223,27 @@ class Network:
         else:
             self.nodes[req.origin].submit(req)
 
-    def resubmit_elsewhere(self, req: Request) -> None:
+    def resubmit_elsewhere(self, req: Request,
+                           enqueued_at: Optional[float] = None) -> None:
+        """Re-target ``req`` at a random online node (churn rerouting).
+
+        ``enqueued_at`` is the request's *original* enqueue time, preserved
+        across the re-enqueue so ``queue_wait`` keeps counting the time
+        already spent queued at the node that dropped it.
+        """
+        enq = self.loop.now if enqueued_at is None else enqueued_at
         online = [n for n in self.nodes.values() if n.online]
         if not online:
-            self.loop.schedule(5.0, lambda: self.resubmit_elsewhere(req))
+            if self._shutdown:
+                return   # draining with nobody online: drop, don't spin
+            self.loop.schedule(5.0,
+                               lambda: self.resubmit_elsewhere(req, enq))
             return
         pick = online[int(self.rng.integers(len(online)))]
         # executing another node's traffic is delegation even when it got
         # here via churn rerouting: keep the flag (and the credit transfer
         # at completion) truthful
-        pick.enqueue(QueuedRequest(req, self.loop.now,
+        pick.enqueue(QueuedRequest(req, enq,
                                    delegated=pick.id != req.origin,
                                    origin_node=req.origin))
 
@@ -224,30 +271,36 @@ class Network:
         # disagg backends queue this request's prefilled KV behind the
         # handoffs already on the wire; charge them at the node's LEARNED
         # transfer rate rather than the static link constant
-        rate = self._observe_transfer_rate(node, ld)
+        rate = self._observe_transfer_rate(node.id, self.loop.now,
+                                           ld.handoff_bytes)
         if ld.transfer_inflight > 0:
             est += (ld.transfer_inflight * req.prompt_tokens
                     * KV_BYTES_PER_TOKEN / rate)
         return est
 
-    def _observe_transfer_rate(self, node: Node, ld) -> float:
+    def _observe_transfer_rate(self, nid: str, t: float,
+                               handoff_bytes: int) -> float:
         """Per-node EMA of the observed KV handoff rate (DESIGN.md
-        §6.1-disagg): every load snapshot exposes cumulative
-        ``handoff_bytes``, so the bytes moved between two sightings over
-        the elapsed sim time is a direct throughput sample of that node's
-        actual link — which the static ``TRANSFER_BYTES_PER_S`` model
-        cannot see.  Zero-byte windows are skipped (an idle link is not a
-        slow link)."""
-        now = self.loop.now
-        rate = self._transfer_rate_ema.get(node.id, TRANSFER_BYTES_PER_S)
-        last = self._transfer_obs.get(node.id)
-        self._transfer_obs[node.id] = (now, ld.handoff_bytes)
+        §6.1-disagg): every sighting of a node's load — an omniscient
+        ``_est_wait`` read, a live probe, or a gossip digest stamped with
+        its origin time ``t`` — exposes cumulative ``handoff_bytes``, so
+        the bytes moved between two sightings over the elapsed sim time is
+        a direct throughput sample of that node's actual link, which the
+        static ``TRANSFER_BYTES_PER_S`` model cannot see.  Zero-byte
+        windows are skipped (an idle link is not a slow link), and samples
+        older than the last recorded sighting are ignored (a stale digest
+        arriving after a fresh probe must not rewind the baseline)."""
+        rate = self._transfer_rate_ema.get(nid, TRANSFER_BYTES_PER_S)
+        last = self._transfer_obs.get(nid)
+        if last is not None and t <= last[0]:
+            return rate
+        self._transfer_obs[nid] = (t, handoff_bytes)
         if last is not None:
-            dt = now - last[0]
-            db = ld.handoff_bytes - last[1]
-            if dt > 0.0 and db > 0:
+            dt = t - last[0]
+            db = handoff_bytes - last[1]
+            if db > 0:
                 rate += TRANSFER_EMA_BETA * (db / dt - rate)
-                self._transfer_rate_ema[node.id] = rate
+                self._transfer_rate_ema[nid] = rate
         return rate
 
     def _phase_pressure(self, node: Node, req: Request) -> float:
@@ -267,26 +320,57 @@ class Network:
         and the overhead is second-order next to the E-fold turnover.
         """
         ld = node.executor.load()
-        total = max(1, req.prompt_tokens + req.output_tokens)
-        wp = req.prompt_tokens / total
-        return (wp * (1.0 - ld.prefill_headroom)
-                + (1.0 - wp) * (1.0 - ld.decode_headroom)
-                / ld.expected_tokens_per_step)
+        return _mix_pressure(ld.prefill_headroom, ld.decode_headroom,
+                             ld.expected_tokens_per_step, req)
 
-    def _dispatch_centralized(self, req: Request) -> None:
+    def _probe_pressure(self, node: Node, req: Request) -> float:
+        """A *live* load probe: one request/response round-trip on the wire
+        (counted in ``msg_counts``), whose response also carries a fresh
+        ``handoff_bytes`` sample for the transfer-rate EMA."""
+        self.msg_counts["probe"] += 1
+        ld = node.executor.load()
+        self._observe_transfer_rate(node.id, self.loop.now, ld.handoff_bytes)
+        return _mix_pressure(ld.prefill_headroom, ld.decode_headroom,
+                             ld.expected_tokens_per_step, req)
+
+    def _digest_pressure(self, origin: Node, nid: str, req: Request) -> float:
+        """Pressure inferred for ``nid`` from ``origin``'s gossip-learned
+        digest table, with no message sent (DESIGN.md §6.2-gossip).  The
+        digest's raw pressure is discounted toward the neutral prior by
+        its age; a peer with no digest yet scores exactly the prior.  The
+        digest's ``handoff_bytes`` doubles as a transfer-rate observation
+        stamped at its origin time."""
+        d = origin.view.digest_of(nid)
+        if d is None:
+            return DIGEST_PRESSURE_PRIOR
+        self._observe_transfer_rate(nid, d.t, d.handoff_bytes)
+        raw = _mix_pressure(d.prefill_headroom, d.decode_headroom,
+                            d.expected_tokens_per_step, req)
+        w = digest_staleness_weight(self.loop.now - d.t)
+        return w * raw + (1.0 - w) * DIGEST_PRESSURE_PRIOR
+
+    def _dispatch_centralized(self, req: Request,
+                              enqueued_at: Optional[float] = None) -> None:
+        enq = self.loop.now if enqueued_at is None else enqueued_at
         online = [n for n in self.nodes.values() if n.online]
         if not online:
-            self.loop.schedule(5.0, lambda: self._dispatch_centralized(req))
+            if self._shutdown:
+                return   # draining with nobody online: drop, don't spin
+            self.loop.schedule(
+                5.0, lambda: self._dispatch_centralized(req, enq))
             return
         best = min(online, key=lambda n: self._est_wait(n, req))
         delegated = best.id != req.origin
         lat = self.msg_latency if delegated else 0.0
         self.loop.schedule(lat, lambda: best.enqueue(
-            QueuedRequest(req, self.loop.now, delegated=delegated,
+            QueuedRequest(req, enq, delegated=delegated,
                           origin_node=req.origin)))
 
-    # -- decentralized offload: PoS sampling + probing (paper Fig 9 step 3.2) --
-    def try_offload(self, origin: Node, req: Request) -> bool:
+    # -- decentralized offload (paper Fig 9 step 3.2): digest-table ranking
+    # (routing="gossip", DESIGN.md §6.2-gossip) or PoS sampling + live
+    # probing (routing="probe") --
+    def try_offload(self, origin: Node, req: Request,
+                    enqueued_at: Optional[float] = None) -> bool:
         stakes = self.ledger_stakes()
         eligible = [p for p in origin.view.online_peers()
                     if p in self.nodes and self.nodes[p].online]
@@ -294,6 +378,93 @@ class Network:
             return False
         if self.rng.random() < self.duel_params.p_d and len(eligible) >= 2:
             return self._start_duel(origin, req, stakes, eligible)
+        if self.routing == "gossip":
+            return self._offload_gossip(origin, req, eligible, stakes,
+                                        enqueued_at)
+        return self._offload_probe(origin, req, eligible, stakes, enqueued_at)
+
+    def _offload_gossip(self, origin: Node, req: Request,
+                        eligible: Sequence[str], stakes: Dict[str, float],
+                        enqueued_at: Optional[float]) -> bool:
+        """Digest-table routing (DESIGN.md §6.2-gossip): rank every known
+        peer by staleness-discounted pressure at zero message cost.
+
+        * Every candidate at/above saturation pressure → give up without a
+          single message (the probe path would burn its whole probe budget
+          discovering the same thing).
+        * Best pressure in the *contended or unknown* region (>= the
+          neutral prior) with a near-tie → the stale table can't be
+          trusted to pick: probe the top two live and take the better
+          accepting one (this is also the cold-start path, since peers
+          with no digest yet score exactly the prior).
+        * Otherwise — gossip recently showed clear headroom — dispatch
+          outright with zero probes, picking stake-weighted among the
+          near-tied leaders (PoS incentive + herd avoidance); the receiver
+          applies its acceptance policy at delivery and bounces declines.
+        """
+        scored = sorted((self._digest_pressure(origin, nid, req), nid)
+                        for nid in eligible)
+        best_pr = scored[0][0]
+        if best_pr >= 1.0:
+            return False
+        enq = self.loop.now if enqueued_at is None else enqueued_at
+        near = [nid for pr, nid in scored if pr - best_pr < DIGEST_TIE_EPS]
+        if best_pr >= DIGEST_PRESSURE_PRIOR and len(near) >= 2:
+            # contended and too close to call from stale digests: probe the
+            # top two live
+            best = None
+            for _pr, nid in scored[:2]:
+                cand = self.nodes[nid]
+                live = self._probe_pressure(cand, req)
+                if (cand.online and live < 1.0
+                        and cand.policy.accepts_delegated(
+                            cand.n_active, cand.profile.saturation,
+                            len(cand.delegated_queue), self.rng)
+                        and (best is None or live < best[0])):
+                    best = (live, cand)
+            if best is None:
+                return False
+            pick = best[1]
+            self.msg_counts["dispatch"] += 1
+            delay = 2 * self.msg_latency + self.msg_latency
+            self.loop.schedule(delay, lambda: pick.enqueue(
+                QueuedRequest(req, enq, delegated=True,
+                              origin_node=origin.id)))
+            return True
+        pick_id = pos_sample_one(stakes, near, self.rng)
+        if pick_id is None:
+            return False
+        pick = self.nodes[pick_id]
+        self.msg_counts["dispatch"] += 1
+        self.loop.schedule(self.msg_latency, lambda: self._deliver_offload(
+            pick, QueuedRequest(req, enq, delegated=True,
+                                origin_node=origin.id)))
+        return True
+
+    def _deliver_offload(self, cand: Node, qr: QueuedRequest) -> None:
+        """Delivery of an optimistically-dispatched offload (gossip
+        routing): the probe path consulted the acceptance policy before
+        dispatching, so here the *receiving* node applies it at delivery
+        time instead, bouncing declines back to the origin (offline
+        candidates bounce through the usual churn path inside
+        ``enqueue``).  The bounce preserves the original enqueue time."""
+        if cand.online and not cand.policy.accepts_delegated(
+                cand.n_active, cand.profile.saturation,
+                len(cand.delegated_queue), self.rng):
+            self.msg_counts["bounce"] += 1
+            origin = self.nodes.get(qr.origin_node)
+            if origin is not None and origin.online:
+                origin.enqueue(QueuedRequest(qr.req, qr.enqueue_time,
+                                             delegated=False,
+                                             origin_node=qr.origin_node))
+            else:
+                self.resubmit_elsewhere(qr.req, enqueued_at=qr.enqueue_time)
+            return
+        cand.enqueue(qr)
+
+    def _offload_probe(self, origin: Node, req: Request,
+                       eligible: Sequence[str], stakes: Dict[str, float],
+                       enqueued_at: Optional[float]) -> bool:
         probes = 0
         tried: List[str] = []
         while probes < self.max_probes:
@@ -308,7 +479,7 @@ class Network:
                                   exclude=tried)
                 if not pair:
                     break
-                pressure = {n: self._phase_pressure(self.nodes[n], req)
+                pressure = {n: self._probe_pressure(self.nodes[n], req)
                             for n in pair}
                 pair.sort(key=lambda n: (pressure[n],
                                          self.nodes[n].utilization()))
@@ -322,7 +493,7 @@ class Network:
                     break
                 probes += 1
                 tried.append(cand_id)
-                pressure = {cand_id: self._phase_pressure(
+                pressure = {cand_id: self._probe_pressure(
                     self.nodes[cand_id], req)}
             cand = self.nodes[cand_id]
             # a probe response exposing zero headroom for this request's
@@ -333,12 +504,23 @@ class Network:
                     and cand.policy.accepts_delegated(
                         cand.n_active, cand.profile.saturation,
                         len(cand.delegated_queue), self.rng)):
+                self.msg_counts["dispatch"] += 1
+                enq = self.loop.now if enqueued_at is None else enqueued_at
                 delay = 2 * self.msg_latency * probes + self.msg_latency
                 self.loop.schedule(delay, lambda cand=cand: cand.enqueue(
-                    QueuedRequest(req, self.loop.now, delegated=True,
+                    QueuedRequest(req, enq, delegated=True,
                                   origin_node=origin.id)))
                 return True
         return False
+
+    @property
+    def routing_messages(self) -> int:
+        """Total routing-plane messages so far: two per live probe
+        (request + response), one per delegated dispatch, one per bounce.
+        Gossip-plane traffic is accounted separately in
+        ``msg_counts["gossip"]``."""
+        c = self.msg_counts
+        return 2 * c["probe"] + c["dispatch"] + c["bounce"]
 
     def on_queued_dropped(self, node: Node, qr: QueuedRequest) -> None:
         """A node went offline with ``qr`` still queued (never admitted).
@@ -350,7 +532,7 @@ class Network:
         model.
         """
         if qr.duel_id is None:
-            self.resubmit_elsewhere(qr.req)
+            self.resubmit_elsewhere(qr.req, enqueued_at=qr.enqueue_time)
             return
         if qr.duel_id.endswith(":judging"):
             st = self._duels.get(qr.duel_id.rsplit(":", 1)[0])
@@ -514,7 +696,10 @@ class Network:
                                                  self.ledger_balance(node.id),
                                                  self.rng)):
                 qr = node.local_queue.pop()      # youngest queued local request
-                if self.try_offload(node, qr.req):
+                # the request keeps its original enqueue time through the
+                # move: queue_wait must count the time already spent here
+                if self.try_offload(node, qr.req,
+                                    enqueued_at=qr.enqueue_time):
                     moved += 1
                 else:
                     node.local_queue.append(qr)
@@ -527,7 +712,9 @@ class Network:
         for node in self.nodes.values():
             if not node.online:
                 continue
-            node.view.heartbeat(self.loop.now)
+            # heartbeat with a fresh load digest piggybacked on the
+            # membership record (DESIGN.md §6.2-gossip)
+            node.publish_digest(self.loop.now)
             peers = [p for p in node.view.online_peers() if p in self.nodes]
             if peers:
                 picks = self.rng.choice(len(peers),
@@ -537,6 +724,7 @@ class Network:
                     peer = self.nodes[peers[int(i)]]
                     if peer.online:
                         gossip_round(node.view, peer.view)
+                        self.msg_counts["gossip"] += 2  # push + pull
             node.view.suspect_failures(self.loop.now, self.suspect_after)
         self.loop.schedule(self.gossip_interval, self._gossip_tick)
 

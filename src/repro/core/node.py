@@ -47,14 +47,16 @@ class Node:
     def __init__(self, node_id: str, profile: BackendProfile,
                  policy: Optional[NodePolicy] = None,
                  quality: Optional[float] = None,
-                 executor_factory: Optional[Callable[["Node"], Executor]] = None
+                 executor_factory: Optional[Callable[["Node"], Executor]] = None,
+                 view_cap: Optional[int] = None,
                  ) -> None:
         self.id = node_id
         self.profile = profile
         self.policy = policy or NodePolicy()
         self.quality = profile.quality if quality is None else quality
         self.secret = node_id.encode() + b"-secret"
-        self.view = PeerView(node_id, addr=f"tcp://{node_id}:5555")
+        self.view = PeerView(node_id, addr=f"tcp://{node_id}:5555",
+                             view_cap=view_cap)
         self.online = True
 
         # Request Manager state
@@ -78,6 +80,12 @@ class Node:
     def bind_executor(self, loop) -> None:
         self.executor = self._executor_factory(self)
         self.executor.bind(loop, self._on_exec_complete)
+
+    def publish_digest(self, now: float) -> None:
+        """Heartbeat with a fresh load digest piggybacked on the membership
+        record (DESIGN.md §6.2-gossip)."""
+        digest = self.executor.digest(now) if self.executor is not None else None
+        self.view.heartbeat(now, digest=digest)
 
     # ------------------------------------------------------------------ utils
     @property

@@ -76,12 +76,14 @@ keeps frozen-share scheduling from creeping back in.
 
 from __future__ import annotations
 
+import math
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, replace
 from typing import Any, Callable, List, Optional
 
 from repro.sim.events import EventLoop
-from repro.sim.servicemodel import (KV_BYTES_PER_TOKEN, KV_TOKENS_PER_STREAM,
+from repro.sim.servicemodel import (DIGEST_STALENESS_TAU_S,
+                                    KV_BYTES_PER_TOKEN, KV_TOKENS_PER_STREAM,
                                     SPEC_ALPHA0, SPEC_K, SPEC_OVERHEAD,
                                     TRANSFER_BASE_S, TRANSFER_BYTES_PER_S,
                                     BackendProfile)
@@ -211,8 +213,66 @@ class ExecutorLoad:
         return self.kv_headroom
 
 
+@dataclass(frozen=True)
+class LoadDigest:
+    """Compact, gossip-borne summary of an ``ExecutorLoad`` snapshot
+    (DESIGN.md §6.2-gossip).
+
+    This is what a node publishes about itself on every gossip round: just
+    enough for a *remote* router to rank it — the two phase headrooms, the
+    phase backlogs, the speculative speedup factor, the cumulative handoff
+    byte counter (so observers can learn transfer rates from deltas), and
+    the origin timestamp ``t`` that staleness discounting keys on.  It is
+    deliberately a projection, not the full ``ExecutorLoad``: budgets and
+    page counts stay node-local.
+
+    Construction is confined to the executor layer — build digests via
+    ``Executor.digest()`` / ``make_load_digest`` (enforced by the
+    ``layering/digest-construction`` rule in ``repro.analysis``).
+    """
+
+    t: float                       # origin sim-time the snapshot was taken
+    prefill_headroom: float
+    decode_headroom: float
+    pending_prefill_tokens: int
+    pending_decode_tokens: int
+    expected_tokens_per_step: float
+    handoff_bytes: int
+
+
+def make_load_digest(load: ExecutorLoad, now: float) -> LoadDigest:
+    """Project an ``ExecutorLoad`` snapshot into its gossip digest."""
+    return LoadDigest(
+        t=float(now),
+        prefill_headroom=load.prefill_headroom,
+        decode_headroom=load.decode_headroom,
+        pending_prefill_tokens=load.pending_prefill_tokens,
+        pending_decode_tokens=load.pending_decode_tokens,
+        expected_tokens_per_step=load.expected_tokens_per_step,
+        handoff_bytes=load.handoff_bytes,
+    )
+
+
+def digest_staleness_weight(age_s: float,
+                            tau_s: float = DIGEST_STALENESS_TAU_S) -> float:
+    """THE staleness-discount rule, shared by routing and its sim twin
+    (DESIGN.md §6.2-gossip): a digest of age ``age_s`` is trusted with
+    weight ``exp(-age / tau)``; the pressure a router infers from it
+    regresses toward the neutral prior as the weight decays, so a
+    seconds-old digest still steers dispatch while a minutes-old one is
+    as good as no information.
+    """
+    return math.exp(-max(0.0, float(age_s)) / float(tau_s))
+
+
 class Executor(ABC):
     """Backend-agnostic execution contract held by a Node's Model Manager."""
+
+    def digest(self, now: float) -> LoadDigest:
+        """Gossip digest of the current load snapshot (DESIGN.md
+        §6.2-gossip); the only sanctioned way to build a ``LoadDigest``
+        outside this module."""
+        return make_load_digest(self.load(), now)
 
     def bind(self, loop: Optional[EventLoop], on_complete: CompletionFn) -> None:
         """Attach the driving clock and the completion callback."""

@@ -59,6 +59,21 @@ TRANSFER_BASE_S = 0.002
 # ExecutorLoad.handoff_bytes observations move it (core/network._est_wait).
 TRANSFER_EMA_BETA = 0.2
 
+# --- gossip load-dissemination plane (DESIGN.md §6.2-gossip) ----------------
+# Digests of ExecutorLoad piggyback on gossip rounds at the same cadence as
+# membership heartbeats; routing then ranks candidates from the local stale
+# digest table instead of probing every candidate inline.
+DIGEST_INTERVAL_S = 1.0
+# Staleness discount: a digest of age `a` is trusted with weight
+# exp(-a / DIGEST_STALENESS_TAU_S); as trust decays the inferred pressure
+# regresses toward the neutral prior below (an unknown peer is assumed
+# half-loaded, neither a magnet nor a repellent for offloads).
+DIGEST_STALENESS_TAU_S = 5.0
+DIGEST_PRESSURE_PRIOR = 0.5
+# Pressure gap (after discounting) under which the digest ranking cannot
+# separate the top two candidates and routing falls back to live probes.
+DIGEST_TIE_EPS = 0.05
+
 # --- speculative decoding (DESIGN.md §6.1-spec) -----------------------------
 # Default draft depth: k draft tokens verified per target forward.
 SPEC_K = 4

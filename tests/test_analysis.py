@@ -58,6 +58,7 @@ DESIGN_OK = """\
     ### §6.1-spec Spec
     ## §Perf-kernels Speed
     ## §6.2 Duels
+    ### §6.2-gossip Load dissemination
     ## §6.3 Ledger
     ## §7 Analysis
     ## §Arch-applicability
@@ -203,6 +204,38 @@ class TestLayering:
         ids = rule_ids(analyze(root, "layering"))
         assert "layering/service-time" in ids
         assert "layering/private-state" in ids
+
+    def test_digest_construction_confined_to_executor_layer(self, tmp_path):
+        root = mk_repo(tmp_path, {
+            **MD_STUBS,
+            # hand-rolled digest outside the executor layer: flagged
+            "src/repro/core/x.py": """\
+            from repro.sim.executor import LoadDigest
+
+            def fake(now):
+                return LoadDigest(now, 1.0, 1.0, 0, 0, 1.0, 0)
+        """,
+            # the sanctioned projection home constructs freely
+            "src/repro/sim/executor.py": """\
+            class LoadDigest:
+                pass
+
+            def make_load_digest(load, now):
+                return LoadDigest()
+        """,
+            # obtaining a digest via the projection helper is silent
+            "src/repro/core/y.py": """\
+            from repro.sim.executor import make_load_digest
+
+            def ok(load, now):
+                return make_load_digest(load, now)
+        """})
+        findings = analyze(root, "layering").new
+        bad = [f for f in findings
+               if f.rule_id == "layering/digest-construction"]
+        assert len(bad) == 1
+        assert bad[0].path == "src/repro/core/x.py"
+        assert "make_load_digest" in bad[0].msg
 
 
 class TestKernelLint:

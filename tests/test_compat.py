@@ -107,7 +107,7 @@ class TestBenchSchema:
 
         from benchmarks.run import check_bench_schema
         payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
-        assert payload["schema"] == 6
+        assert payload["schema"] == 7
         assert "ttft_speedup_prompt_heavy" in payload["mix"]
         for key in ("handoffs", "transfer_inflight_peak"):
             broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
@@ -189,6 +189,38 @@ class TestBenchSchema:
                 check_bench_schema(broken)
         broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
         del broken["spec"]["paged"]["decode_tokens_per_s"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+
+    def test_schema_checker_rejects_gossip_drift(self):
+        """Schema 7 pins the gossip scale-out section (DESIGN.md
+        §6.2-gossip): both routing modes at the 100- and 1k-node points,
+        plus hard bars — at 1k nodes the digest plane must route with at
+        least 3x fewer messages per request than the power-of-two probe
+        baseline while holding SLO attainment within 2 points."""
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        gos = payload["gossip"]
+        big = gos["points"]["1000"]
+        assert (big["gossip"]["routing_msgs_per_req"]
+                < big["probe"]["routing_msgs_per_req"])
+        assert big["msgs_ratio"] >= 3.0
+        assert big["slo_gap"] <= 0.02
+        for pt in ("100", "1000"):
+            for mode in ("gossip", "probe"):
+                broken = json.loads(
+                    (REPO / "BENCH_scheduling.json").read_text())
+                del broken["gossip"]["points"][pt][mode]["routing_msgs_per_req"]
+                with pytest.raises(AssertionError):
+                    check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["gossip"]["points"]["1000"]["msgs_ratio"] = 2.5
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["gossip"]["points"]["1000"]["slo_gap"] = 0.1
         with pytest.raises(AssertionError):
             check_bench_schema(broken)
 

@@ -5,8 +5,21 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.duel import DuelParams, expected_extra_requests, run_duel
-from repro.core.gossip import PeerView, gossip_round, rounds_to_convergence
+from repro.core.gossip import (PeerRecord, PeerView, gossip_round,
+                               rounds_to_convergence)
 from repro.core.pos import pos_sample, pos_sample_one, selection_probs
+from repro.sim.executor import (ExecutorLoad, digest_staleness_weight,
+                                make_load_digest)
+from repro.sim.servicemodel import DIGEST_STALENESS_TAU_S
+
+
+def _digest(now, kv_used=0, kv_budget=100, handoff_bytes=0):
+    """A test digest, built through the sanctioned executor-layer
+    projection (layering/digest-construction)."""
+    return make_load_digest(ExecutorLoad(
+        active_streams=0, queued_streams=0, pending_prefill_tokens=0,
+        pending_decode_tokens=0, kv_used=kv_used, kv_budget=kv_budget,
+        handoff_bytes=handoff_bytes), now)
 
 
 class TestGossip:
@@ -31,20 +44,46 @@ class TestGossip:
         gossip_round(a, b)
         assert b.records["a"].online
 
-    def test_failure_suspicion_is_local_not_viral(self):
-        a = PeerView("a", "tcp://a")
-        b = PeerView("b", "tcp://b")
-        c = PeerView("c", "tcp://c")
+    @staticmethod
+    def _triangle():
+        a, b, c = (PeerView(x, f"tcp://{x}") for x in "abc")
         for v in (a, b, c):
             for w in (a, b, c):
                 if v is not w:
                     gossip_round(v, w)
-        # b stops heartbeating; a suspects after timeout
+        return a, b, c
+
+    def test_dead_report_spreads_to_consensus(self):
+        """Dead reports are epidemic (DESIGN.md §6.2-gossip): an offline
+        mark at the suspected version beats the live record on merge, so
+        peers that never timed the origin out themselves still learn the
+        suspicion."""
+        a, b, c = self._triangle()
+        # b stops heartbeating; only a suspects after timeout
         a.suspect_failures(100.0, suspect_after=5.0)
         assert not a.records["b"].online
-        # ... but a live b's next heartbeat re-wins on merge
-        b.heartbeat(101.0)
-        gossip_round(a, b)
+        gossip_round(a, c)                 # c never suspected b itself
+        assert not c.records["b"].online   # ... but takes the dead report
+
+    def test_revived_origin_heartbeat_beats_dead_report(self):
+        a, b, c = self._triangle()
+        a.suspect_failures(100.0, suspect_after=5.0)
+        gossip_round(a, c)                 # rumor has spread to c
+        assert not c.records["b"].online
+        b.heartbeat(101.0)                 # a live b bumps its own version
+        gossip_round(b, c)
+        assert c.records["b"].online       # strictly-higher version wins
+        gossip_round(c, a)
+        assert a.records["b"].online       # ... and overrides the reporter
+
+    def test_self_refutation_jumps_past_report_version(self):
+        a, b, _ = self._triangle()
+        a.suspect_failures(100.0, suspect_after=5.0)
+        v_report = a.records["b"].version
+        gossip_round(a, b)                 # b hears the rumor about itself
+        assert b.records["b"].online
+        assert b.records["b"].version > v_report
+        gossip_round(a, b)                 # the refutation wins the merge
         assert a.records["b"].online
 
     @given(st.integers(3, 12), st.integers(0, 1000))
@@ -59,6 +98,76 @@ class TestGossip:
             v.heartbeat(1.0)
         rounds = rounds_to_convergence(views, rng, fanout=2)
         assert rounds <= 2 * int(np.ceil(np.log2(n))) + 3
+
+
+class TestLoadDigests:
+    """The load-dissemination plane (DESIGN.md §6.2-gossip): digests ride
+    the per-origin versioned heartbeat records, so anti-entropy merging
+    propagates the freshest load picture for free."""
+
+    def test_digest_rides_heartbeat_and_gossip(self):
+        a = PeerView("a", "tcp://a")
+        b = PeerView("b", "tcp://b")
+        d = _digest(1.0, kv_used=50)
+        a.heartbeat(1.0, digest=d)
+        gossip_round(a, b)
+        assert b.digest_of("a") == d
+        assert b.digest_of("nobody") is None
+
+    def test_heartbeat_without_digest_keeps_last_published(self):
+        a = PeerView("a", "tcp://a")
+        d = _digest(1.0, kv_used=50)
+        a.heartbeat(1.0, digest=d)
+        a.heartbeat(2.0)                  # membership-only heartbeat
+        assert a.digest_of("a") == d
+
+    def test_newer_digest_wins_merge(self):
+        a = PeerView("a", "tcp://a")
+        b = PeerView("b", "tcp://b")
+        a.heartbeat(1.0, digest=_digest(1.0, kv_used=10))
+        gossip_round(a, b)
+        d2 = _digest(2.0, kv_used=90)
+        a.heartbeat(2.0, digest=d2)
+        gossip_round(a, b)
+        assert b.digest_of("a") == d2
+
+    @given(st.integers(3, 10), st.integers(0, 500))
+    @settings(max_examples=15, deadline=None)
+    def test_digest_convergence_within_log_rounds(self, n, seed):
+        """``rounds_to_convergence`` compares the digest payloads, not just
+        membership: after it returns, every node holds every other node's
+        published digest."""
+        rng = np.random.default_rng(seed)
+        views = [PeerView(f"n{i}", f"tcp://n{i}") for i in range(n)]
+        for i in range(n):
+            gossip_round(views[i], views[(i + 1) % n])
+        for i, v in enumerate(views):
+            v.heartbeat(1.0, digest=_digest(1.0, kv_used=i))
+        rounds = rounds_to_convergence(views, rng, fanout=2)
+        assert rounds <= 2 * int(np.ceil(np.log2(n))) + 3
+        for v in views:
+            for i in range(n):
+                d = v.digest_of(f"n{i}")
+                assert d is not None and d.prefill_headroom == \
+                    pytest.approx(1.0 - i / 100)
+
+    def test_staleness_weight_decays_toward_prior(self):
+        assert digest_staleness_weight(0.0) == pytest.approx(1.0)
+        assert digest_staleness_weight(DIGEST_STALENESS_TAU_S) == \
+            pytest.approx(float(np.exp(-1)))
+        ws = [digest_staleness_weight(t) for t in (0.0, 1.0, 5.0, 20.0, 100.0)]
+        assert all(x > y for x, y in zip(ws, ws[1:]))
+        # clock skew between origin timestamps and the local clock clamps
+        # to full trust rather than extrapolating weights above 1
+        assert digest_staleness_weight(-3.0) == pytest.approx(1.0)
+
+    def test_view_cap_evicts_stalest_heartbeats(self):
+        v = PeerView("a", "tcp://a", view_cap=2)
+        v.merge([PeerRecord("b", 1, True, "tcp://b", 1.0),
+                 PeerRecord("c", 1, True, "tcp://c", 2.0),
+                 PeerRecord("d", 1, True, "tcp://d", 3.0)])
+        # the cap bounds *remote* records; self is never evicted
+        assert set(v.records) == {"a", "c", "d"}
 
 
 class TestPoS:

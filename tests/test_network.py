@@ -4,8 +4,14 @@ import numpy as np
 import pytest
 
 from repro.core import DuelParams, Network, Node, NodePolicy
-from repro.sim import (WorkloadSpec, make_profile, make_requests, two_phase,
+from repro.core.gossip import PeerRecord
+from repro.core.node import QueuedRequest
+from repro.sim import (BackendProfile, DisaggTokenBucketExecutor,
+                       WorkloadSpec, make_profile, make_requests, two_phase,
                        uniform_phases)
+from repro.sim.executor import ExecutorLoad, make_load_digest
+from repro.sim.servicemodel import DIGEST_PRESSURE_PRIOR
+from repro.sim.workload import Request
 
 
 def _specs(t_end=400.0, hot_ia=3.0):
@@ -121,6 +127,141 @@ class TestChurn:
         served_after = [c for c in net.metrics.completed
                         if c.executor == "node4" and c.finish > 150.0]
         assert len(served_after) > 0
+
+
+def _mini_net(mode="decentralized", n=2, accept_freq=1.0, **kw):
+    net = Network(mode=mode, seed=0, duel=DuelParams(p_d=0.0, k_judges=0),
+                  init_balance=100.0, **kw)
+    for i in range(n):
+        net.add_node(Node(f"node{i+1}", make_profile(quality=0.5),
+                          policy=NodePolicy(accept_freq=accept_freq)))
+    return net
+
+
+def _req(rid="r", origin="node1", arrival=0.0, prompt=8, out=4):
+    return Request(rid=rid, origin=origin, arrival=arrival,
+                   prompt_tokens=prompt, output_tokens=out, slo_s=30.0)
+
+
+class TestWaitAccounting:
+    """Re-enqueues must preserve the request's original enqueue time:
+    queue_wait counts from when the request first entered a queue, not
+    from its latest hop."""
+
+    def test_offload_preserves_enqueue_time(self):
+        net = _mini_net()
+        net.loop.run(until=7.0)
+        # queued at node1 since t=2.0, offloaded at t=7.0
+        assert net.try_offload(net.nodes["node1"], _req(), enqueued_at=2.0)
+        net.loop.run()
+        done = [c for c in net.metrics.completed if c.rid == "r"]
+        assert len(done) == 1
+        # the five seconds already spent queued at the origin must count
+        assert done[0].queue_wait >= 5.0
+
+    def test_churn_resubmit_preserves_enqueue_time(self):
+        net = _mini_net()
+        node1 = net.nodes["node1"]
+        # a request sits queued (never admitted) at node1 from t=0
+        node1.local_queue.append(
+            QueuedRequest(_req(), 0.0, delegated=False, origin_node="node1"))
+        net.loop.run(until=9.0)
+        node1.go_offline()       # strands the queue -> resubmit_elsewhere
+        net.loop.run()
+        done = [c for c in net.metrics.completed if c.rid == "r"]
+        assert len(done) == 1
+        assert done[0].executor == "node2"
+        assert done[0].queue_wait >= 9.0
+
+
+class TestDrainLiveness:
+    """`run()` must terminate even when every node is offline: the 5s
+    resubmit/dispatch retries stop rescheduling once the drain begins."""
+
+    def test_decentralized_drain_terminates_all_nodes_offline(self):
+        net = _mini_net()
+        for node in net.nodes.values():
+            net.loop.schedule(1.0, node.go_offline)
+        reqs = [_req(rid=f"r{i}", arrival=2.0 + i) for i in range(3)]
+        m = net.run(reqs, until=20.0)     # regression: used to never return
+        assert len([c for c in m.completed if not c.is_duel_extra]) == 0
+
+    def test_centralized_drain_terminates_all_nodes_offline(self):
+        net = _mini_net(mode="centralized")
+        for node in net.nodes.values():
+            net.loop.schedule(1.0, node.go_offline)
+        reqs = [_req(rid=f"r{i}", arrival=2.0 + i) for i in range(3)]
+        m = net.run(reqs, until=20.0)     # regression: used to never return
+        assert len([c for c in m.completed if not c.is_duel_extra]) == 0
+
+
+class TestTransferRateEMA:
+    def test_out_of_order_samples_do_not_rewind_baseline(self):
+        """A stale digest observed after a fresh probe must not rewind the
+        per-node transfer-rate baseline."""
+        net = _mini_net()
+        net._observe_transfer_rate("n", 1.0, 1000)
+        net._observe_transfer_rate("n", 2.0, 3000)    # db > 0: EMA updates
+        ema = dict(net._transfer_rate_ema)
+        assert ema
+        net._observe_transfer_rate("n", 1.5, 500)     # stale: ignored
+        assert net._transfer_rate_ema == ema
+        assert net._transfer_obs["n"][0] == 2.0
+
+    def test_decentralized_run_feeds_transfer_ema(self):
+        """Regression: the EMA was only fed by the centralized `_est_wait`
+        path, so decentralized routing never learned transfer rates.  Now
+        probe responses and gossip digests both carry `handoff_bytes`
+        samples."""
+        net = Network(mode="decentralized", seed=0, init_balance=100.0,
+                      duel=DuelParams(p_d=0.0, k_judges=0),
+                      gossip_interval=0.5)
+        pol = NodePolicy(accept_freq=1.0, offload_freq=1.0,
+                         offload_queue_threshold=0)
+        small = BackendProfile(prefill_tps=1e4, decode_tps=50.0,
+                               saturation=2, max_concurrency=8, quality=0.5,
+                               kv_token_budget=1024)
+        for nid in ("n0", "n1", "n2"):
+            net.add_node(Node(
+                nid, small, policy=pol,
+                executor_factory=lambda node: DisaggTokenBucketExecutor(
+                    node.profile)))
+        reqs = [Request(rid=f"r{i}", origin="n0", arrival=0.2 * i,
+                        prompt_tokens=256, output_tokens=128, slo_s=600.0)
+                for i in range(40)]
+        net.run(reqs, until=30.0)
+        assert net._transfer_rate_ema, \
+            "no transfer-rate observations reached the EMA"
+
+
+class TestGossipRouting:
+    def test_digest_pressure_discounts_stale_digests(self):
+        net = _mini_net()
+        node1 = net.nodes["node1"]
+        # node2 published a fully-saturated digest at t=0 (injected via a
+        # merge, built through the sanctioned executor-layer projection)
+        d = make_load_digest(ExecutorLoad(
+            active_streams=2, queued_streams=0, pending_prefill_tokens=0,
+            pending_decode_tokens=0, kv_used=100, kv_budget=100), 0.0)
+        node1.view.merge([PeerRecord("node2", 99, True, "tcp://node2", 0.0,
+                                     digest=d)])
+        req = _req()
+        fresh = net._digest_pressure(node1, "node2", req)
+        assert fresh > 0.9                  # trusted while fresh
+        net.loop.run(until=100.0)           # age the digest far past tau
+        stale = net._digest_pressure(node1, "node2", req)
+        assert stale == pytest.approx(DIGEST_PRESSURE_PRIOR, abs=0.01)
+        # an unknown peer scores exactly the neutral prior
+        assert net._digest_pressure(node1, "nobody", req) == \
+            DIGEST_PRESSURE_PRIOR
+
+    def test_routing_messages_accounting(self):
+        net = _mini_net()
+        assert net.routing_messages == 0
+        net.msg_counts["probe"] += 3
+        net.msg_counts["dispatch"] += 2
+        net.msg_counts["bounce"] += 1
+        assert net.routing_messages == 2 * 3 + 2 + 1
 
 
 class TestChainResync:

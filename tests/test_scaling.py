@@ -1,0 +1,60 @@
+"""Scale-out routing invariants (DESIGN.md §6.2-gossip; ROADMAP item 1).
+
+Tier-1 runs a small-pool gossip-vs-probe comparison; the 10k-node point
+with partial views is a deep sweep behind ``-m slow`` (the 100/1k points
+are exercised — with hard message-cut and SLO bars — by ``--bench`` and
+the checked-in ``BENCH_scheduling.json`` via ``tests/test_compat.py``).
+"""
+
+import pytest
+
+from benchmarks.scaling import SCALE_POINTS, build_scale_network, \
+    run_scale_point
+
+
+class TestSmallPoolParity:
+    _POINT = dict(hot=4, hot_ia=1.0, bg_ia=16.0, t_end=20.0,
+                  gossip_interval=1.0, view_cap=None)
+
+    def test_gossip_cuts_messages_at_matched_slo(self):
+        g = run_scale_point(40, "gossip", point=self._POINT)
+        p = run_scale_point(40, "probe", point=self._POINT)
+        # both routing flavors complete the whole workload ...
+        assert g["n"] == g["n_submitted"]
+        assert p["n"] == p["n_submitted"]
+        # ... at comparable SLO attainment, but the digest plane routes
+        # with strictly fewer messages per request
+        assert abs(g["slo_attainment"] - p["slo_attainment"]) <= 0.05
+        assert g["routing_msgs_per_req"] < p["routing_msgs_per_req"]
+
+    def test_gossip_spends_probes_only_on_contention(self):
+        g = run_scale_point(40, "gossip", point=self._POINT)
+        # blind dispatches must dominate live probes: the stale-digest
+        # table resolves most routing decisions without a round-trip
+        assert g["dispatches"] > 0
+        assert g["probes"] <= g["dispatches"]
+
+
+class TestScalePoints:
+    def test_scale_points_cover_required_sizes(self):
+        assert set(SCALE_POINTS) == {100, 1000, 10000}
+        # the 10k point must bound per-node view size (partial views)
+        assert SCALE_POINTS[10000]["view_cap"] is not None
+
+    def test_build_network_wires_routing_and_view_cap(self):
+        net, specs = build_scale_network(100, "gossip", seed=1)
+        assert net.routing == "gossip" and not net.power_of_two
+        assert len(net.nodes) == 100 and len(specs) == 100
+        netp, _ = build_scale_network(100, "probe", seed=1)
+        # the probe baseline runs at its strongest configuration
+        assert netp.routing == "probe" and netp.power_of_two
+
+
+@pytest.mark.slow
+class TestTenThousandNodes:
+    def test_10k_gossip_point_with_partial_views(self):
+        r = run_scale_point(10000, "gossip")
+        assert r["n"] > 0
+        assert r["slo_attainment"] >= 0.95
+        # partial views keep per-request routing cost size-independent
+        assert r["routing_msgs_per_req"] < 1.0
