@@ -18,11 +18,16 @@ batching, the disagg-vs-colocated TTFT mix, the speculative-vs-paged
 decode-heavy comparison with its accepted-length distribution, the pinned
 kernel microbench — slot vs paged vs quantized-paged decode/spec-verify
 timings at fixed shapes, the autotuned ``pages_per_step``, and the int8
-admission 2x demo — and, new in schema 7, the ``gossip`` scale-out
-section: gossip-digest vs power-of-two probe routing at 100 and 1k sim
-nodes with SLO attainment and routing messages-per-request, whose >=3x
-message cut at matched SLO is asserted by ``check_bench_schema``) so the
-performance trajectory is tracked PR over PR::
+admission 2x demo — the schema-7 ``gossip`` scale-out section:
+gossip-digest vs power-of-two probe routing at 100 and 1k sim nodes with
+SLO attainment and routing messages-per-request, whose >=3x message cut
+at matched SLO is asserted by ``check_bench_schema`` — and, new in
+schema 8, the ``prefix_cache`` section (DESIGN.md §6.1-prefix): real-
+engine cached-vs-cold TTFT on a shared prefix (cached must be faster),
+the simulated zipf-shared-prefix hit rate (>= 0.5), and cache-affinity
+vs affinity-blind gossip routing on a hot-origin zipf workload
+(affinity must win on aggregate hit rate)) so the performance
+trajectory is tracked PR over PR::
 
     PYTHONPATH=src python benchmarks/run.py --bench
 
@@ -53,7 +58,7 @@ _REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_REPO))
 sys.path.insert(0, str(_REPO / "src"))
 
-BENCH_SCHEMA_VERSION = 7
+BENCH_SCHEMA_VERSION = 8
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -94,6 +99,16 @@ GOSSIP_MODE_KEYS = ("slo_attainment", "p95_latency_s",
                     "routing_msgs_per_req", "gossip_msgs", "probes",
                     "dispatches", "bounces", "delegation_rate", "n",
                     "wall_s")
+# schema 8: cross-request prefix caching (DESIGN.md §6.1-prefix) — real
+# engine cached-vs-cold TTFT on a shared prefix, the simulated
+# zipf-shared-prefix hit rate, and cache-affinity vs affinity-blind
+# gossip dispatch on a hot-origin zipf workload
+PREFIX_ENGINE_KEYS = ("cold_ttft_s", "cached_ttft_s", "ttft_speedup",
+                      "hit_tokens", "cached_pages", "prefix_tokens",
+                      "suffix_tokens")
+PREFIX_SIM_KEYS = ("hit_rate", "hit_tokens", "lookup_tokens", "served")
+PREFIX_ROUTING_MODES = ("affinity", "blind")
+PREFIX_ROUTING_KEYS = ("hit_rate", "hit_tokens", "lookup_tokens", "n")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -193,6 +208,32 @@ def check_bench_schema(payload: dict) -> None:
     assert adm["paged_quant"] >= 2 * adm["paged"], (
         f"quantized admission {adm['paged_quant']} < "
         f"2x fp admission {adm['paged']}")
+    # schema 8: cross-request prefix caching (DESIGN.md §6.1-prefix)
+    pc = payload["prefix_cache"]
+    for k in ("workload", "engine", "sim", "routing"):
+        assert k in pc, f"prefix_cache.{k} missing"
+    for k in PREFIX_ENGINE_KEYS:
+        assert k in pc["engine"], f"prefix_cache.engine.{k} missing"
+    for k in PREFIX_SIM_KEYS:
+        assert k in pc["sim"], f"prefix_cache.sim.{k} missing"
+    for mode in PREFIX_ROUTING_MODES:
+        assert mode in pc["routing"], f"prefix_cache.routing.{mode} missing"
+        for k in PREFIX_ROUTING_KEYS:
+            assert k in pc["routing"][mode], \
+                f"prefix_cache.routing.{mode}.{k} missing"
+    # hard bars: a prefix hit must serve its first token faster than the
+    # cold prefill of the same prompt; the zipf workload must actually
+    # exercise the cache; and cache-affinity dispatch must beat
+    # affinity-blind gossip routing on aggregate hit rate
+    assert pc["engine"]["cached_ttft_s"] < pc["engine"]["cold_ttft_s"], (
+        f"cached TTFT {pc['engine']['cached_ttft_s']} not below cold "
+        f"{pc['engine']['cold_ttft_s']}")
+    assert pc["sim"]["hit_rate"] >= 0.5, (
+        f"zipf-shared-prefix sim hit rate {pc['sim']['hit_rate']} < 0.5")
+    assert (pc["routing"]["affinity"]["hit_rate"]
+            > pc["routing"]["blind"]["hit_rate"]), (
+        f"cache-affinity hit rate {pc['routing']['affinity']['hit_rate']} "
+        f"not above blind {pc['routing']['blind']['hit_rate']}")
 
 
 def _lint(verbose: bool = True) -> int:
@@ -341,6 +382,42 @@ def _smoke() -> int:
         assert spec.stats.spec_steps > 0
         assert spec.load_snapshot()["pages_used"] == 0
 
+    def prefix_cache_parity():
+        # cached-vs-cold bit parity + hit-rate sanity (DESIGN.md
+        # §6.1-prefix): serving the same shared prefix twice must produce
+        # bit-identical greedy output to a cache-less engine while actually
+        # hitting the cache, with the page pool reconciling exactly
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serving import Engine, GenRequest
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        params = registry.init(jax.random.PRNGKey(0), cfg)
+        prefix = np.random.default_rng(5).integers(2, 400, size=35) \
+            .astype(np.int32)
+
+        def mk(rid, sufseed):
+            suf = np.random.default_rng(sufseed).integers(2, 400, size=7) \
+                .astype(np.int32)
+            return GenRequest(rid=rid,
+                              tokens=np.concatenate([prefix, suf]),
+                              max_new=4)
+
+        cold = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                      page_size=16, num_pages=32)
+        ref = {r.rid: np.asarray(r.result)
+               for r in cold.serve([mk("a", 1), mk("b", 2)])}
+        warm = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                      page_size=16, num_pages=32, prefix_cache=True)
+        got = {}
+        for rid, ss in (("a", 1), ("b", 2)):   # sequential: b hits a's pages
+            got.update({r.rid: np.asarray(r.result)
+                        for r in warm.serve([mk(rid, ss)])})
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+        assert warm.prefix_hit_tokens > 0, "no prefix-cache hits"
+        acct = warm.debug_page_accounting()
+        assert acct["cold"] > 0 and acct["held"] == 0
+
     def pallas_kernel_matches_oracle():
         from repro.kernels.flash_attention import flash_attention_tpu
         from repro.kernels.ref import reference_attention
@@ -414,6 +491,8 @@ def _smoke() -> int:
           disagg_matches_colocated_paged)
     check("speculative engine greedy-matches paged engine",
           spec_engine_matches_paged)
+    check("prefix cache cached-vs-cold parity + hit rate",
+          prefix_cache_parity)
     check("pallas flash kernel vs oracle (interpret)",
           pallas_kernel_matches_oracle)
     check("mesh context + sharding constraint", mesh_context_sharding)
@@ -782,6 +861,114 @@ def _bench(out_path: str) -> int:
     # --- gossip scale-out: digest vs probe routing (DESIGN.md §6.2-gossip) --
     from benchmarks.scaling import gossip_scaling_section
     payload["gossip"] = gossip_scaling_section()
+
+    # --- cross-request prefix caching (DESIGN.md §6.1-prefix) ---------------
+    # (a) real engine: cold prefill of a long shared prefix vs a cached hit
+    # on the same prefix with a fresh suffix.  Both prompt shapes are
+    # identical; the jit caches for BOTH the cold-prefill and warm-prefill
+    # paths are compiled untimed on a throwaway prefix first, so the timed
+    # TTFTs compare page reuse, not compilation.
+    pfx_tokens, sfx_tokens = 192, 8
+    rngp = np.random.default_rng(23)
+    bench_prefix = rngp.integers(2, 400, size=pfx_tokens).astype(np.int32)
+    jit_prefix = rngp.integers(2, 400, size=pfx_tokens).astype(np.int32)
+
+    def pfx_req(rid, prefix, sufseed):
+        suf = np.random.default_rng(sufseed).integers(
+            2, 400, size=sfx_tokens).astype(np.int32)
+        return GenRequest(rid=rid, tokens=np.concatenate([prefix, suf]),
+                          max_new=4)
+
+    peng = Engine(cfg, params, bucket=16, max_batch=2, paged=True,
+                  page_size=page_size, num_pages=96, prefix_cache=True)
+    peng.serve([pfx_req("jit-cold", jit_prefix, 1)])   # compiles cold path
+    peng.serve([pfx_req("jit-warm", jit_prefix, 2)])   # compiles warm path
+    cold_done = peng.serve([pfx_req("cold", bench_prefix, 3)])
+    hit_before = peng.prefix_hit_tokens
+    warm_done = peng.serve([pfx_req("hit", bench_prefix, 4)])
+    cold_ttft = cold_done[0].first_token_at - cold_done[0].enqueued_at
+    cached_ttft = warm_done[0].first_token_at - warm_done[0].enqueued_at
+    psnap = peng.load_snapshot()
+
+    # (b) simulated zipf-shared-prefix workload on one prefix-cache backend
+    from repro.core.node import QueuedRequest
+    from repro.sim import TokenBucketExecutor, make_profile
+    from repro.sim.events import EventLoop
+    from repro.sim.workload import make_zipf_prefix_requests
+    zloop = EventLoop()
+    zex = TokenBucketExecutor(make_profile(quality=0.6),
+                              page_size=page_size, prefix_cache=True)
+    zserved = []
+    zex.bind(zloop, lambda qr, st_, ft: zserved.append(qr))
+
+    def zsubmit(qr):
+        if not zex.admit(qr):
+            zloop.schedule(0.5, lambda: zsubmit(qr))
+
+    for zr in make_zipf_prefix_requests(300, ["n0"], seed=23, n_prefixes=8):
+        zloop.schedule(zr.arrival, lambda zr=zr: zsubmit(
+            QueuedRequest(zr, zr.arrival, False, "n0")))
+    zloop.run(until=10000.0)
+    zhit_rate = zex.prefix_hit_tokens / max(1, zex.prefix_lookup_tokens)
+
+    # (c) cache-affinity vs affinity-blind gossip dispatch on a hot-origin
+    # zipf workload: every request lands on one node, which must offload
+    # most of them — with more live prefixes (24) than one node's
+    # fingerprint window (PREFIX_FINGERPRINT_K), where the dispatch choice
+    # decides the aggregate hit rate
+    from repro.core import Network, Node, NodePolicy
+    from repro.core.duel import DuelParams
+    from repro.sim import BackendProfile
+
+    def _affinity_point(affinity):
+        net = Network(mode="decentralized", seed=0, init_balance=100.0,
+                      duel=DuelParams(p_d=0.0, k_judges=0),
+                      gossip_interval=0.25, cache_affinity=affinity)
+        pol = NodePolicy(accept_freq=1.0, offload_freq=1.0,
+                         offload_queue_threshold=0)
+        prof = BackendProfile(prefill_tps=1e4, decode_tps=300.0,
+                              saturation=2, max_concurrency=8, quality=0.6,
+                              kv_token_budget=16384)
+        for i in range(8):
+            net.add_node(Node(
+                f"n{i}", prof, policy=pol,
+                executor_factory=lambda node: TokenBucketExecutor(
+                    node.profile, page_size=page_size, prefix_cache=True)))
+        reqs = make_zipf_prefix_requests(
+            500, ["n0"], seed=100, n_prefixes=24, prefix_tokens=512,
+            suffix_mean=24, mean_interarrival=0.05, output_mean=48)
+        net.run(list(reqs), until=400.0)
+        hit = sum(n.executor.prefix_hit_tokens for n in net.nodes.values())
+        look = sum(n.executor.prefix_lookup_tokens
+                   for n in net.nodes.values())
+        return {"hit_rate": round(hit / max(1, look), 4),
+                "hit_tokens": hit, "lookup_tokens": look, "n": len(reqs)}
+
+    payload["prefix_cache"] = {
+        "workload": f"engine: prefix {pfx_tokens} + suffix {sfx_tokens}, "
+                    "cold then cached; sim: 300 zipf requests over 8 "
+                    "prefixes; routing: 500 hot-origin zipf requests over "
+                    "24 prefixes, 8 nodes",
+        "engine": {
+            "cold_ttft_s": round(cold_ttft, 4),
+            "cached_ttft_s": round(cached_ttft, 4),
+            "ttft_speedup": round(cold_ttft / max(cached_ttft, 1e-9), 2),
+            "hit_tokens": peng.prefix_hit_tokens - hit_before,
+            "cached_pages": psnap["cached_pages"],
+            "prefix_tokens": pfx_tokens,
+            "suffix_tokens": sfx_tokens,
+        },
+        "sim": {
+            "hit_rate": round(zhit_rate, 4),
+            "hit_tokens": zex.prefix_hit_tokens,
+            "lookup_tokens": zex.prefix_lookup_tokens,
+            "served": len(zserved),
+        },
+        "routing": {
+            "affinity": _affinity_point(True),
+            "blind": _affinity_point(False),
+        },
+    }
 
     # --- static-analysis snapshot (DESIGN.md §7) ----------------------------
     from repro.analysis import run_analysis

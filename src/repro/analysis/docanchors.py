@@ -35,8 +35,8 @@ DESIGN = "DESIGN.md"
 MARKDOWN_REFERRERS = ("ROADMAP.md", "CHANGES.md", "README.md", DESIGN)
 
 # the section set the rest of the repo is written against
-REQUIRED_ANCHORS = ("§6.1", "§6.1-paged", "§6.1-disagg", "§6.1-spec",
-                    "§Perf-kernels",
+REQUIRED_ANCHORS = ("§6.1", "§6.1-paged", "§6.1-disagg", "§6.1-prefix",
+                    "§6.1-spec", "§Perf-kernels",
                     "§6.2", "§6.2-gossip", "§6.3", "§7",
                     "§Arch-applicability")
 

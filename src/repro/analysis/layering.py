@@ -69,7 +69,14 @@ SERVICE_TIME_ALLOWED = ("src/repro/sim/executor.py",
 
 # paged-engine page-pool privates and their one sanctioned home
 PRIVATE_STATE = frozenset({"_free_pages", "_row_pages", "_block_tables",
-                           "_num_pages", "_pools", "_slot_seq"})
+                           "_num_pages", "_pools", "_slot_seq",
+                           # prefix-cache internals (DESIGN.md §6.1-prefix):
+                           # chain/refcount/cold-LRU/pin state is engine-
+                           # private; other layers read load_snapshot()'s
+                           # cached_pages / prefix_hit_rate /
+                           # resident_prefixes or call prefix_pin()
+                           "_chain", "_page_hash", "_page_ref", "_cold",
+                           "_head_lru", "_pinned"})
 PRIVATE_STATE_HOME = "src/repro/serving/engine.py"
 
 # gossip LoadDigest construction and its one sanctioned home (DESIGN.md

@@ -36,7 +36,8 @@ SIM_PREFIX = "src/repro/sim/"
 # admission/cost predicates shared by sim twins and engines alike
 SHARED_PREDICATES = frozenset({"pages_for", "paged_admit_ok",
                                "quantized_pages", "spec_expected_tokens",
-                               "digest_staleness_weight"})
+                               "digest_staleness_weight",
+                               "prefix_hit_pages", "prefix_fingerprint_id"})
 
 
 def _is_shared_const_name(name: str) -> bool:

@@ -11,7 +11,9 @@ Two payloads ride the same versioned records:
 
 * **Load digests** — each heartbeat carries a compact ``LoadDigest`` of the
   origin's ``ExecutorLoad`` (headrooms, phase backlogs, speculative speedup,
-  cumulative handoff bytes, snapshot timestamp).  Because the digest is
+  cumulative handoff bytes, prefix-cache hit rate plus the fingerprints of
+  its most-recently-touched resident prefixes for cache-affinity dispatch
+  (DESIGN.md §6.1-prefix), snapshot timestamp).  Because the digest is
   versioned by the same per-origin counter, anti-entropy merging propagates
   the freshest digest for free; routers rank candidates from this stale
   table with staleness discounting instead of probing every candidate.

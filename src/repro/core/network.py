@@ -39,7 +39,7 @@ from repro.core.ledger import (CreditChain, CreditOp, LedgerError, SharedLedger)
 from repro.core.node import Node, QueuedRequest
 from repro.core.pos import pos_sample, pos_sample_one
 from repro.sim.events import EventLoop
-from repro.sim.executor import digest_staleness_weight
+from repro.sim.executor import digest_staleness_weight, prefix_fingerprint_id
 from repro.sim.metrics import CompletedRequest, MetricsCollector
 from repro.sim.servicemodel import (DIGEST_PRESSURE_PRIOR, DIGEST_TIE_EPS,
                                     KV_BYTES_PER_TOKEN, TRANSFER_BYTES_PER_S,
@@ -84,7 +84,8 @@ class Network:
                  restake_fraction: float = 0.5,
                  max_probes: int = 3,
                  power_of_two: bool = False,
-                 routing: str = "gossip") -> None:
+                 routing: str = "gossip",
+                 cache_affinity: bool = True) -> None:
         assert mode in ("single", "centralized", "decentralized")
         assert ledger_mode in ("shared", "chain")
         assert routing in ("gossip", "probe")
@@ -105,6 +106,11 @@ class Network:
         self.restake_fraction = restake_fraction
         self.max_probes = max_probes
         self.power_of_two = power_of_two
+        # cache-affinity dispatch (DESIGN.md §6.1-prefix): among near-tied
+        # gossip leaders, prefer nodes whose digest advertises the request's
+        # shared prefix as resident — a pressure tie is not a real tie when
+        # one node can skip most of the prefill
+        self.cache_affinity = cache_affinity
 
         self.shared_ledger = SharedLedger()
         self.chains: Dict[str, CreditChain] = {}
@@ -411,9 +417,15 @@ class Network:
         near = [nid for pr, nid in scored if pr - best_pr < DIGEST_TIE_EPS]
         if best_pr >= DIGEST_PRESSURE_PRIOR and len(near) >= 2:
             # contended and too close to call from stale digests: probe the
-            # top two live
+            # top two live — prefix-warm near-tied peers first, so an exact
+            # live-pressure tie resolves toward the cache (§6.1-prefix)
+            probe_order = (self._affinity_filter(origin, req, near)
+                           + [nid for _pr, nid in scored])
+            seen: set = set()
+            top2 = [nid for nid in probe_order
+                    if not (nid in seen or seen.add(nid))][:2]
             best = None
-            for _pr, nid in scored[:2]:
+            for nid in top2:
                 cand = self.nodes[nid]
                 live = self._probe_pressure(cand, req)
                 if (cand.online and live < 1.0
@@ -431,6 +443,7 @@ class Network:
                 QueuedRequest(req, enq, delegated=True,
                               origin_node=origin.id)))
             return True
+        near = self._affinity_filter(origin, req, near)
         pick_id = pos_sample_one(stakes, near, self.rng)
         if pick_id is None:
             return False
@@ -440,6 +453,27 @@ class Network:
             pick, QueuedRequest(req, enq, delegated=True,
                                 origin_node=origin.id)))
         return True
+
+    def _affinity_filter(self, origin: Node, req: Request,
+                         near: List[str]) -> List[str]:
+        """Cache-affinity tie-break (DESIGN.md §6.1-prefix): when several
+        near-tied leaders exist and the request names a shared prefix,
+        narrow the stake-weighted draw to peers whose gossip digest lists
+        that prefix's fingerprint as resident — they can serve most of the
+        prompt from cached pages.  Pressure stays the primary signal: this
+        only breaks ties, never overrides a clearly less-loaded peer, and
+        falls back to the full near-tie set when no digest advertises the
+        prefix (or affinity is disabled)."""
+        if (not self.cache_affinity or req.prefix_id is None
+                or len(near) < 2):
+            return near
+        fp = prefix_fingerprint_id(req.prefix_id)
+        warm = []
+        for nid in near:
+            d = origin.view.digest_of(nid)
+            if d is not None and fp in d.resident_prefixes:
+                warm.append(nid)
+        return warm or near
 
     def _deliver_offload(self, cand: Node, qr: QueuedRequest) -> None:
         """Delivery of an optimistically-dispatched offload (gossip

@@ -22,6 +22,20 @@ reclaimed, its request requeued at the head of the queue for a greedy-
 deterministic restart.  Greedy outputs stay bit-identical to the slot and
 wave paths while strictly more requests are resident on the same KV budget.
 
+``Engine(paged=True, prefix_cache=True)`` turns the page pool into a
+**cross-request prefix cache** (DESIGN.md §6.1-prefix): every full prompt
+page is content-addressed by a page-aligned hash chain, pages carry holder
+refcounts, and prefill skips any prefix whose chain is already resident —
+the uncached suffix is computed in one multi-token verify forward against
+the shared pages.  Divergence mid-page is a chain miss (copy-on-write at
+page granularity: the diverging request gets fresh pages from its first
+differing page).  Released cached pages go *cold* instead of free — still
+content-addressable, evicted LRU-first only when the free list is empty —
+so eviction happens strictly at refcount zero.  Greedy outputs stay
+bit-identical to a cold prefill: cached pages hold exactly the KV the
+cold forward would recompute, and the suffix forward attends to them
+through the same block-table indirection.
+
 ``Engine(spec_draft=(draft_cfg, draft_params), spec_k=k)`` layers
 **speculative decoding** (DESIGN.md §6.1-spec) on top of the paged backend:
 a small same-tokenizer draft model proposes ``k`` tokens greedily, the
@@ -44,8 +58,10 @@ benchmarks use the simulated executor instead (see DESIGN.md §6.1).
 from __future__ import annotations
 
 import time
+import zlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,8 +70,11 @@ import numpy as np
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
-from repro.sim.executor import paged_admit_ok, pages_for, quantized_pages
-from repro.sim.servicemodel import SPEC_ALPHA0, SPEC_EMA_BETA, SPEC_K
+from repro.sim.executor import (paged_admit_ok, pages_for, prefix_hit_pages,
+                                quantized_pages)
+from repro.sim.servicemodel import (PREFIX_FINGERPRINT_K,
+                                    PREFIX_HIT_EMA_BETA, SPEC_ALPHA0,
+                                    SPEC_EMA_BETA, SPEC_K)
 
 
 def _greedy_tokens(logits: "jax.Array", vocab_size: int) -> "jax.Array":
@@ -126,14 +145,21 @@ class KVHandoff:
     v: "jax.Array"
     logits: "jax.Array"           # (1, V) next-token logits
     page_size: int
+    # prefix tokens the DECODE side already holds cached and pinned
+    # (DESIGN.md §6.1-prefix): those pages are not gathered into k/v and
+    # their bytes never cross the wire.  Always a page multiple.
+    cached_tokens: int = 0
 
     @property
     def kv_bytes(self) -> int:
         """Bytes of *valid* KV crossing the wire — the sim's transfer cost
         model charges the same quantity (prompt-dominated: len(out) is 1
-        unless the prefill side raced ahead)."""
+        unless the prefill side raced ahead).  Pages the decode side holds
+        cached (``cached_tokens``) never travel, so neither end counts
+        them."""
         n_layers, _, _, n_kv, dh = self.k.shape
-        return 2 * n_layers * self.length * n_kv * dh * self.k.dtype.itemsize
+        return (2 * n_layers * (self.length - self.cached_tokens)
+                * n_kv * dh * self.k.dtype.itemsize)
 
 
 class _Slot:
@@ -155,6 +181,7 @@ class Engine:
                  continuous: bool = True,
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
                  spec_draft: Optional[Tuple[ModelConfig, Dict]] = None,
                  spec_k: int = SPEC_K) -> None:
         self.cfg = cfg
@@ -238,6 +265,26 @@ class Engine:
             # admission order, for LIFO preemption under pool pressure
             self._slot_seq = np.zeros(max_batch, np.int64)
             self._admit_seq = 0
+            # cross-request prefix caching (DESIGN.md §6.1-prefix): pages
+            # content-addressed by a page-aligned hash chain over the
+            # prompt.  The maps exist (empty) for every paged engine so the
+            # pool accounting below is uniform; lookups and registration
+            # only happen with ``prefix_cache=True``.
+            self._chain: Dict[int, int] = {}      # chain hash -> phys page
+            self._page_hash: Dict[int, int] = {}  # phys page -> chain hash
+            self._page_ref: Dict[int, int] = {}   # phys page -> holder count
+            # cold cached pages: refcount 0 but content still addressable;
+            # ordered oldest-touched first, evicted only when the free list
+            # is empty (insertion at the MRU end in _drop_page)
+            self._cold: "OrderedDict[int, None]" = OrderedDict()
+            # depth-1 chain hashes by recency — the resident-prefix
+            # fingerprint that load snapshots/digests advertise
+            self._head_lru: "OrderedDict[int, None]" = OrderedDict()
+            # rid -> pages claimed for an in-flight disagg handoff
+            self._pinned: Dict[str, List[int]] = {}
+            self.prefix_hit_rate = 0.0
+            self.prefix_hit_tokens = 0
+            self.prefix_lookup_tokens = 0
 
         # speculative decoding (DESIGN.md §6.1-spec)
         self.spec = spec_draft is not None
@@ -284,6 +331,25 @@ class Engine:
             # accepted-length distribution: spec_accept_hist[a] counts
             # verify steps that accepted exactly a of spec_k drafts
             self.spec_accept_hist = [0] * (self.spec_k + 1)
+
+        # cross-request prefix caching (DESIGN.md §6.1-prefix)
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache:
+            if not self.paged:
+                raise ValueError("prefix caching requires paged=True "
+                                 "(it shares pool pages across requests)")
+            if fam.paged_verify is None:
+                raise ValueError(
+                    "prefix caching needs a paged_verify-capable family: "
+                    "cached-suffix prefill is a multi-token verify forward")
+            if not self.spec:
+                # warm prefill reuses the speculative verify kernel: only
+                # the uncached suffix is computed, attending to the shared
+                # prefix pages through the block-table indirection (the
+                # spec engine already built this jit above)
+                self._verify = jax.jit(
+                    lambda p, c, t: fam.paged_verify(p, cfg, c, t),
+                    donate_argnums=(1,))
 
     def _pad_bucket(self, n: int) -> int:
         b = self.bucket
@@ -342,7 +408,7 @@ class Engine:
     def queued(self) -> int:
         return len(self._queue)
 
-    def load_snapshot(self) -> Dict[str, int]:
+    def load_snapshot(self) -> Dict[str, object]:
         """Occupancy counts for Executor.load() — the supported view of the
         slot/queue/page-pool bookkeeping (token counts are *remaining* work;
         this dict, not the private pool state, is the sanctioned external
@@ -355,16 +421,25 @@ class Engine:
             queued_new_tokens=sum(r.max_new for r in self._queue),
             pending_decode_tokens=sum(s.req.max_new - len(s.out)
                                       for _, s in active),
-            pages_used=0, pages_total=0, free_pages=0, page_size=0)
+            pages_used=0, pages_total=0, free_pages=0, page_size=0,
+            cached_pages=0, prefix_hit_rate=0.0, resident_prefixes=())
         if self.paged:
             usable = self._num_pages - 1
-            used = usable - len(self._free_pages)
+            cold = len(self._cold)
+            used = usable - len(self._free_pages) - cold
             snap.update(
                 pages_used=used, pages_total=usable,
-                free_pages=len(self._free_pages), page_size=self.page_size,
+                # cold cached pages are evicted on demand, so admission
+                # counts them as free (DESIGN.md §6.1-prefix)
+                free_pages=len(self._free_pages) + cold,
+                page_size=self.page_size,
                 # paged KV charges pages actually held, not reservations
                 kv_used=used * self.page_size,
-                kv_budget=usable * self.page_size)
+                kv_budget=usable * self.page_size,
+                cached_pages=cold,
+                prefix_hit_rate=self.prefix_hit_rate,
+                resident_prefixes=tuple(reversed(self._head_lru))
+                [:PREFIX_FINGERPRINT_K])
         else:
             snap.update(
                 kv_used=int(sum(self._lengths[i] + s.req.max_new - len(s.out)
@@ -484,15 +559,19 @@ class Engine:
         if not resident:
             # grow the pool while nothing is resident, so any single admitted
             # request can always run to completion (its worst-case pages fit
-            # the pool) — this is what makes LIFO preemption livelock-free
+            # the pool) — this is what makes LIFO preemption livelock-free.
+            # Growth reallocates every page, so it also forgets the prefix
+            # cache and is deferred while handoff pins hold page content.
             needed = max(self._pages(self._required(r))
                          for r in self._queue[:self.max_batch])
-            if self._pools is None or needed > usable:
+            if (self._pools is None or needed > usable) \
+                    and not self._pinned:
                 self._num_pages = max(self._num_pages, needed + 1)
                 usable = self._num_pages - 1
                 self._pools = None
                 self._logits = None
                 self._free_pages = list(range(1, self._num_pages))
+                self._flush_prefix_cache()
             if self.spec:
                 # the draft cache is allocation-static under jit too: grow
                 # it at the same idle points as the pool
@@ -503,20 +582,31 @@ class Engine:
                     self._draft_capacity = max(self._draft_capacity, dneeded)
                     self._draft_cache = None
         free_slots = [i for i, s in enumerate(self._slots) if s is None]
-        free_now = len(self._free_pages)
+        # cold cached pages are evictable on demand, so they count as free —
+        # but a cold page a taken request will *share* stops being evictable
+        # (it revives to refcount 1), so it costs headroom exactly once
+        free_now = len(self._free_pages) + len(self._cold)
+        cold_reserved: set = set()
         take: List[Tuple[int, GenRequest]] = []
         rest: List[GenRequest] = []
         taking = resident
         for r in self._queue:
-            need = self._pages(len(r.tokens))
-            if (free_slots and need <= free_now
+            hit_pages = (self._prefix_lookup_pages(r.tokens)
+                         if self.prefix_cache else [])
+            cold_cost = sum(1 for pg in hit_pages
+                            if pg in self._cold and pg not in cold_reserved)
+            suffix_tokens = len(r.tokens) - len(hit_pages) * self.page_size
+            need = self._pages(suffix_tokens)
+            if (free_slots and need + cold_cost <= free_now
                     and self._pages(self._required(r)) <= usable
                     and (not self.spec
                          or self._draft_required(r) <= self._draft_capacity)
-                    and paged_admit_ok(free_now, len(r.tokens),
+                    and paged_admit_ok(free_now - cold_cost, suffix_tokens,
                                        self.page_size, resident=taking)):
                 take.append((free_slots.pop(0), r))
-                free_now -= need
+                free_now -= need + cold_cost
+                cold_reserved.update(pg for pg in hit_pages
+                                     if pg in self._cold)
                 taking = True
             else:
                 rest.append(r)
@@ -557,22 +647,31 @@ class Engine:
         return min(w, self._maxp)
 
     def _prefill_paged(self, take: List[Tuple[int, GenRequest]]) -> None:
-        """Right-padded prompt prefill, then scatter the contiguous KV into
-        freshly allocated pool pages (pad-tail pages alias the scratch page
-        0, which per-row lengths keep inert)."""
-        n = len(take)
-        plen = self._pad_bucket(max(len(r.tokens) for _, r in take))
-        plen = -(-plen // self.page_size) * self.page_size  # page multiple
-        toks = np.full((n, plen), self.eos_id, np.int32)
-        last = np.zeros(n, np.int32)
-        phys = np.zeros((n, plen // self.page_size), np.int32)
-        for j, (i, r) in enumerate(take):
-            toks[j, : len(r.tokens)] = r.tokens      # right-pad (inert)
-            last[j] = len(r.tokens) - 1
-            pages = [self._free_pages.pop() for _ in
-                     range(self._pages(len(r.tokens)))]
+        """Prefill admitted rows into pool pages.  Rows with no cached
+        prefix take the cold path (right-padded contiguous prefill, then a
+        page scatter; pad-tail pages alias the scratch page 0, which
+        per-row lengths keep inert).  With prefix caching, rows whose
+        prompt head is already chain-resident pin the shared pages and
+        compute only the uncached suffix via one multi-token verify
+        forward (DESIGN.md §6.1-prefix)."""
+        ps = self.page_size
+        # All acquires happen before any register: rows admitted in the same
+        # batch never share each other's fresh pages.  Allowing it would let
+        # a warm row attend into pages another row is still writing inside
+        # the same verify forward — sharing is cross-batch only.
+        shared: Dict[int, List[int]] = {}
+        for i, r in take:
+            shared[i] = (self._prefix_acquire(np.asarray(r.tokens, np.int32))
+                         if self.prefix_cache else [])
+        for i, r in take:
+            hits = len(shared[i])
+            fresh = [self._claim_page()
+                     for _ in range(self._pages(len(r.tokens)) - hits)]
+            if self.prefix_cache:
+                self._prefix_register(np.asarray(r.tokens, np.int32),
+                                      hits, fresh)
+            pages = shared[i] + fresh
             self._row_pages[i] = pages
-            phys[j, : len(pages)] = pages
             self._block_tables[i, :] = 0
             self._block_tables[i, : len(pages)] = pages
             self._slots[i] = _Slot(r)
@@ -580,18 +679,55 @@ class Engine:
             self._slot_seq[i] = self._admit_seq
             self._admit_seq += 1
         self._tables_dirty = True
+        cold = [(i, r) for i, r in take if not shared[i]]
+        warm = [(i, r) for i, r in take if shared[i]]
+        if cold:
+            self._prefill_cold(cold)
+        if warm:
+            self._prefill_warm(warm, {i: len(shared[i]) for i, _ in warm})
+        now = time.perf_counter()       # started_at matches the slot path:
+        for _, r in take:               # stamped after prefill completes
+            r.started_at = now
+        self.stats.batches += 1
+        self.stats.peak_resident = max(self.stats.peak_resident,
+                                       self.active_slots())
+        if self.prefix_cache:
+            for i, r in take:
+                cached = len(shared[i]) * ps
+                p = max(1, len(r.tokens))
+                self.prefix_lookup_tokens += p
+                self.prefix_hit_tokens += cached
+                self.prefix_hit_rate += PREFIX_HIT_EMA_BETA * (
+                    cached / p - self.prefix_hit_rate)
+        if self.spec:
+            plen = self._pad_bucket(max(len(r.tokens) for _, r in take))
+            plen = -(-plen // ps) * ps
+            toks = np.full((len(take), plen), self.eos_id, np.int32)
+            last = np.zeros(len(take), np.int32)
+            for j, (_, r) in enumerate(take):
+                toks[j, : len(r.tokens)] = r.tokens
+                last[j] = len(r.tokens) - 1
+            self._spec_prefill_draft(take, toks, last)
+
+    def _prefill_cold(self, cold: List[Tuple[int, GenRequest]]) -> None:
+        """Right-padded prompt prefill, then scatter the contiguous KV into
+        the rows' already-allocated pool pages."""
+        n = len(cold)
+        plen = self._pad_bucket(max(len(r.tokens) for _, r in cold))
+        plen = -(-plen // self.page_size) * self.page_size  # page multiple
+        toks = np.full((n, plen), self.eos_id, np.int32)
+        last = np.zeros(n, np.int32)
+        phys = np.zeros((n, plen // self.page_size), np.int32)
+        for j, (i, r) in enumerate(cold):
+            toks[j, : len(r.tokens)] = r.tokens      # right-pad (inert)
+            last[j] = len(r.tokens) - 1
+            phys[j, : len(self._row_pages[i])] = self._row_pages[i]
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
                                       plen, jnp.asarray(last))
         logits.block_until_ready()
         self.stats.prefill_wall_s += time.perf_counter() - t0
-        now = time.perf_counter()       # started_at matches the slot path:
-        for _, r in take:               # stamped after prefill completes
-            r.started_at = now
         self.stats.prefill_tokens += plen * n
-        self.stats.batches += 1
-        self.stats.peak_resident = max(self.stats.peak_resident,
-                                       self.active_slots())
         kv = {k: v for k, v in cache.items() if k != "length"}
         if self._pools is None:
             self._pools = self._init_pools(self.cfg, self._num_pages,
@@ -599,10 +735,232 @@ class Engine:
             self._logits = jnp.zeros((self.max_batch, 1, logits.shape[-1]),
                                      logits.dtype)
         self._pools = self._scatter_pages(self._pools, kv, jnp.asarray(phys))
-        rows = jnp.asarray([i for i, _ in take])
+        rows = jnp.asarray([i for i, _ in cold])
         self._logits = self._logits.at[rows].set(logits)
-        if self.spec:
-            self._spec_prefill_draft(take, toks, last)
+
+    def _prefill_warm(self, warm: List[Tuple[int, GenRequest]],
+                      hits: Dict[int, int]) -> None:
+        """Cached-suffix prefill (DESIGN.md §6.1-prefix): warm rows enter
+        with ``_lengths`` temporarily set to their cached token count, and
+        ONE batched multi-token verify forward computes the uncached
+        suffix attending to the shared prefix pages — same kernel, same
+        rider semantics as a speculative verify: non-warm rows' inert
+        writes land on the scratch page or beyond their valid length, and
+        their carried logits are untouched."""
+        ps = self.page_size
+        assert self._pools is not None   # a chain hit implies prior prefills
+        suf_lens = {i: len(r.tokens) - hits[i] * ps for i, r in warm}
+        S = -(-max(suf_lens.values()) // ps) * ps    # page-rounded jit width
+        toks = np.full((self.max_batch, S), self.eos_id, np.int32)
+        for i, r in warm:
+            toks[i, : suf_lens[i]] = np.asarray(r.tokens[hits[i] * ps:],
+                                                np.int32)
+            self._lengths[i] = hits[i] * ps  # valid tokens = cached prefix
+        # every rider row (including cold rows prefilled this round) writes
+        # at lengths + j for j < S; the table must be wide enough that
+        # those lookups hit a zero entry -> scratch, never a real page
+        need_w = max((int(self._lengths[i]) + S - 1) // ps + 1
+                     for i, s in enumerate(self._slots) if s is not None)
+        self._grow_block_tables(need_w)
+        w = self._table_width(lookahead=S)
+        cache = {**self._pools,
+                 "block_tables": jnp.asarray(self._block_tables[:, :w]),
+                 "lengths": jnp.asarray(self._lengths, jnp.int32)}
+        t0 = time.perf_counter()
+        vlogits, cache = self._verify(self.params, cache, jnp.asarray(toks))
+        vlogits.block_until_ready()
+        self.stats.prefill_wall_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += S * len(warm)
+        self._pools = {n: cache[n] for n in self._pool_names}
+        self._tables_dirty = True
+        rows = jnp.asarray([i for i, _ in warm])
+        pos = jnp.asarray([suf_lens[i] - 1 for i, _ in warm])
+        self._logits = self._logits.at[rows].set(vlogits[rows, pos][:, None])
+        for i, r in warm:
+            self._lengths[i] = len(r.tokens)
+
+    # ------------------------------------------------- prefix cache internals
+    # (DESIGN.md §6.1-prefix) — content-addressed pages with holder
+    # refcounts; the chain, cold LRU, and free list partition the pool.
+
+    def _chain_hashes(self, tokens: np.ndarray) -> List[int]:
+        """Cumulative page-aligned content hashes over the prompt's full
+        pages: ``h_i = crc32(page_i, h_{i-1})``.  A prefix match is a
+        chain walk, so two prompts share pages exactly up to their first
+        differing page — copy-on-write at page granularity (a mid-page
+        divergence is a miss at that depth, never a partial-page share)."""
+        arr = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        ps = self.page_size
+        out: List[int] = []
+        h = 0
+        for i in range(len(arr) // ps):
+            h = zlib.crc32(arr[i * ps:(i + 1) * ps].tobytes(), h)
+            out.append(h)
+        return out
+
+    def _prefix_lookup_pages(self, tokens: np.ndarray) -> List[int]:
+        """Dry chain walk: the cached pages a prompt would reuse, capped by
+        the shared hit rule (no refcounts move — ``_prefix_acquire`` claims
+        at prefill time)."""
+        hashes = self._chain_hashes(np.asarray(tokens, np.int32))
+        matched = 0
+        for h in hashes:
+            if h not in self._chain:
+                break
+            matched += 1
+        hits = prefix_hit_pages(len(tokens), self.page_size,
+                                matched * self.page_size)
+        return [self._chain[h] for h in hashes[:hits]]
+
+    def _prefix_acquire(self, tokens: np.ndarray) -> List[int]:
+        """Claim the cached prefix pages for a row about to prefill: bump
+        holder refcounts (reviving cold pages out of the eviction LRU) and
+        return them in chain order, capped by the shared hit rule."""
+        hashes = self._chain_hashes(tokens)
+        matched = 0
+        for h in hashes:
+            if h not in self._chain:
+                break
+            matched += 1
+        hits = prefix_hit_pages(len(tokens), self.page_size,
+                                matched * self.page_size)
+        pages: List[int] = []
+        for h in hashes[:hits]:
+            pg = self._chain[h]
+            if pg in self._cold:
+                del self._cold[pg]
+            self._page_ref[pg] = self._page_ref.get(pg, 0) + 1
+            pages.append(pg)
+        if pages and hashes[0] in self._head_lru:
+            self._head_lru.move_to_end(hashes[0])
+        return pages
+
+    def _prefix_register(self, tokens: np.ndarray, hits: int,
+                         fresh: List[int]) -> None:
+        """Enter a row's freshly computed FULL prompt pages into the
+        content chain so later requests can share them.  Partial tail
+        pages stay private (decode keeps writing into them), as does any
+        page whose chain hash is already taken by another physical page
+        (first writer wins; the duplicate stays an unshared holder)."""
+        hashes = self._chain_hashes(tokens)
+        if hits and hashes[0] in self._head_lru:
+            self._head_lru.move_to_end(hashes[0])
+        for j in range(hits, len(hashes)):
+            h = hashes[j]
+            pg = fresh[j - hits]
+            if h in self._chain or pg in self._page_hash:
+                continue
+            self._chain[h] = pg
+            self._page_hash[pg] = h
+            if j == 0:
+                self._head_lru[h] = None
+                self._head_lru.move_to_end(h)
+
+    def _claim_page(self) -> int:
+        """One page for a row to hold: the free list first, then evict the
+        LRU cold cached page (cold pages have refcount 0 by construction —
+        warm pages are never eviction candidates)."""
+        if self._free_pages:
+            pg = self._free_pages.pop()
+        else:
+            pg, _ = self._cold.popitem(last=False)
+            self._evict_entry(pg)
+        if self.prefix_cache:
+            self._page_ref[pg] = 1
+        return pg
+
+    def _evict_entry(self, pg: int) -> None:
+        h = self._page_hash.pop(pg, None)
+        if h is not None:
+            self._chain.pop(h, None)
+            self._head_lru.pop(h, None)
+
+    def _drop_page(self, pg: int) -> None:
+        """One holder lets go of a page.  Refcounted pages go *cold* at
+        zero holders when chain-registered — still content-addressable,
+        LRU-evictable — else back to the free list; unrefcounted pages
+        (prefix cache off) free directly."""
+        ref = self._page_ref.get(pg)
+        if ref is None:
+            self._free_pages.append(pg)
+            return
+        if ref > 1:
+            self._page_ref[pg] = ref - 1
+            return
+        del self._page_ref[pg]
+        if pg in self._page_hash:
+            self._cold[pg] = None           # lands at the MRU end
+        else:
+            self._free_pages.append(pg)
+
+    def _flush_prefix_cache(self) -> None:
+        """Pool reallocation invalidates every page's content: forget the
+        chain and the cold set (callers reset the free list)."""
+        self._chain.clear()
+        self._page_hash.clear()
+        self._page_ref.clear()
+        self._cold.clear()
+        self._head_lru.clear()
+
+    def debug_page_accounting(self) -> Dict[str, int]:
+        """Reconcile the free list, cold cache, refcounts, and row/pin
+        holdings (the §6.1-prefix conservation invariant, exercised by the
+        churn tests): every usable page is exactly one of free, cold, or
+        held; shared pages are counted once; per-page refcounts equal the
+        number of holders."""
+        assert self.paged
+        usable = self._num_pages - 1
+        free = set(self._free_pages)
+        cold = set(self._cold)
+        held: Dict[int, int] = {}
+        for pages in self._row_pages:
+            for pg in pages:
+                held[pg] = held.get(pg, 0) + 1
+        for pages in self._pinned.values():
+            for pg in pages:
+                held[pg] = held.get(pg, 0) + 1
+        assert len(free) == len(self._free_pages), "free list has duplicates"
+        assert not free & cold, "page both free and cold-cached"
+        assert not free & set(held), "page both free and row-held"
+        assert not cold & set(held), "page both cold and row-held"
+        for pg, n in held.items():
+            ref = self._page_ref.get(pg)
+            if ref is not None:
+                assert ref == n, f"page {pg}: refcount {ref} != holders {n}"
+            else:
+                assert n == 1, f"untracked page {pg} shared by {n} holders"
+        every = free | cold | set(held)
+        assert every <= set(range(1, usable + 1)), "page id out of range"
+        assert len(free) + len(cold) + len(held) == usable, (
+            f"page leak/double-free: {len(free)} free + {len(cold)} cold "
+            f"+ {len(held)} held != {usable} usable")
+        return {"free": len(free), "cold": len(cold), "held": len(held)}
+
+    def prefix_pin(self, req: GenRequest) -> int:
+        """Decode-side cache consultation for a disagg handoff (DESIGN.md
+        §6.1-prefix): walk the chain for ``req``'s prompt, claim the
+        matched pages NOW (so they cannot be evicted while the handoff is
+        on the wire), remember them under the request id, and return the
+        cached token count — the prefill side then neither gathers nor
+        byte-counts those pages.  Returns 0 when caching is off, the pool
+        is unallocated, the request is already pinned, or it would force a
+        pool growth (growth reallocates every page, which would strand the
+        pin)."""
+        if (not self.prefix_cache or self._pools is None
+                or req.rid in self._pinned
+                or self._pages(self._required(req)) > self._num_pages - 1):
+            return 0
+        pages = self._prefix_acquire(np.asarray(req.tokens, np.int32))
+        p = max(1, len(req.tokens))
+        cached = len(pages) * self.page_size
+        self.prefix_lookup_tokens += p
+        self.prefix_hit_tokens += cached
+        self.prefix_hit_rate += PREFIX_HIT_EMA_BETA * (
+            cached / p - self.prefix_hit_rate)
+        if not pages:
+            return 0
+        self._pinned[req.rid] = pages
+        return cached
 
     def _spec_prefill_draft(self, take: List[Tuple[int, GenRequest]],
                             toks: np.ndarray, last: np.ndarray) -> None:
@@ -630,7 +988,8 @@ class Engine:
 
     # ----------------------------------------------------- page pool dynamics
     def _release_pages(self, i: int) -> None:
-        self._free_pages.extend(self._row_pages[i])
+        for pg in self._row_pages[i]:
+            self._drop_page(pg)
         self._row_pages[i] = []
         self._block_tables[i, :] = 0
         self._tables_dirty = True
@@ -673,8 +1032,8 @@ class Engine:
             while (self._slots[i] is not None
                    and (self._lengths[i] + lookahead - 1) // self.page_size
                    >= len(self._row_pages[i])):
-                if self._free_pages:
-                    pg = self._free_pages.pop()
+                if self._free_pages or self._cold:
+                    pg = self._claim_page()
                     self._row_pages[i].append(pg)
                     idx = len(self._row_pages[i]) - 1
                     self._grow_block_tables(idx + 1)
@@ -691,7 +1050,8 @@ class Engine:
     # (DESIGN.md §6.1-disagg) — both ends live here because the page pool,
     # block tables, and free list are private to the engine (grep-guarded).
 
-    def extract_handoffs(self) -> List[KVHandoff]:
+    def extract_handoffs(self, cached_tokens_fn: Optional[
+            Callable[[GenRequest], int]] = None) -> List[KVHandoff]:
         """Disagg prefill side: pop every resident row that has sampled at
         least one token as a ``KVHandoff`` and release its local pages.
 
@@ -701,6 +1061,12 @@ class Engine:
         prefill engine's pool only ever holds prompts mid-prefill.  The
         gathered ``k``/``v`` are copies, which is what the simulated
         transfer cost model charges for.
+
+        ``cached_tokens_fn`` is the decode side's ``prefix_pin`` (DESIGN.md
+        §6.1-prefix): it returns how many prompt tokens the decode engine
+        already holds cached (a page multiple, pinned against eviction);
+        those leading pages are neither gathered nor counted in
+        ``handoff_bytes`` on either end.
         """
         assert self.paged, "KV handoff requires the paged backend"
         assert not self.spec, "KV handoff and speculative decoding are " \
@@ -711,12 +1077,15 @@ class Engine:
         for i, s in enumerate(self._slots):
             if s is None or not s.out:
                 continue
-            pages = jnp.asarray(self._row_pages[i], jnp.int32)
+            cached = int(cached_tokens_fn(s.req)) if cached_tokens_fn else 0
+            pages = jnp.asarray(
+                self._row_pages[i][cached // self.page_size:], jnp.int32)
             h = KVHandoff(
                 req=s.req, out=list(s.out), length=int(self._lengths[i]),
                 k=self._pools["k_pool"][:, pages],
                 v=self._pools["v_pool"][:, pages],
-                logits=self._logits[i], page_size=self.page_size)
+                logits=self._logits[i], page_size=self.page_size,
+                cached_tokens=cached)
             self._release_pages(i)
             self._slots[i] = None
             self._lengths[i] = 0
@@ -746,29 +1115,48 @@ class Engine:
         worst = self._pages(self._required(h.req))
         if not resident:
             # grow the pool while nothing is resident (mirror _admit_paged)
-            # so any single accepted handoff can always run to completion
-            if self._pools is None or worst > usable:
+            # so any single accepted handoff can always run to completion —
+            # deferred while handoff pins hold page content, since growth
+            # reallocates every page and forgets the prefix cache
+            if (self._pools is None or worst > usable) \
+                    and not self._pinned:
                 self._num_pages = max(self._num_pages, worst + 1)
                 usable = self._num_pages - 1
                 self._pools = None
                 self._logits = None
                 self._free_pages = list(range(1, self._num_pages))
-        elif worst > usable:
+                self._flush_prefix_cache()
+        if worst > usable:
             return False               # can never fit: wait for drain+growth
+        pinned = self._pinned.get(h.req.rid, [])
+        assert len(pinned) * self.page_size == h.cached_tokens, \
+            "handoff was sliced against a pin this engine no longer holds"
         need = pages_for(h.length, self.page_size)
-        if need > len(self._free_pages):
-            return False
+        fresh_need = need - len(pinned)
+        if fresh_need > len(self._free_pages) + len(self._cold):
+            return False               # keep the pin; caller retries
+        self._pinned.pop(h.req.rid, None)
         if self._pools is None:
             self._pools = self._init_pools(self.cfg, self._num_pages,
                                            self.page_size)
             self._logits = jnp.zeros(
                 (self.max_batch, 1, h.logits.shape[-1]), h.logits.dtype)
         i = free_slots[0]
-        pages = [self._free_pages.pop() for _ in range(need)]
-        phys = jnp.asarray(pages, jnp.int32)
-        self._pools = {
-            "k_pool": self._pools["k_pool"].at[:, phys].set(h.k[:, :need]),
-            "v_pool": self._pools["v_pool"].at[:, phys].set(h.v[:, :need])}
+        fresh = [self._claim_page() for _ in range(fresh_need)]
+        if fresh:
+            phys = jnp.asarray(fresh, jnp.int32)
+            self._pools = {
+                "k_pool": self._pools["k_pool"].at[:, phys].set(
+                    h.k[:, :fresh_need]),
+                "v_pool": self._pools["v_pool"].at[:, phys].set(
+                    h.v[:, :fresh_need])}
+        pages = pinned + fresh
+        if self.prefix_cache:
+            # the transported full prompt pages are now valid content:
+            # register them so later requests (and later handoffs, via
+            # prefix_pin) can share them
+            self._prefix_register(np.asarray(h.req.tokens, np.int32),
+                                  len(pinned), fresh)
         self._grow_block_tables(max(need, worst))
         self._row_pages[i] = pages
         self._block_tables[i, :] = 0

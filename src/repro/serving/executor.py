@@ -113,7 +113,9 @@ class EngineExecutor(Executor):
             kv_budget=snap["kv_budget"],
             pages_used=snap["pages_used"],
             pages_total=snap["pages_total"],
-            handoff_bytes=self.engine.stats.handoff_bytes)
+            handoff_bytes=self.engine.stats.handoff_bytes,
+            cache_hit_rate=float(snap["prefix_hit_rate"]),
+            resident_prefixes=tuple(snap["resident_prefixes"]))
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         """Expected service seconds from the engine's measured prefill and
@@ -267,7 +269,11 @@ class DisaggEngineExecutor(Executor):
             pages_used=ds["pages_used"], pages_total=ds["pages_total"],
             prefill_kv_used=ps["kv_used"], prefill_kv_budget=ps["kv_budget"],
             transfer_inflight=len(self._pending),
-            handoff_bytes=self.prefill.stats.handoff_bytes)
+            handoff_bytes=self.prefill.stats.handoff_bytes,
+            # the decode pool is where KV lives long-term, so its cache is
+            # what affinity routing should chase (DESIGN.md §6.1-prefix)
+            cache_hit_rate=float(ds["prefix_hit_rate"]),
+            resident_prefixes=tuple(ds["resident_prefixes"]))
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         """Phase-split estimate: prompt at the prefill engine's measured
@@ -314,7 +320,12 @@ class DisaggEngineExecutor(Executor):
         finished: List[GenRequest] = []
         if self.prefill.has_work():
             finished.extend(self.prefill.step())   # may finish on prefill
-        self._pending.extend(self.prefill.extract_handoffs())
+        # the decode engine's prefix_pin tells the extract which leading
+        # pages it already holds cached (DESIGN.md §6.1-prefix): those are
+        # pinned against eviction, skipped by the gather, and excluded
+        # from both ends' handoff_bytes
+        self._pending.extend(
+            self.prefill.extract_handoffs(self.decode.prefix_pin))
         if self.decode.has_work():
             finished.extend(self.decode.step())    # overlaps pending copies
         while self._pending and self.decode.accept_handoff(self._pending[0]):

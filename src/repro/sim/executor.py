@@ -49,7 +49,12 @@ Backends in this module:
   shared with the real paged engine (``paged_admit_ok``): prompt pages
   must fit the free pool, decode pages accrue with generation progress.
   The sim does not model preemption — transient over-occupancy simply
-  shows up as zero page headroom.
+  shows up as zero page headroom.  With ``prefix_cache`` additionally
+  set, admission consults the shared hit rule (``prefix_hit_pages``,
+  DESIGN.md §6.1-prefix): a request whose ``prefix_id`` is resident in
+  the node's prefix LRU skips that many pages of prefill work, and the
+  load snapshot reports ``cache_hit_rate``/``resident_prefixes`` so
+  dispatch can route toward warm caches.
 * ``SpecTokenBucketExecutor``  — simulated speculative decoding (DESIGN.md
   §6.1-spec): same admission as the plain bucket, but decode throughput is
   scaled by the analytic acceptance model
@@ -77,13 +82,16 @@ keeps frozen-share scheduling from creeping back in.
 from __future__ import annotations
 
 import math
+import zlib
 from abc import ABC, abstractmethod
+from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 from repro.sim.events import EventLoop
 from repro.sim.servicemodel import (DIGEST_STALENESS_TAU_S,
                                     KV_BYTES_PER_TOKEN, KV_TOKENS_PER_STREAM,
+                                    PREFIX_FINGERPRINT_K, PREFIX_HIT_EMA_BETA,
                                     SPEC_ALPHA0, SPEC_K, SPEC_OVERHEAD,
                                     TRANSFER_BASE_S, TRANSFER_BYTES_PER_S,
                                     BackendProfile)
@@ -123,6 +131,31 @@ def quantized_pages(num_pages: int, quantized: bool) -> int:
     values) is treated as overhead, not metered capacity.
     """
     return int(num_pages) * 2 if quantized else int(num_pages)
+
+
+def prefix_hit_pages(prompt_tokens: int, page_size: int,
+                     matched_tokens: int) -> int:
+    """THE prefix-cache hit rule, shared by the simulated and real backends
+    (DESIGN.md §6.1-prefix): a page-aligned hash-chain lookup that matched
+    ``matched_tokens`` of the prompt reuses that many *full* pages from the
+    cache.  The prompt's final page is always recomputed — its fresh forward
+    is what produces the first-token logits — so hits are capped at
+    ``pages_for(prompt) - 1`` and the recomputed suffix is never empty.
+    Partial pages never share (copy-on-write happens at page granularity:
+    a mid-page divergence is simply a hash miss at that chain depth).
+    """
+    ps = max(1, int(page_size))
+    full = max(0, int(matched_tokens)) // ps
+    return max(0, min(full, pages_for(prompt_tokens, ps) - 1))
+
+
+def prefix_fingerprint_id(prefix_id: str) -> int:
+    """Stable 32-bit identity of a named shared prefix — what a
+    ``LoadDigest.resident_prefixes`` fingerprint carries and what
+    cache-affinity dispatch (DESIGN.md §6.1-prefix) compares a request's
+    ``prefix_id`` against; kept checksum-cheap because routing computes it
+    per dispatch decision."""
+    return zlib.crc32(str(prefix_id).encode("utf-8"))
 
 
 def spec_expected_tokens(alpha: float, k: int) -> float:
@@ -179,6 +212,14 @@ class ExecutorLoad:
     # acceptance rate alpha and depth k.  1.0 for non-speculative backends,
     # so dispatch can divide decode pressure by it unconditionally.
     expected_tokens_per_step: float = 1.0
+    # prefix-caching backends (DESIGN.md §6.1-prefix): EMA of the fraction
+    # of admitted prompt tokens served from the page cache, plus a
+    # fingerprint of up to PREFIX_FINGERPRINT_K resident prefix identities
+    # (prefix_fingerprint_id values, most recently touched first) so
+    # cache-affinity dispatch can break near-ties toward the node already
+    # holding a request's prefix.  0.0/() for cache-less backends.
+    cache_hit_rate: float = 0.0
+    resident_prefixes: Tuple[int, ...] = ()
 
     @property
     def kv_headroom(self) -> float:
@@ -238,6 +279,12 @@ class LoadDigest:
     pending_decode_tokens: int
     expected_tokens_per_step: float
     handoff_bytes: int
+    # prefix caching (DESIGN.md §6.1-prefix): the hit-rate EMA and the
+    # resident-prefix fingerprint travel with every digest, so a remote
+    # router knows where a request's prefix is already warm without any
+    # extra gossip traffic (the digest already piggybacks on heartbeats).
+    cache_hit_rate: float = 0.0
+    resident_prefixes: Tuple[int, ...] = ()
 
 
 def make_load_digest(load: ExecutorLoad, now: float) -> LoadDigest:
@@ -250,6 +297,8 @@ def make_load_digest(load: ExecutorLoad, now: float) -> LoadDigest:
         pending_decode_tokens=load.pending_decode_tokens,
         expected_tokens_per_step=load.expected_tokens_per_step,
         handoff_bytes=load.handoff_bytes,
+        cache_hit_rate=load.cache_hit_rate,
+        resident_prefixes=load.resident_prefixes,
     )
 
 
@@ -304,11 +353,15 @@ class _Stream:
                  "output_total", "kv_tokens", "decoding", "started_at",
                  "first_token_at")
 
-    def __init__(self, item: Any, prompt: int, output: int, now: float) -> None:
+    def __init__(self, item: Any, prompt: int, output: int, now: float,
+                 cached_tokens: int = 0) -> None:
         self.item = item
         self.prompt_total = max(1, prompt)
         self.output_total = max(1, output)
-        self.prompt_left = float(self.prompt_total)
+        # prefix-cache hits (DESIGN.md §6.1-prefix) skip prefill *work* for
+        # the cached pages; the stream still holds its full prompt's pages
+        # (tokens_held charges prompt_total), so only latency changes.
+        self.prompt_left = float(max(1, self.prompt_total - cached_tokens))
         self.output_left = float(self.output_total)
         self.kv_tokens = self.prompt_total + self.output_total
         self.decoding = False
@@ -337,7 +390,8 @@ class TokenBucketExecutor(Executor):
 
     def __init__(self, profile: BackendProfile,
                  page_size: Optional[int] = None,
-                 kv_quant: bool = False) -> None:
+                 kv_quant: bool = False,
+                 prefix_cache: bool = False) -> None:
         self.profile = profile
         self.kv_budget = int(getattr(profile, "kv_token_budget", 0)
                              or profile.max_concurrency * KV_TOKENS_PER_STREAM)
@@ -353,6 +407,19 @@ class TokenBucketExecutor(Executor):
         self.pages_total = (quantized_pages(self.kv_budget // page_size,
                                             self.kv_quant)
                             if page_size else 0)
+        # cross-request prefix caching twin (DESIGN.md §6.1-prefix): the sim
+        # models the *latency* effect — a request whose ``prefix_id`` is
+        # resident skips ``prefix_hit_pages`` pages of prefill work — plus
+        # the hit-rate EMA and resident-prefix fingerprint that routing
+        # reads.  Page-pool *sharing* itself is not modeled: holdings stay
+        # fully charged, so admission is conservative vs the real engine.
+        # The cache is the fingerprint: an LRU of at most
+        # PREFIX_FINGERPRINT_K prefix ids -> shared-prefix token length.
+        self.prefix_cache = bool(prefix_cache) and page_size is not None
+        self._prefix_lru: "OrderedDict[str, int]" = OrderedDict()
+        self.prefix_hit_rate = 0.0
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
         self._streams: List[_Stream] = []
         self._last_t = 0.0
         self._pending_ev = None
@@ -384,10 +451,35 @@ class TokenBucketExecutor(Executor):
             if self._streams and used + kv > self.kv_budget:
                 return False
         self._advance()
+        cached = self._prefix_lookup(qr.req) if self.prefix_cache else 0
         self._streams.append(_Stream(qr, qr.req.prompt_tokens,
-                                     qr.req.output_tokens, self._loop.now))
+                                     qr.req.output_tokens, self._loop.now,
+                                     cached_tokens=cached))
         self._reschedule()
         return True
+
+    def _prefix_lookup(self, req: Any) -> int:
+        """Sim twin of the engine's hash-chain lookup (DESIGN.md
+        §6.1-prefix): cached tokens for ``req``, updating the LRU, the
+        hit-rate EMA, and the cumulative hit/lookup token counters."""
+        prompt = max(1, int(req.prompt_tokens))
+        pid = getattr(req, "prefix_id", None)
+        cached = 0
+        if pid is not None:
+            shared = max(0, int(getattr(req, "prefix_tokens", 0)))
+            matched = min(self._prefix_lru.get(pid, 0), shared)
+            cached = prefix_hit_pages(prompt, self.page_size,
+                                      matched) * self.page_size
+            # after this prefill the request's own shared prefix is resident
+            self._prefix_lru[pid] = max(self._prefix_lru.get(pid, 0), shared)
+            self._prefix_lru.move_to_end(pid)
+            while len(self._prefix_lru) > PREFIX_FINGERPRINT_K:
+                self._prefix_lru.popitem(last=False)
+        self.prefix_lookup_tokens += prompt
+        self.prefix_hit_tokens += cached
+        self.prefix_hit_rate += PREFIX_HIT_EMA_BETA * (cached / prompt
+                                                       - self.prefix_hit_rate)
+        return cached
 
     def load(self) -> ExecutorLoad:
         self._advance()
@@ -410,7 +502,12 @@ class TokenBucketExecutor(Executor):
             kv_used=kv_used,
             kv_budget=kv_budget,
             pages_used=pages_used,
-            pages_total=self.pages_total)
+            pages_total=self.pages_total,
+            cache_hit_rate=self.prefix_hit_rate if self.prefix_cache else 0.0,
+            resident_prefixes=tuple(
+                prefix_fingerprint_id(pid)
+                for pid in reversed(self._prefix_lru))
+            if self.prefix_cache else ())
 
     def estimate(self, prompt_tokens: int, output_tokens: int) -> float:
         return self.profile.service_time(prompt_tokens, output_tokens,

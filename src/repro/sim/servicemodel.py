@@ -74,6 +74,18 @@ DIGEST_PRESSURE_PRIOR = 0.5
 # separate the top two candidates and routing falls back to live probes.
 DIGEST_TIE_EPS = 0.05
 
+# --- cross-request prefix caching (DESIGN.md §6.1-prefix) -------------------
+# EMA step for the executor's online cache-hit-rate estimate: per admitted
+# request, hit_rate <- (1 - beta) * hit_rate + beta * (cached / prompt).
+# Seeds at 0.0 (a fresh pool has nothing cached), so sim and engine agree
+# until observations move it — same pattern as SPEC_ALPHA0 below.
+PREFIX_HIT_EMA_BETA = 0.2
+# Resident-prefix fingerprint width: a load digest advertises up to this many
+# distinct prefix identities (most recently touched first) for cache-affinity
+# dispatch, and the simulated executor's prefix cache retains this many
+# distinct prefixes (LRU beyond it) so the fingerprint IS the sim cache.
+PREFIX_FINGERPRINT_K = 8
+
 # --- speculative decoding (DESIGN.md §6.1-spec) -----------------------------
 # Default draft depth: k draft tokens verified per target forward.
 SPEC_K = 4

@@ -23,6 +23,12 @@ class Request:
     output_tokens: int
     slo_s: float           # latency threshold for SLO attainment
     is_duel_extra: bool = False   # challenger / judge traffic (excluded from SLO)
+    # cross-request prefix caching (DESIGN.md §6.1-prefix): requests from the
+    # same application share a system prompt — ``prefix_id`` names it and
+    # ``prefix_tokens`` is the shared-prefix length (<= prompt_tokens).
+    # ``None`` means the whole prompt is unique.
+    prefix_id: Optional[str] = None
+    prefix_tokens: int = 0
 
 
 @dataclass(frozen=True)
@@ -69,6 +75,40 @@ def make_requests(specs: Sequence[WorkloadSpec], seed: int) -> List[Request]:
                 rid=f"{spec.node_id}-r{i}", origin=spec.node_id, arrival=t,
                 prompt_tokens=p, output_tokens=o, slo_s=spec.slo_s))
     reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+def make_zipf_prefix_requests(n: int, node_ids: Sequence[str], seed: int, *,
+                              n_prefixes: int = 8, zipf_a: float = 1.3,
+                              prefix_tokens: int = 256, suffix_mean: int = 32,
+                              mean_interarrival: float = 0.5,
+                              output_mean: int = 64,
+                              slo_s: float = 60.0) -> List[Request]:
+    """Zipf-shared-prefix workload (DESIGN.md §6.1-prefix).
+
+    Each request draws one of ``n_prefixes`` shared system prompts with
+    zipf(``zipf_a``) popularity (rank 1 most popular; the unbounded tail is
+    clamped onto the last rank), prepends it to a short unique suffix, and
+    lands on a uniformly random origin node with exponential interarrivals —
+    the traffic shape where cross-request prefix caching and cache-affinity
+    dispatch pay off: most prompts are mostly a prefix some node has warm.
+    """
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    t = 0.0
+    for i in range(n):
+        t += rng.exponential(mean_interarrival)
+        rank = min(int(rng.zipf(zipf_a)), n_prefixes)
+        suffix = max(1, int(rng.lognormal(np.log(suffix_mean), 0.4)))
+        reqs.append(Request(
+            rid=f"z{i}",
+            origin=node_ids[int(rng.integers(len(node_ids)))],
+            arrival=t,
+            prompt_tokens=prefix_tokens + suffix,
+            output_tokens=max(8, int(rng.lognormal(np.log(output_mean), 0.5))),
+            slo_s=slo_s,
+            prefix_id=f"sys-{rank}",
+            prefix_tokens=prefix_tokens))
     return reqs
 
 

@@ -55,6 +55,7 @@ DESIGN_OK = """\
     ## §6.1 Executors
     ### §6.1-paged Paged
     ### §6.1-disagg Disagg
+    ### §6.1-prefix Prefix cache
     ### §6.1-spec Spec
     ## §Perf-kernels Speed
     ## §6.2 Duels
@@ -392,6 +393,31 @@ class TestTwinDrift:
             "src/repro/serving/engine.py":
                 "from repro.sim.servicemodel import SPEC_K\n"
                 "LOCAL_ONLY = 3\n",
+        })
+        assert rule_ids(analyze(root, "twin-drift")) == []
+
+    def test_redefining_prefix_predicates_flagged(self, tmp_path):
+        """The §6.1-prefix hit rule is a registered shared predicate: a
+        local re-implementation in an engine or benchmark module is drift,
+        both as a function def and as a shadowing assignment."""
+        root = mk_repo(tmp_path, {
+            **MD_STUBS,
+            "src/repro/serving/engine.py": """\
+                def prefix_hit_pages(prompt, page, matched):
+                    return matched // page
+            """,
+            "benchmarks/run.py": "prefix_fingerprint_id = hash\n",
+        })
+        ids = rule_ids(analyze(root, "twin-drift"))
+        assert ids.count("twin-drift/shared-name") == 2
+
+    def test_importing_prefix_predicates_is_silent(self, tmp_path):
+        root = mk_repo(tmp_path, {
+            **MD_STUBS,
+            "src/repro/serving/engine.py":
+                "from repro.sim.executor import prefix_hit_pages\n",
+            "src/repro/core/network.py":
+                "from repro.sim.executor import prefix_fingerprint_id\n",
         })
         assert rule_ids(analyze(root, "twin-drift")) == []
 

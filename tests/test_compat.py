@@ -107,7 +107,7 @@ class TestBenchSchema:
 
         from benchmarks.run import check_bench_schema
         payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
-        assert payload["schema"] == 7
+        assert payload["schema"] == 8
         assert "ttft_speedup_prompt_heavy" in payload["mix"]
         for key in ("handoffs", "transfer_inflight_peak"):
             broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
@@ -189,6 +189,48 @@ class TestBenchSchema:
                 check_bench_schema(broken)
         broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
         del broken["spec"]["paged"]["decode_tokens_per_s"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+
+    def test_schema_checker_rejects_prefix_cache_drift(self):
+        """Schema 8 pins the prefix-cache section (DESIGN.md §6.1-prefix):
+        engine cached-vs-cold TTFT, the simulated zipf hit rate, and the
+        affinity-vs-blind routing comparison — with hard bars (cached TTFT
+        strictly below cold, hit rate >= 0.5, affinity above blind) so a
+        cache regression fails tier-1, not just the artifact diff."""
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        pc = payload["prefix_cache"]
+        assert pc["engine"]["cached_ttft_s"] < pc["engine"]["cold_ttft_s"]
+        assert pc["sim"]["hit_rate"] >= 0.5
+        assert (pc["routing"]["affinity"]["hit_rate"]
+                > pc["routing"]["blind"]["hit_rate"])
+        for key in ("cold_ttft_s", "cached_ttft_s", "ttft_speedup",
+                    "hit_tokens", "cached_pages"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["prefix_cache"]["engine"][key]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
+        for mode in ("affinity", "blind"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["prefix_cache"]["routing"][mode]["hit_rate"]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
+        # hard-bar violations are rejected, not just missing keys
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["prefix_cache"]["engine"]["cached_ttft_s"] = \
+            broken["prefix_cache"]["engine"]["cold_ttft_s"] + 1.0
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["prefix_cache"]["sim"]["hit_rate"] = 0.3
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["prefix_cache"]["routing"]["affinity"]["hit_rate"] = \
+            broken["prefix_cache"]["routing"]["blind"]["hit_rate"]
         with pytest.raises(AssertionError):
             check_bench_schema(broken)
 

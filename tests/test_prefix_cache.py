@@ -1,0 +1,547 @@
+"""Cross-request prefix caching (DESIGN.md §6.1-prefix).
+
+Five families of tests:
+
+1.  Shared hit rule — ``prefix_hit_pages`` / ``prefix_fingerprint_id``
+    properties (pure, no model): only whole pages share and the final
+    prompt page is never shared (it must recompute to produce the first
+    output token's logits).
+2.  Engine bit-parity — cached-prefix generations are bit-identical to
+    cold ones through divergent suffixes, mid-chain copy-on-write, LIFO
+    preemption round-trips on a tight pool, and int8 KV pages; a deeper
+    random sweep runs behind ``-m slow``.
+3.  Refcount conservation — ``Engine.debug_page_accounting()`` reconciles
+    free ∪ cold ∪ held against refcounts exactly through admit/evict/
+    preempt churn; ``page_headroom`` never goes negative; engines without
+    the cache keep the exact legacy free-list behavior.
+4.  Sim twin agreement — the engine's chain walk and the simulated
+    ``TokenBucketExecutor(prefix_cache=True)`` both route through the one
+    shared ``prefix_hit_pages`` predicate, and the load/digest plumbing
+    (``cache_hit_rate``, ``resident_prefixes``) survives the trip through
+    ``make_load_digest`` and the network's affinity tie-break.
+5.  Disagg handoff skip — decode-side cached pages are pinned, excluded
+    from the transferred bytes on BOTH ends, and the transfer-rate EMA
+    learner never mistakes a skipped transfer for a slow link.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.executor import (ExecutorLoad, make_load_digest, pages_for,
+                                prefix_fingerprint_id, prefix_hit_pages)
+
+_MODEL_CACHE = {}
+
+
+def _smoke_model():
+    if "cp" not in _MODEL_CACHE:
+        import jax
+        from repro.configs import get_config
+        from repro.models import registry
+        cfg = get_config("qwen3-8b").smoke().replace(dtype="float32")
+        _MODEL_CACHE["cp"] = (cfg, registry.init(jax.random.PRNGKey(0), cfg))
+    return _MODEL_CACHE["cp"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _smoke_model()
+
+
+def _shared_reqs(prefix, specs):
+    """GenRequests sharing ``prefix`` with per-spec (rid, seed, suffix_len,
+    max_new) unique suffixes."""
+    from repro.serving import GenRequest
+    out = []
+    for rid, seed, sfx, max_new in specs:
+        suf = np.random.default_rng(seed).integers(2, 400, size=sfx) \
+            .astype(np.int32)
+        out.append(GenRequest(rid=rid,
+                              tokens=np.concatenate([prefix, suf]),
+                              max_new=max_new))
+    return out
+
+
+def _results_by_rid(reqs):
+    return {r.rid: np.asarray(r.result) for r in reqs}
+
+
+def _serve_sequential(eng, reqs):
+    """Serve one at a time so later requests see earlier ones' pages."""
+    got = {}
+    for r in reqs:
+        got.update(_results_by_rid(eng.serve([r])))
+    return got
+
+
+# ---------------------------------------------------------------------------
+# 1. shared hit rule (pure)
+# ---------------------------------------------------------------------------
+
+class TestSharedHitRule:
+    def test_final_page_never_shared(self):
+        # even a fully-matched prompt recomputes its last page: the warm
+        # prefill needs that page's logits for the first output token
+        assert prefix_hit_pages(32, 16, 32) == 1
+        assert prefix_hit_pages(16, 16, 16) == 0
+        assert prefix_hit_pages(33, 16, 33) == 2
+
+    def test_only_whole_pages_share(self):
+        assert prefix_hit_pages(100, 16, 15) == 0
+        assert prefix_hit_pages(100, 16, 16) == 1
+        assert prefix_hit_pages(100, 16, 31) == 1
+
+    @given(prompt=st.integers(1, 4096), matched=st.integers(0, 4096),
+           page=st.sampled_from([8, 16, 32, 64]))
+    @settings(max_examples=60, deadline=None)
+    def test_rule_properties(self, prompt, matched, page):
+        hits = prefix_hit_pages(prompt, page, matched)
+        assert 0 <= hits <= pages_for(prompt, page) - 1
+        assert hits <= matched // page
+        # the uncached suffix is never empty
+        assert prompt - hits * page >= 1
+        # monotone in the match length
+        assert hits >= prefix_hit_pages(prompt, page, max(0, matched - page))
+
+    def test_fingerprint_is_stable_and_32bit(self):
+        a = prefix_fingerprint_id("sys-1")
+        assert a == prefix_fingerprint_id("sys-1")
+        assert a != prefix_fingerprint_id("sys-2")
+        assert 0 <= a < 2 ** 32
+
+
+# ---------------------------------------------------------------------------
+# 2. engine bit-parity
+# ---------------------------------------------------------------------------
+
+class TestEnginePrefixParity:
+    def test_cached_matches_cold_divergent_suffixes(self, setup):
+        """Sequential requests sharing a multi-page prefix hit the chain
+        and stay bit-identical to a cache-less paged engine."""
+        from repro.serving import Engine
+        cfg, params = setup
+        prefix = np.random.default_rng(0).integers(2, 400, size=40) \
+            .astype(np.int32)
+        specs = [("a", 1, 7, 5), ("b", 2, 13, 4), ("c", 3, 2, 6)]
+        cold = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=16, num_pages=64)
+        ref = _results_by_rid(cold.serve(_shared_reqs(prefix, specs)))
+        warm = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=16, num_pages=64, prefix_cache=True)
+        got = _serve_sequential(warm, _shared_reqs(prefix, specs))
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+        assert warm.prefix_hit_tokens > 0, "cache never hit"
+        assert warm.prefix_hit_rate > 0.0
+        # all rows drained: every surviving page is cold (evictable), none
+        # held, and the pool reconciles exactly
+        acct = warm.debug_page_accounting()
+        assert acct["held"] == 0 and acct["cold"] > 0
+
+    def test_cow_mid_chain_divergence(self, setup):
+        """A prompt matching only the first page of a registered chain
+        shares exactly that page and recomputes the rest — never mutating
+        the shared page (copy-on-write by construction)."""
+        from repro.serving import Engine, GenRequest
+        cfg, params = setup
+        prefix = np.random.default_rng(1).integers(2, 400, size=48) \
+            .astype(np.int32)
+        diverged = np.concatenate(
+            [prefix[:16], (prefix[16:] + 1) % 400]).astype(np.int32)
+        tail = np.array([5, 6, 7], np.int32)
+
+        warm = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                      page_size=16, num_pages=64, prefix_cache=True)
+        base = _shared_reqs(prefix, [("base", 9, 4, 4)])[0]
+        warm.serve([base])                     # registers the full chain
+        before = warm.prefix_hit_tokens
+        got = _results_by_rid(warm.serve(
+            [GenRequest(rid="cow", tokens=np.concatenate([diverged, tail]),
+                        max_new=4)]))
+
+        cold = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                      page_size=16, num_pages=64)
+        ref = _results_by_rid(cold.serve(
+            [GenRequest(rid="cow", tokens=np.concatenate([diverged, tail]),
+                        max_new=4)]))
+        np.testing.assert_array_equal(ref["cow"], got["cow"])
+        assert warm.prefix_hit_tokens - before == 16   # page 0 only
+        # the original chain still replays in full after the COW request
+        before = warm.prefix_hit_tokens
+        rerun = _shared_reqs(prefix, [("again", 10, 4, 4)])[0]
+        warm.serve([rerun])
+        assert warm.prefix_hit_tokens - before == 48   # all 3 full pages
+
+    def test_tight_pool_preemption_roundtrip(self, setup):
+        """Preempt-and-requeue churn on a pool too small for the offered
+        load keeps cached-prefix outputs bit-identical."""
+        from repro.serving import Engine
+        cfg, params = setup
+        prefix = np.random.default_rng(2).integers(2, 400, size=40) \
+            .astype(np.int32)
+        specs = [("a", 1, 7, 6), ("b", 2, 13, 5), ("c", 3, 2, 4),
+                 ("d", 4, 20, 6)]
+        cold = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                      page_size=16, num_pages=96)
+        ref = _results_by_rid(cold.serve(_shared_reqs(prefix, specs)))
+        tight = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                       page_size=16, num_pages=12, prefix_cache=True)
+        got = _results_by_rid(tight.serve(_shared_reqs(prefix, specs)))
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+        acct = tight.debug_page_accounting()
+        assert acct["held"] == 0
+        assert acct["free"] + acct["cold"] == 12
+
+    def test_kv_quant_pages_share_scales(self, setup):
+        """int8 KV pages: the scale pools ride the same physical page
+        index, so a shared page shares its scales too — quantized cached
+        output matches quantized cold output bit-for-bit."""
+        from repro.serving import Engine
+        cfg, params = setup
+        qcfg = cfg.replace(kv_quant=True)
+        prefix = np.random.default_rng(3).integers(2, 400, size=40) \
+            .astype(np.int32)
+        specs = [("a", 1, 6, 4), ("b", 2, 11, 5)]
+        cold = Engine(qcfg, params, max_batch=2, bucket=16, paged=True,
+                      page_size=16, num_pages=64)
+        ref = _results_by_rid(cold.serve(_shared_reqs(prefix, specs)))
+        warm = Engine(qcfg, params, max_batch=2, bucket=16, paged=True,
+                      page_size=16, num_pages=64, prefix_cache=True)
+        got = _serve_sequential(warm, _shared_reqs(prefix, specs))
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+        assert warm.prefix_hit_tokens > 0
+
+    def test_prefix_cache_requires_paged(self, setup):
+        from repro.serving import Engine
+        cfg, params = setup
+        with pytest.raises(ValueError):
+            Engine(cfg, params, max_batch=2, bucket=16, prefix_cache=True)
+
+    @pytest.mark.slow
+    @given(page_size=st.sampled_from([8, 16]), pool=st.integers(8, 24),
+           seed=st.integers(0, 10 ** 6), shared_prefix=st.integers(17, 64))
+    @settings(max_examples=8, deadline=None)
+    def test_random_churn_parity_deep(self, page_size, pool, seed,
+                                      shared_prefix):
+        """Deeper sweep (``-m slow``): random pool geometries, prefix
+        lengths, and workloads — cached-prefix churn (hits, COW, cold
+        eviction, preemption) never changes greedy outputs, and the pool
+        reconciles after every drain."""
+        from repro.serving import Engine
+        cfg, params = _smoke_model()
+        rng = np.random.default_rng(seed)
+        prefix = rng.integers(2, 400, size=shared_prefix).astype(np.int32)
+        specs = [(f"r{i}", seed + i, int(rng.integers(1, 16)),
+                  int(rng.integers(2, 8))) for i in range(5)]
+        cold = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=page_size, num_pages=96)
+        ref = _results_by_rid(cold.serve(_shared_reqs(prefix, specs)))
+        warm = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                      page_size=page_size, num_pages=pool,
+                      prefix_cache=True)
+        got = _serve_sequential(warm, _shared_reqs(prefix, specs))
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+        acct = warm.debug_page_accounting()
+        assert acct["held"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. refcount conservation / page accounting
+# ---------------------------------------------------------------------------
+
+class TestPageAccounting:
+    def test_refcounts_reconcile_through_churn(self, setup):
+        """Free ∪ cold ∪ held is an exact partition after every serve wave,
+        with refcounts equal to the number of row holders — including waves
+        that force cold-LRU eviction and preemption."""
+        from repro.serving import Engine
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=16, num_pages=10, prefix_cache=True)
+        rng = np.random.default_rng(42)
+        for wave in range(4):
+            # alternating shared and unique prefixes churn the chain: new
+            # registrations must evict older cold pages from the tiny pool
+            prefix = rng.integers(2, 400, size=int(rng.integers(20, 40))) \
+                .astype(np.int32)
+            specs = [(f"w{wave}r{i}", int(rng.integers(0, 10 ** 6)),
+                      int(rng.integers(1, 10)), int(rng.integers(2, 5)))
+                     for i in range(3)]
+            eng.serve(_shared_reqs(prefix, specs))
+            acct = eng.debug_page_accounting()   # asserts internally
+            assert acct["held"] == 0
+            assert acct["free"] + acct["cold"] == \
+                eng.load_snapshot()["free_pages"]
+
+    def test_page_headroom_never_negative_while_stepping(self, setup):
+        """Cold (cached-but-evictable) pages count as free in the snapshot,
+        so ExecutorLoad.page_headroom stays in [0, 1] through stepped
+        serving with cache hits and revivals."""
+        from repro.serving import Engine, EngineExecutor
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=3, bucket=16, paged=True,
+                     page_size=16, num_pages=12, prefix_cache=True)
+        ex = EngineExecutor(eng)
+        done = []
+        ex.bind(None, lambda r, st_, ft: done.append(r))
+        prefix = np.random.default_rng(7).integers(2, 400, size=36) \
+            .astype(np.int32)
+        pending = _shared_reqs(prefix, [(f"r{i}", i, 5 + i, 4)
+                                        for i in range(5)])
+        while pending or ex.has_work():
+            while pending and ex.admit(pending[0]):
+                pending.pop(0)
+            ex.step()
+            ld = ex.load()
+            assert 0.0 <= ld.page_headroom <= 1.0
+            assert ld.pages_used >= 0
+        assert len(done) == 5
+        assert ex.load().cache_hit_rate > 0.0
+
+    def test_non_prefix_engine_keeps_legacy_freelist(self, setup):
+        """Without prefix_cache the paged engine never parks pages cold:
+        the accounting helper still reconciles, with zero cold pages and
+        an unchanged free list after a drain."""
+        from repro.serving import Engine
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                     page_size=16, num_pages=8)
+        reqs = _shared_reqs(
+            np.random.default_rng(1).integers(2, 400, size=20)
+            .astype(np.int32), [("a", 1, 4, 3), ("b", 2, 6, 3)])
+        eng.serve(reqs)
+        acct = eng.debug_page_accounting()
+        assert acct == {"free": 8, "cold": 0, "held": 0}
+        assert eng.prefix_hit_tokens == 0
+
+    def test_pool_growth_flushes_cache(self, setup):
+        """Reallocating the pool for a too-large request invalidates every
+        registered page; the chain must flush with it."""
+        from repro.serving import Engine, GenRequest
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                     page_size=16, num_pages=4, prefix_cache=True)
+        small = _shared_reqs(
+            np.random.default_rng(2).integers(2, 400, size=20)
+            .astype(np.int32), [("a", 1, 4, 3)])
+        eng.serve(small)
+        assert eng.debug_page_accounting()["cold"] > 0
+        big = GenRequest(rid="big", tokens=np.random.default_rng(3)
+                         .integers(2, 400, size=90).astype(np.int32),
+                         max_new=3)
+        eng.serve([big])                     # forces pool growth
+        acct = eng.debug_page_accounting()
+        assert acct["held"] == 0
+        # growth flushed the old chain: a rerun of the small prompt is cold
+        before = eng.prefix_hit_tokens
+        eng.serve(_shared_reqs(
+            np.random.default_rng(2).integers(2, 400, size=20)
+            .astype(np.int32), [("a2", 9, 4, 3)]))
+        assert eng.prefix_hit_tokens == before
+
+
+# ---------------------------------------------------------------------------
+# 4. sim twin agreement
+# ---------------------------------------------------------------------------
+
+class TestSimTwinAgreement:
+    def test_engine_chain_walk_matches_shared_rule(self, setup):
+        """The engine's content-hash chain walk and the pure
+        ``prefix_hit_pages`` rule agree for every divergence point: a
+        prompt sharing exactly ``c`` leading tokens with a registered one
+        hits exactly ``prefix_hit_pages(len, page, c)`` pages."""
+        from repro.serving import Engine
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                     page_size=16, num_pages=64, prefix_cache=True)
+        base = np.random.default_rng(4).integers(2, 400, size=56) \
+            .astype(np.int32)
+        eng.serve(_shared_reqs(base, [("base", 1, 4, 3)]))
+        for common in (0, 5, 15, 16, 17, 32, 48, 56):
+            probe = np.concatenate(
+                [base[:common], (base[common:] + 1) % 400,
+                 np.array([3, 4], np.int32)]).astype(np.int32)
+            got = len(eng._prefix_lookup_pages(probe))
+            want = prefix_hit_pages(len(probe), 16, common)
+            assert got == want, (common, got, want)
+
+    def test_sim_executor_hit_accounting_uses_shared_rule(self):
+        """The simulated twin's cached-token count per admitted request is
+        exactly ``prefix_hit_pages(prompt, page, prefix_tokens) * page``
+        once the prefix is LRU-resident (and 0 on first sight)."""
+        from repro.core.node import QueuedRequest
+        from repro.sim import TokenBucketExecutor, make_profile
+        from repro.sim.events import EventLoop
+        from repro.sim.workload import Request
+        loop = EventLoop()
+        ex = TokenBucketExecutor(make_profile(quality=0.6), page_size=16,
+                                 prefix_cache=True)
+        done = []
+        ex.bind(loop, lambda qr, st_, ft: done.append(qr))
+
+        def req(rid, prompt, ptoks):
+            return QueuedRequest(
+                Request(rid=rid, origin="n", arrival=0.0,
+                        prompt_tokens=prompt, output_tokens=8, slo_s=600.0,
+                        prefix_id="sys-1", prefix_tokens=ptoks),
+                enqueue_time=0.0, delegated=False, origin_node="n")
+
+        assert ex.admit(req("a", 300, 256))
+        assert ex.prefix_hit_tokens == 0           # first sight: cold
+        assert ex.admit(req("b", 300, 256))
+        want = prefix_hit_pages(300, 16, 256) * 16
+        assert ex.prefix_hit_tokens == want
+        assert ex.admit(req("c", 260, 256))        # prefix ≈ whole prompt
+        want += prefix_hit_pages(260, 16, 256) * 16
+        assert ex.prefix_hit_tokens == want
+        loop.run(until=10 ** 6)
+        assert len(done) == 3
+        ld = ex.load()
+        assert ld.cache_hit_rate > 0.0
+        assert prefix_fingerprint_id("sys-1") in ld.resident_prefixes
+
+    def test_digest_carries_cache_fields(self):
+        ld = ExecutorLoad(active_streams=1, queued_streams=0,
+                          pending_prefill_tokens=0, pending_decode_tokens=0,
+                          kv_used=0, kv_budget=100,
+                          cache_hit_rate=0.75,
+                          resident_prefixes=(11, 22, 33))
+        d = make_load_digest(ld, 3.0)
+        assert d.cache_hit_rate == 0.75
+        assert d.resident_prefixes == (11, 22, 33)
+
+    def test_affinity_filter_breaks_ties_toward_resident_prefix(self):
+        """Among near-tied candidates the draw narrows to digest-resident
+        peers; with no warm peer (or affinity off) the set is unchanged."""
+        from repro.core import Network, Node, NodePolicy
+        from repro.core.duel import DuelParams
+        from repro.core.gossip import PeerRecord
+        from repro.sim import make_profile
+        from repro.sim.workload import Request
+        net = Network(mode="decentralized", seed=0, init_balance=100.0,
+                      duel=DuelParams(p_d=0.0, k_judges=0))
+        for nid in ("n0", "n1", "n2"):
+            net.add_node(Node(nid, make_profile(quality=0.6),
+                              policy=NodePolicy()))
+        origin = net.nodes["n0"]
+        fp = prefix_fingerprint_id("sys-9")
+        warm_d = make_load_digest(ExecutorLoad(
+            active_streams=0, queued_streams=0, pending_prefill_tokens=0,
+            pending_decode_tokens=0, kv_used=0, kv_budget=100,
+            resident_prefixes=(fp,)), 0.0)
+        cold_d = make_load_digest(ExecutorLoad(
+            active_streams=0, queued_streams=0, pending_prefill_tokens=0,
+            pending_decode_tokens=0, kv_used=0, kv_budget=100), 0.0)
+        origin.view.merge([
+            PeerRecord("n1", 5, True, "tcp://n1", 0.0, digest=warm_d),
+            PeerRecord("n2", 5, True, "tcp://n2", 0.0, digest=cold_d)])
+        req = Request(rid="r", origin="n0", arrival=0.0, prompt_tokens=300,
+                      output_tokens=8, slo_s=600.0, prefix_id="sys-9",
+                      prefix_tokens=256)
+        assert net._affinity_filter(origin, req, ["n1", "n2"]) == ["n1"]
+        # no prefix on the request → untouched
+        plain = Request(rid="p", origin="n0", arrival=0.0, prompt_tokens=300,
+                       output_tokens=8, slo_s=600.0)
+        assert net._affinity_filter(origin, plain, ["n1", "n2"]) == \
+            ["n1", "n2"]
+        # nobody warm → full set (pressure keeps deciding)
+        other = Request(rid="o", origin="n0", arrival=0.0, prompt_tokens=300,
+                        output_tokens=8, slo_s=600.0, prefix_id="sys-404",
+                        prefix_tokens=256)
+        assert net._affinity_filter(origin, other, ["n1", "n2"]) == \
+            ["n1", "n2"]
+        net.cache_affinity = False
+        assert net._affinity_filter(origin, req, ["n1", "n2"]) == \
+            ["n1", "n2"]
+
+
+# ---------------------------------------------------------------------------
+# 5. disagg handoff skip
+# ---------------------------------------------------------------------------
+
+class TestDisaggHandoffSkip:
+    def test_cached_pages_skip_the_wire(self, setup):
+        """With a prefix-cached decode engine, repeated shared-prefix
+        traffic moves fewer handoff bytes than a cache-less pair — same
+        greedy outputs, pins fully released, decode-side cache populated
+        by the handoffs themselves."""
+        from repro.serving import DisaggEngineExecutor, Engine
+        cfg, params = setup
+        prefix = np.random.default_rng(5).integers(2, 400, size=35) \
+            .astype(np.int32)
+        specs = [("a", 1, 7, 4), ("b", 2, 13, 4), ("c", 3, 2, 4)]
+        ref = Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                     page_size=16)
+        want = _results_by_rid(ref.serve(_shared_reqs(prefix, specs)))
+
+        def drain(ex, reqs):
+            done = []
+            ex.bind(None, lambda r, st_, ft: done.append(r))
+            pending = list(reqs)
+            while pending or ex.has_work():
+                while pending and ex.admit(pending[0]):
+                    pending.pop(0)
+                ex.step()
+            return _results_by_rid(done)
+
+        def mk_pair(prefix_cache):
+            return DisaggEngineExecutor(
+                Engine(cfg, params, max_batch=2, bucket=16, paged=True,
+                       page_size=16),
+                Engine(cfg, params, max_batch=4, bucket=16, paged=True,
+                       page_size=16, prefix_cache=prefix_cache))
+
+        cached, plain = mk_pair(True), mk_pair(False)
+        got = {}
+        for r in _shared_reqs(prefix, specs):
+            got.update(drain(cached, [r]))
+        base = {}
+        for r in _shared_reqs(prefix, specs):
+            base.update(drain(plain, [r]))
+        for rid in want:
+            np.testing.assert_array_equal(want[rid], got[rid])
+            np.testing.assert_array_equal(want[rid], base[rid])
+        assert cached.decode.prefix_hit_tokens > 0
+        assert cached.prefill.stats.handoff_bytes < \
+            plain.prefill.stats.handoff_bytes
+        # both ends agree on the (reduced) byte count
+        assert cached.decode.stats.handoff_bytes == \
+            cached.prefill.stats.handoff_bytes
+        # pins released, pool reconciles: a leaked pin would keep its pages
+        # held (pin holders count toward the refcount reconciliation)
+        assert cached.decode.debug_page_accounting()["held"] == 0
+
+    def test_transfer_ema_ignores_skipped_transfers(self):
+        """Satellite regression: a window in which every handoff was
+        cache-skipped shows zero byte growth — the per-node transfer-rate
+        EMA must treat it as an idle link, not a slow one."""
+        from repro.core import Network
+        net = Network(mode="single")
+        net._observe_transfer_rate("n", 1.0, 10_000)
+        net._observe_transfer_rate("n", 2.0, 30_000)   # real transfer
+        learned = dict(net._transfer_rate_ema)
+        assert learned
+        # cached handoffs: cumulative bytes unchanged across sightings
+        net._observe_transfer_rate("n", 3.0, 30_000)
+        net._observe_transfer_rate("n", 4.0, 30_000)
+        assert net._transfer_rate_ema == learned
+        # the baseline still advances, so the next real transfer is rated
+        # over its own window only
+        assert net._transfer_obs["n"][0] == 4.0
+
+    def test_handoff_bytes_exclude_cached_tokens(self, setup):
+        """KVHandoff.kv_bytes scales with (length - cached_tokens): the
+        skipped pages are charged on neither end."""
+        import jax.numpy as jnp
+        from repro.serving.engine import KVHandoff
+        kw = dict(req=None, out=[1], logits=jnp.zeros((1, 8)), page_size=16)
+        h_full = KVHandoff(k=jnp.zeros((2, 4, 16, 1, 4)),
+                           v=jnp.zeros((2, 4, 16, 1, 4)), length=64, **kw)
+        h_skip = KVHandoff(k=jnp.zeros((2, 2, 16, 1, 4)),
+                           v=jnp.zeros((2, 2, 16, 1, 4)), length=64,
+                           cached_tokens=32, **kw)
+        assert h_skip.kv_bytes == h_full.kv_bytes // 2
