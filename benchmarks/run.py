@@ -26,8 +26,11 @@ schema 8, the ``prefix_cache`` section (DESIGN.md §6.1-prefix): real-
 engine cached-vs-cold TTFT on a shared prefix (cached must be faster),
 the simulated zipf-shared-prefix hit rate (>= 0.5), and cache-affinity
 vs affinity-blind gossip routing on a hot-origin zipf workload
-(affinity must win on aggregate hit rate)) so the performance
-trajectory is tracked PR over PR::
+(affinity must win on aggregate hit rate), and, new in schema 9, the
+``obs`` tracing-overhead section (DESIGN.md §Observability): mix-bench
+decode tokens/s with the span tracer enabled vs disabled, whose
+>= 0.95x ratio is asserted by ``check_bench_schema``) so the
+performance trajectory is tracked PR over PR::
 
     PYTHONPATH=src python benchmarks/run.py --bench
 
@@ -41,6 +44,17 @@ also the first check of ``--smoke`` and whose rule/violation counts are
 recorded in the ``lint`` section of the --bench payload::
 
     PYTHONPATH=src python benchmarks/run.py --lint
+
+``--trace <path>`` runs the traced sim mix (DESIGN.md §Observability):
+a small decentralized network with the span tracer live, writing a
+Perfetto/Chrome ``trace_event`` JSON to <path> and printing the
+per-request latency breakdown.  It asserts the latency partition: for
+every completed request, the union of its merged sim-clock span
+intervals (route.decide / executor.queue / engine.prefill /
+engine.decode / route.return, plus the nested disagg.handoff) must
+reconstruct ``CompletedRequest.latency`` within 5%::
+
+    PYTHONPATH=src python benchmarks/run.py --trace out.json
 """
 
 from __future__ import annotations
@@ -58,7 +72,7 @@ _REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_REPO))
 sys.path.insert(0, str(_REPO / "src"))
 
-BENCH_SCHEMA_VERSION = 8
+BENCH_SCHEMA_VERSION = 9
 
 # required keys per payload section; engine modes each carry ENGINE_MODE_KEYS
 SIM_MODE_KEYS = ("slo_attainment", "avg_latency_s", "p95_latency_s",
@@ -109,6 +123,12 @@ PREFIX_ENGINE_KEYS = ("cold_ttft_s", "cached_ttft_s", "ttft_speedup",
 PREFIX_SIM_KEYS = ("hit_rate", "hit_tokens", "lookup_tokens", "served")
 PREFIX_ROUTING_MODES = ("affinity", "blind")
 PREFIX_ROUTING_KEYS = ("hit_rate", "hit_tokens", "lookup_tokens", "n")
+# schema 9: tracing overhead (DESIGN.md §Observability) — mix-workload
+# paged decode throughput with the span tracer enabled vs disabled;
+# check_bench_schema hard-asserts traced >= 0.95x untraced
+OBS_ARMS = ("untraced", "traced")
+OBS_ARM_KEYS = ("decode_tokens", "decode_tokens_per_s", "wall_s")
+OBS_KEYS = ("workload", "overhead_ratio", "spans", "metrics")
 
 
 def check_bench_schema(payload: dict) -> None:
@@ -234,6 +254,22 @@ def check_bench_schema(payload: dict) -> None:
             > pc["routing"]["blind"]["hit_rate"]), (
         f"cache-affinity hit rate {pc['routing']['affinity']['hit_rate']} "
         f"not above blind {pc['routing']['blind']['hit_rate']}")
+    # schema 9: tracing overhead (DESIGN.md §Observability)
+    obs = payload["obs"]
+    for k in OBS_KEYS:
+        assert k in obs, f"obs.{k} missing"
+    for arm in OBS_ARMS:
+        assert arm in obs, f"obs.{arm} missing"
+        for k in OBS_ARM_KEYS:
+            assert k in obs[arm], f"obs.{arm}.{k} missing"
+    assert obs["spans"] > 0, "traced arm recorded no spans"
+    # hard bar: spans are cheap enough to leave on — traced mix decode
+    # throughput must hold >= 0.95x of the untraced arm
+    assert obs["overhead_ratio"] >= 0.95, (
+        f"tracing overhead: traced decode "
+        f"{obs['traced']['decode_tokens_per_s']} tok/s is "
+        f"{obs['overhead_ratio']}x untraced "
+        f"{obs['untraced']['decode_tokens_per_s']} (< 0.95x)")
 
 
 def _lint(verbose: bool = True) -> int:
@@ -248,6 +284,100 @@ def _lint(verbose: bool = True) -> int:
               f"{len(report.baselined)} baselined in {report.wall_s:.2f}s",
               flush=True)
     return 0 if report.ok else 1
+
+
+def _traced_sim_mix(n_requests: int = 30, seed: int = 0):
+    """Small decentralized sim mix with the span tracer live (jax-free).
+
+    Duels, churn, and rebalancing are off, so each completed request's
+    lifecycle spans — route.decide, executor.queue, engine.prefill,
+    engine.decode, route.return (plus the nested disagg.handoff on the
+    disagg node) — tile [arrival, finish] exactly (DESIGN.md
+    §Observability).  Returns (metrics, tracer, network).
+    """
+    from repro.core import DuelParams, Network, Node, NodePolicy
+    from repro.obs import Tracer, set_tracer
+    from repro.sim import DisaggTokenBucketExecutor, make_profile
+    from repro.sim.workload import Request
+    net = Network(mode="decentralized", seed=seed,
+                  duel=DuelParams(p_d=0.0, k_judges=0), init_balance=100.0)
+    # offload-eager policy (low utilization knee) so the trace actually
+    # carries delegation legs (route.decide dispatch spans + route.return)
+    # rather than an everything-local run
+    pol = NodePolicy(accept_freq=1.0, offload_freq=1.0,
+                     offload_queue_threshold=0, offload_util_threshold=0.3)
+    for i in range(4):
+        # one disagg backend so traces carry disagg.handoff spans nested
+        # inside engine.decode (exercises the merged-interval coverage)
+        factory = ((lambda node: DisaggTokenBucketExecutor(node.profile))
+                   if i == 3 else None)
+        net.add_node(Node(f"n{i}",
+                          make_profile("qwen3-8b", "RTX3090", "sglang",
+                                       quality=0.5),
+                          policy=pol, executor_factory=factory))
+    reqs = []
+    for i in range(n_requests):       # mixed prompt-heavy / decode-heavy,
+        heavy = i % 3 == 0            # all hot on n0 so it must delegate
+        reqs.append(Request(rid=f"t{i:03d}", origin="n0",
+                            arrival=0.15 * i,
+                            prompt_tokens=512 if heavy else 48,
+                            output_tokens=16 if heavy else 96,
+                            slo_s=120.0))
+    tr = Tracer()
+    old = set_tracer(tr)
+    try:
+        m = net.run(reqs, until=10_000.0, rebalance_interval=0.0)
+    finally:
+        set_tracer(old)
+    return m, tr, net
+
+
+def _span_coverage_errors(metrics, spans) -> dict:
+    """Per-rid relative error of the span-reconstructed latency.
+
+    For each completed request, merge its sim-clock span intervals and
+    compare the union's length to ``CompletedRequest.latency`` — the
+    lifecycle partition of DESIGN.md §Observability says they match
+    (spans may nest, e.g. disagg.handoff inside engine.decode, so a
+    plain sum over-counts; the merged union does not).
+    """
+    from repro.obs import SIM
+    by = {}
+    for s in spans:
+        if s.rid and s.clock == SIM:
+            by.setdefault(s.rid, []).append((s.t0, s.t1))
+    errs = {}
+    for c in metrics.completed:
+        covered, hi = 0.0, None
+        for t0, t1 in sorted(by.get(c.rid, ())):
+            if hi is None or t0 > hi:
+                covered += t1 - t0
+                hi = t1
+            elif t1 > hi:
+                covered += t1 - hi
+                hi = t1
+        errs[c.rid] = abs(covered - c.latency) / max(c.latency, 1e-9)
+    return errs
+
+
+def _trace(out_path: str) -> int:
+    """Write a Perfetto trace of the sim mix; assert the latency partition."""
+    from repro.obs import breakdown_report, write_chrome_trace
+    t0 = time.perf_counter()
+    m, tr, _net = _traced_sim_mix()
+    payload = write_chrome_trace(tr.spans, out_path)
+    print(breakdown_report(tr.spans, limit=5))
+    errs = _span_coverage_errors(m, tr.spans)
+    worst = max(errs.values()) if errs else 1.0
+    print(f"trace: {len(m.completed)} requests, {len(tr.spans)} spans, "
+          f"{len(payload['traceEvents'])} events -> {out_path} "
+          f"({time.perf_counter() - t0:.1f}s)")
+    print(f"trace: worst span-coverage error {worst:.4f} "
+          f"(merged sim spans vs CompletedRequest.latency)")
+    assert worst <= 0.05, (
+        f"span partition broken: worst relative coverage error {worst:.4f} "
+        f"> 0.05 (DESIGN.md §Observability)")
+    return 0
 
 
 def _smoke() -> int:
@@ -482,8 +612,45 @@ def _smoke() -> int:
         assert _lint(verbose=False) == 0, \
             "repro.analysis found new violations (run --lint for details)"
 
+    def trace_roundtrip():
+        # <10s jax-free trace round-trip (DESIGN.md §Observability): run a
+        # small traced sim, write the Chrome trace to a temp file, and check
+        # that the JSON parses, spans nest inside their request's lifetime,
+        # every completed request carries the route->admit->prefill chain,
+        # and the merged sim spans reconstruct its measured latency
+        import json
+        import tempfile
+
+        from repro.obs import SIM, write_chrome_trace
+        m, tr, _net = _traced_sim_mix(n_requests=12)
+        assert m.completed, "traced sim completed nothing"
+        with tempfile.TemporaryDirectory() as td:
+            p = pathlib.Path(td) / "trace.json"
+            write_chrome_trace(tr.spans, p)
+            evs = json.loads(p.read_text())["traceEvents"]
+        assert any(e["ph"] == "X" for e in evs), "no complete events"
+        by_rid = {}
+        for s in tr.spans:
+            if s.rid:
+                by_rid.setdefault(s.rid, []).append(s)
+        errs = _span_coverage_errors(m, tr.spans)
+        for c in m.completed:
+            names = {s.name for s in by_rid.get(c.rid, ())}
+            for need in ("route.decide", "executor.queue", "executor.admit",
+                         "engine.prefill", "engine.decode"):
+                assert need in names, f"{c.rid} missing {need} span"
+            for s in by_rid[c.rid]:     # nesting: inside [arrival, finish]
+                if s.clock == SIM:
+                    assert (s.t0 >= c.arrival - 1e-9
+                            and s.t1 <= c.finish + 1e-9), \
+                        f"{c.rid} span {s.name} outside its lifecycle"
+            assert errs[c.rid] <= 0.05, \
+                f"{c.rid} span coverage error {errs[c.rid]:.4f} > 0.05"
+
     print("smoke: end-to-end sanity pass", flush=True)
     check("static analysis (repro.analysis)", analysis_clean)
+    check("trace round-trip (spans nest, latency partition)",
+          trace_roundtrip)
     check("model forward + prefill/decode consistency", model_roundtrip)
     check("serving engine generation", engine_generates)
     check("paged engine greedy-matches slot engine", paged_engine_matches_slot)
@@ -970,6 +1137,64 @@ def _bench(out_path: str) -> int:
         },
     }
 
+    # --- tracing overhead: mix decode throughput, traced vs untraced --------
+    # (DESIGN.md §Observability) Same paged executor and deterministic mix
+    # workload as the mix section; the traced arm runs under a live Tracer
+    # so every engine.prefill/engine.decode_step wall span is recorded.
+    # Best-of-two decode tok/s per arm so a one-off GC/scheduler hiccup
+    # doesn't trip the pinned >= 0.95x bound.
+    from repro.obs import MetricsRegistry, Tracer, set_registry, set_tracer
+
+    def obs_arm(traced):
+        ex = mk_executor("paged")
+        run_mix(ex)
+        run_mix(ex)                  # warm the per-instance jit caches twice
+        tr = Tracer()
+        old_tr = set_tracer(tr) if traced else None
+        try:
+            best = None
+            for _ in range(2):
+                ex.engine.stats = _ES()
+                t0 = time.perf_counter()
+                run_mix(ex)          # timed run reuses compiled steps
+                wall = time.perf_counter() - t0
+                st = ex.engine_stats()
+                tps = st.decode_tokens / max(st.decode_wall_s, 1e-9)
+                if best is None or tps > best["decode_tokens_per_s"]:
+                    best = {"decode_tokens": st.decode_tokens,
+                            "decode_tokens_per_s": round(tps, 1),
+                            "wall_s": round(wall, 3)}
+        finally:
+            if traced:
+                set_tracer(old_tr)
+        return best, len(tr.spans)
+
+    obs_reg = MetricsRegistry()
+    old_reg = set_registry(obs_reg)
+    try:
+        obs_untraced, _ = obs_arm(False)
+        obs_traced, obs_spans = obs_arm(True)
+    finally:
+        set_registry(old_reg)
+    # the engine counters only fire under pressure (preemption, prefix
+    # hits) and the mix fits in budget, so fold in the routing-plane
+    # counters from the traced sim mix too — the artifact then shows
+    # the labeled series (net.messages{kind=...}) the registry carries
+    _sim_m, _sim_tr, sim_net = _traced_sim_mix(n_requests=12)
+    obs_counters = dict(obs_reg.snapshot()["counters"])
+    obs_counters.update(sim_net.registry.snapshot()["counters"])
+    payload["obs"] = {
+        "workload": "mix workload on the paged executor, best-of-two "
+                    "decode tok/s per arm, tracer off vs on",
+        "untraced": obs_untraced,
+        "traced": obs_traced,
+        "overhead_ratio": round(
+            obs_traced["decode_tokens_per_s"]
+            / max(obs_untraced["decode_tokens_per_s"], 1e-9), 4),
+        "spans": obs_spans,
+        "metrics": obs_counters,
+    }
+
     # --- static-analysis snapshot (DESIGN.md §7) ----------------------------
     from repro.analysis import run_analysis
     lint_report = run_analysis(_REPO)
@@ -1024,9 +1249,17 @@ def main(argv=None) -> int:
     ap.add_argument("--lint", action="store_true",
                     help="run the AST invariant linter (repro.analysis) "
                          "only; <10s, no jax import")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="run the traced sim mix and write a "
+                         "Perfetto/Chrome trace_event JSON to PATH; "
+                         "prints the per-request latency breakdown and "
+                         "asserts the span latency partition; <10s, no "
+                         "jax import")
     args = ap.parse_args(argv)
     if args.lint:
         return _lint()
+    if args.trace:
+        return _trace(args.trace)
     if args.smoke:
         return _smoke()
     if args.bench:

@@ -1,6 +1,6 @@
 """repro.analysis: AST-based invariant linter for the repo's contracts.
 
-One framework (``repro.analysis.framework``), five checkers
+One framework (``repro.analysis.framework``), six checkers
 (DESIGN.md §7):
 
 * ``compat-boundary`` — version-gated JAX symbols only via repro.compat
@@ -8,6 +8,7 @@ One framework (``repro.analysis.framework``), five checkers
 * ``kernel-lint``    — Pallas kernel body / index-map / grid hygiene
 * ``twin-drift``     — sim twin and engines share one constant vocabulary
 * ``docs-anchors``   — DESIGN.md §-anchors resolve wherever cited
+* ``obs-lint``       — spans and wall clocks go through repro.obs only
 
 Run it as ``python -m repro.analysis`` (see ``__main__``), from tier-1
 via ``tests/test_analysis.py``, or from ``benchmarks/run.py --lint``.
@@ -25,6 +26,7 @@ from repro.analysis import compatrules as _compatrules    # noqa: F401
 from repro.analysis import docanchors as _docanchors      # noqa: F401
 from repro.analysis import kernellint as _kernellint      # noqa: F401
 from repro.analysis import layering as _layering          # noqa: F401
+from repro.analysis import obslint as _obslint            # noqa: F401
 from repro.analysis import twindrift as _twindrift        # noqa: F401
 
 __all__ = [

@@ -38,7 +38,7 @@ MARKDOWN_REFERRERS = ("ROADMAP.md", "CHANGES.md", "README.md", DESIGN)
 REQUIRED_ANCHORS = ("§6.1", "§6.1-paged", "§6.1-disagg", "§6.1-prefix",
                     "§6.1-spec", "§Perf-kernels",
                     "§6.2", "§6.2-gossip", "§6.3", "§7",
-                    "§Arch-applicability")
+                    "§Arch-applicability", "§Observability")
 
 # how far back attribution text may sit from the anchor it qualifies
 _ATTRIBUTION_WINDOW = 80

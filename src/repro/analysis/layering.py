@@ -46,15 +46,16 @@ ALLOWED_IMPORTS: Dict[str, Tuple[str, ...]] = {
     "analysis": (),                       # stdlib-only analyzer
     "compat": (),
     "data": (),
-    "sim": ("compat",),
-    "core": ("compat", "sim"),
+    "obs": (),                            # stdlib-only trace/metrics sink
+    "sim": ("compat", "obs"),
+    "core": ("compat", "obs", "sim"),
     "models": ("compat",),
     "kernels": ("compat", "models"),      # ref oracles live in models
     "configs": ("compat", "models"),
     "training": ("compat", "models", "data"),
-    "serving": ("compat", "sim", "models", "kernels"),
-    "launch": ("compat", "sim", "core", "models", "kernels", "serving",
-               "configs", "training", "data"),
+    "serving": ("compat", "obs", "sim", "models", "kernels"),
+    "launch": ("compat", "obs", "sim", "core", "models", "kernels",
+               "serving", "configs", "training", "data"),
 }
 
 # the Executor contract surface (DESIGN.md §6.1); bind() has a concrete

@@ -1,0 +1,118 @@
+"""obs-lint: tracing and wall-clock accounting go through ``repro.obs``.
+
+The observability plane (DESIGN.md §Observability) only reconstructs
+request latency if every instrumented layer emits spans through the one
+``Tracer`` API and stamps wall time through the one sanctioned clock.
+Three sub-rules, same shape as ``layering/digest-construction``:
+
+* ``obs-lint/span-construction`` — ``Span(...)`` is constructed only
+  inside ``src/repro/obs/``; everyone else records via ``Tracer.span`` /
+  ``Tracer.event`` / ``Tracer.wall``, so a disabled tracer stays a cheap
+  no-op and span streams stay well-formed.
+* ``obs-lint/wall-clock`` — the instrumented modules (network, node, the
+  sim and engine executors, the engine) never call ``time.perf_counter``
+  / ``time.time`` / ``time.monotonic`` directly: wall timestamps come
+  from ``repro.obs.wall_now()`` and measured blocks from
+  ``Tracer.wall(...)``, keeping one auditable time base per clock
+  domain.
+* ``obs-lint/emission`` — each instrumented module actually resolves the
+  process tracer (``get_tracer``): deleting the lifecycle spans from a
+  governed file is a contract break, not a cleanup.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.framework import Checker, Finding, RepoIndex, register
+
+# the one sanctioned home of Span construction and raw clock reads
+OBS_HOME_PREFIX = "src/repro/obs/"
+SPAN_CTOR = "Span"
+
+# modules that carry the per-request lifecycle spans (DESIGN.md
+# §Observability) and therefore both (a) must keep emitting them and
+# (b) must stamp wall time only through repro.obs
+GOVERNED_FILES = (
+    "src/repro/core/network.py",
+    "src/repro/core/node.py",
+    "src/repro/sim/executor.py",
+    "src/repro/serving/engine.py",
+    "src/repro/serving/executor.py",
+)
+
+# raw clock reads banned in governed files (wall_now() / Tracer.wall
+# wrap perf_counter; the sim layers read EventLoop.now)
+_CLOCK_ATTRS = frozenset({"perf_counter", "monotonic"})
+
+
+def _is_span_ctor(node: ast.Call) -> bool:
+    f = node.func
+    return ((isinstance(f, ast.Name) and f.id == SPAN_CTOR)
+            or (isinstance(f, ast.Attribute) and f.attr == SPAN_CTOR))
+
+
+def _raw_clock_name(node: ast.Call):
+    """The offending clock's name, or None.  Named per call form so
+    distinct reads in one module stay distinct findings (the framework
+    dedupes on (rule, path, msg))."""
+    f = node.func
+    if isinstance(f, ast.Name) and f.id in _CLOCK_ATTRS:
+        return f.id                      # from time import perf_counter
+    if isinstance(f, ast.Attribute):
+        if f.attr in _CLOCK_ATTRS:
+            return f"time.{f.attr}"      # time.perf_counter()
+        # time.time() — attr "time" alone is too generic, so require the
+        # receiver to be the time module by name
+        if (f.attr == "time" and isinstance(f.value, ast.Name)
+                and f.value.id == "time"):
+            return "time.time"
+    return None
+
+
+@register
+class ObsLintChecker(Checker):
+    rule_id = "obs-lint"
+    description = ("Span construction confined to repro.obs; governed "
+                   "network/executor/engine modules emit spans and stamp "
+                   "wall time through the repro.obs API")
+
+    def run(self, repo: RepoIndex) -> Iterable[Finding]:
+        for rel in repo.py_files():
+            tree = repo.tree(rel)
+            if tree is None:
+                continue
+            in_obs = rel.startswith(OBS_HOME_PREFIX)
+            governed = rel in GOVERNED_FILES
+            if not in_obs:
+                for node in ast.walk(tree):
+                    if isinstance(node, ast.Call) and _is_span_ctor(node):
+                        yield Finding(
+                            "obs-lint/span-construction", rel, node.lineno,
+                            "Span constructed outside repro.obs (record "
+                            "via Tracer.span/event/wall so disabled "
+                            "tracing stays a no-op; DESIGN.md "
+                            "§Observability)")
+            if not governed:
+                continue
+            saw_tracer = False
+            for node in ast.walk(tree):
+                clock = (_raw_clock_name(node)
+                         if isinstance(node, ast.Call) else None)
+                if clock is not None:
+                    yield Finding(
+                        "obs-lint/wall-clock", rel, node.lineno,
+                        f"raw clock read ({clock}) in an instrumented "
+                        f"module (stamp through repro.obs.wall_now() or a "
+                        f"Tracer.wall block; DESIGN.md §Observability)")
+                elif (isinstance(node, ast.Call)
+                      and isinstance(node.func, ast.Name)
+                      and node.func.id == "get_tracer"):
+                    saw_tracer = True
+            if not saw_tracer:
+                yield Finding(
+                    "obs-lint/emission", rel, 1,
+                    "instrumented module no longer resolves the tracer "
+                    "(get_tracer): the lifecycle spans of DESIGN.md "
+                    "§Observability must keep being emitted here")

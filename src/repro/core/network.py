@@ -38,6 +38,7 @@ from repro.core.gossip import gossip_round
 from repro.core.ledger import (CreditChain, CreditOp, LedgerError, SharedLedger)
 from repro.core.node import Node, QueuedRequest
 from repro.core.pos import pos_sample, pos_sample_one
+from repro.obs import MetricsRegistry, get_tracer
 from repro.sim.events import EventLoop
 from repro.sim.executor import digest_staleness_weight, prefix_fingerprint_id
 from repro.sim.metrics import CompletedRequest, MetricsCollector
@@ -85,7 +86,8 @@ class Network:
                  max_probes: int = 3,
                  power_of_two: bool = False,
                  routing: str = "gossip",
-                 cache_affinity: bool = True) -> None:
+                 cache_affinity: bool = True,
+                 registry: Optional[MetricsRegistry] = None) -> None:
         assert mode in ("single", "centralized", "decentralized")
         assert ledger_mode in ("shared", "chain")
         assert routing in ("gossip", "probe")
@@ -126,10 +128,17 @@ class Network:
         self._transfer_obs: Dict[str, Tuple[float, int]] = {}
         # message accounting (DESIGN.md §6.2-gossip): "probe" counts live
         # load round-trips, "dispatch" delegated hand-offs, "bounce"
-        # delivery-time declines, "gossip" per-round view exchanges.  The
-        # scaling bench derives routing messages-per-request from these.
+        # delivery-time declines, "gossip" per-round view exchanges,
+        # "dropped" queued requests lost to churn/shutdown drains,
+        # "giveup" offload attempts that found every candidate saturated
+        # (DESIGN.md §Observability).  The scaling bench derives routing
+        # messages-per-request from these; every increment also feeds the
+        # labeled ``repro.obs`` registry so snapshots stay auditable.
         self.msg_counts: Dict[str, int] = {
-            "probe": 0, "dispatch": 0, "bounce": 0, "gossip": 0}
+            "probe": 0, "dispatch": 0, "bounce": 0, "gossip": 0,
+            "dropped": 0, "giveup": 0}
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
 
         # seed the treasury that funds duel bonuses / judge fees
         self._apply_ops([CreditOp("mint", "", TREASURY, 1e9)], proposer=None)
@@ -222,6 +231,28 @@ class Network:
     def ledger_stakes(self) -> Dict[str, float]:
         return self.shared_ledger.stakes()
 
+    # ------------------------------------------------------- event accounting
+    def _count_msg(self, kind: str, n: int = 1) -> None:
+        self.msg_counts[kind] += n
+        self.registry.counter("net.messages", kind=kind).inc(n)
+
+    def _count_dropped(self, reason: str) -> None:
+        """A queued request fell out of a queue (churn rerouting, or a
+        shutdown drain with nobody online).  Previously invisible; the
+        event feeds both the ``dropped`` key next to ``msg_counts`` and a
+        labeled registry counter so SLO denominators can be audited
+        against completions end to end (DESIGN.md §Observability)."""
+        self.msg_counts["dropped"] += 1
+        self.registry.counter("net.dropped", reason=reason).inc()
+
+    def _count_giveup(self, path: str) -> None:
+        """An offload attempt found every candidate saturated or burned
+        its probe budget; the request falls back to the origin's local
+        queue.  Counted so 'how often did routing fail to help' is a
+        first-class number rather than a diff of other counters."""
+        self.msg_counts["giveup"] += 1
+        self.registry.counter("net.giveup", path=path).inc()
+
     # -------------------------------------------------------------- workflow
     def submit(self, req: Request) -> None:
         if self.mode == "centralized":
@@ -241,11 +272,16 @@ class Network:
         online = [n for n in self.nodes.values() if n.online]
         if not online:
             if self._shutdown:
+                self._count_dropped("shutdown")
                 return   # draining with nobody online: drop, don't spin
             self.loop.schedule(5.0,
                                lambda: self.resubmit_elsewhere(req, enq))
             return
         pick = online[int(self.rng.integers(len(online)))]
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("route.decide", req.rid, pick.id, self.loop.now,
+                     mode=self.mode, outcome="resubmit")
         # executing another node's traffic is delegation even when it got
         # here via churn rerouting: keep the flag (and the credit transfer
         # at completion) truthful
@@ -333,7 +369,7 @@ class Network:
         """A *live* load probe: one request/response round-trip on the wire
         (counted in ``msg_counts``), whose response also carries a fresh
         ``handoff_bytes`` sample for the transfer-rate EMA."""
-        self.msg_counts["probe"] += 1
+        self._count_msg("probe")
         ld = node.executor.load()
         self._observe_transfer_rate(node.id, self.loop.now, ld.handoff_bytes)
         return _mix_pressure(ld.prefill_headroom, ld.decode_headroom,
@@ -361,6 +397,7 @@ class Network:
         online = [n for n in self.nodes.values() if n.online]
         if not online:
             if self._shutdown:
+                self._count_dropped("shutdown")
                 return   # draining with nobody online: drop, don't spin
             self.loop.schedule(
                 5.0, lambda: self._dispatch_centralized(req, enq))
@@ -368,6 +405,12 @@ class Network:
         best = min(online, key=lambda n: self._est_wait(n, req))
         delegated = best.id != req.origin
         lat = self.msg_latency if delegated else 0.0
+        tr = get_tracer()
+        if tr.enabled:
+            tr.span("route.decide", req.rid, req.origin, enq,
+                    self.loop.now + lat, mode="centralized",
+                    outcome="dispatch" if delegated else "local",
+                    target=best.id)
         self.loop.schedule(lat, lambda: best.enqueue(
             QueuedRequest(req, enq, delegated=delegated,
                           origin_node=req.origin)))
@@ -412,6 +455,7 @@ class Network:
                         for nid in eligible)
         best_pr = scored[0][0]
         if best_pr >= 1.0:
+            self._count_giveup("gossip")
             return False
         enq = self.loop.now if enqueued_at is None else enqueued_at
         near = [nid for pr, nid in scored if pr - best_pr < DIGEST_TIE_EPS]
@@ -435,20 +479,42 @@ class Network:
                         and (best is None or live < best[0])):
                     best = (live, cand)
             if best is None:
+                self._count_giveup("gossip")
                 return False
             pick = best[1]
-            self.msg_counts["dispatch"] += 1
+            self._count_msg("dispatch")
             delay = 2 * self.msg_latency + self.msg_latency
+            tr = get_tracer()
+            if tr.enabled:
+                tr.span("route.decide", req.rid, origin.id, enq,
+                        self.loop.now + delay, mode="gossip",
+                        outcome="probe", target=pick.id, probed=top2,
+                        pressure=round(best[0], 4),
+                        candidates=[[nid, round(pr, 4)]
+                                    for pr, nid in scored[:3]])
             self.loop.schedule(delay, lambda: pick.enqueue(
                 QueuedRequest(req, enq, delegated=True,
                               origin_node=origin.id)))
             return True
+        full = near
         near = self._affinity_filter(origin, req, near)
         pick_id = pos_sample_one(stakes, near, self.rng)
         if pick_id is None:
             return False
         pick = self.nodes[pick_id]
-        self.msg_counts["dispatch"] += 1
+        self._count_msg("dispatch")
+        tr = get_tracer()
+        if tr.enabled:
+            d = origin.view.digest_of(pick_id)
+            tr.span("route.decide", req.rid, origin.id, enq,
+                    self.loop.now + self.msg_latency, mode="gossip",
+                    outcome="dispatch", target=pick_id,
+                    pressure=round(best_pr, 4),
+                    staleness=(round(self.loop.now - d.t, 4)
+                               if d is not None else None),
+                    affinity=len(near) < len(full),
+                    candidates=[[nid, round(pr, 4)]
+                                for pr, nid in scored[:3]])
         self.loop.schedule(self.msg_latency, lambda: self._deliver_offload(
             pick, QueuedRequest(req, enq, delegated=True,
                                 origin_node=origin.id)))
@@ -485,7 +551,11 @@ class Network:
         if cand.online and not cand.policy.accepts_delegated(
                 cand.n_active, cand.profile.saturation,
                 len(cand.delegated_queue), self.rng):
-            self.msg_counts["bounce"] += 1
+            self._count_msg("bounce")
+            tr = get_tracer()
+            if tr.enabled:
+                tr.event("route.decide", qr.req.rid, cand.id,
+                         self.loop.now, mode=self.mode, outcome="bounce")
             origin = self.nodes.get(qr.origin_node)
             if origin is not None and origin.online:
                 origin.enqueue(QueuedRequest(qr.req, qr.enqueue_time,
@@ -538,13 +608,21 @@ class Network:
                     and cand.policy.accepts_delegated(
                         cand.n_active, cand.profile.saturation,
                         len(cand.delegated_queue), self.rng)):
-                self.msg_counts["dispatch"] += 1
+                self._count_msg("dispatch")
                 enq = self.loop.now if enqueued_at is None else enqueued_at
                 delay = 2 * self.msg_latency * probes + self.msg_latency
+                tr = get_tracer()
+                if tr.enabled:
+                    tr.span("route.decide", req.rid, origin.id, enq,
+                            self.loop.now + delay, mode="probe",
+                            outcome="dispatch", target=cand_id,
+                            probes=probes,
+                            pressure=round(pressure[cand_id], 4))
                 self.loop.schedule(delay, lambda cand=cand: cand.enqueue(
                     QueuedRequest(req, enq, delegated=True,
                                   origin_node=origin.id)))
                 return True
+        self._count_giveup("probe")
         return False
 
     @property
@@ -565,6 +643,11 @@ class Network:
         double-record the user request or run a judge against the wrong
         model.
         """
+        self._count_dropped("offline")
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("route.drop", qr.req.rid, node.id, self.loop.now,
+                     duel=qr.duel_id is not None)
         if qr.duel_id is None:
             self.resubmit_elsewhere(qr.req, enqueued_at=qr.enqueue_time)
             return
@@ -637,6 +720,11 @@ class Network:
             self._on_duel_response(executor, qr)
             return
         finish = now + (self.msg_latency if qr.delegated else 0.0)
+        tr = get_tracer()
+        if tr.enabled and qr.delegated:
+            # the response transit back to the origin — the last leg of
+            # the request's latency partition (DESIGN.md §Observability)
+            tr.span("route.return", qr.req.rid, executor.id, now, finish)
         self.metrics.record(CompletedRequest(
             rid=qr.req.rid, origin=qr.origin_node, executor=executor.id,
             arrival=qr.req.arrival, finish=finish, slo_s=qr.req.slo_s,
@@ -758,7 +846,7 @@ class Network:
                     peer = self.nodes[peers[int(i)]]
                     if peer.online:
                         gossip_round(node.view, peer.view)
-                        self.msg_counts["gossip"] += 2  # push + pull
+                        self._count_msg("gossip", 2)    # push + pull
             node.view.suspect_failures(self.loop.now, self.suspect_after)
         self.loop.schedule(self.gossip_interval, self._gossip_tick)
 

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.gossip import PeerView
 from repro.core.policy import NodePolicy
+from repro.obs import get_tracer
 from repro.sim.executor import Executor, TokenBucketExecutor
 from repro.sim.servicemodel import BackendProfile
 from repro.sim.workload import Request
@@ -41,6 +42,11 @@ class QueuedRequest:
     duel_id: Optional[str] = None # set if this execution is part of a duel
     started_at: Optional[float] = None      # executor admission time
     first_token_at: Optional[float] = None  # prefill done, first decode token
+    queued_at: Optional[float] = None       # arrival at the LAST hop's queue
+                                            # (enqueue_time is preserved
+                                            # across delegation/bounces, so
+                                            # the trace plane needs its own
+                                            # last-hop stamp)
 
 
 class Node:
@@ -79,6 +85,7 @@ class Node:
 
     def bind_executor(self, loop) -> None:
         self.executor = self._executor_factory(self)
+        self.executor.owner = self.id       # trace span identity
         self.executor.bind(loop, self._on_exec_complete)
 
     def publish_digest(self, now: float) -> None:
@@ -119,6 +126,10 @@ class Node:
                                               self.balance(), rng)):
             if net.try_offload(self, req):
                 return
+        tr = get_tracer()
+        if tr.enabled:
+            tr.span("route.decide", req.rid, self.id, req.arrival,
+                    net.loop.now, mode=net.mode, outcome="local")
         self.enqueue(QueuedRequest(req, net.loop.now, delegated=False,
                                    origin_node=self.id))
 
@@ -129,6 +140,7 @@ class Node:
             # network instead of re-stranding it in a drained queue
             self.network.on_queued_dropped(self, qr)
             return
+        qr.queued_at = self.network.loop.now
         (self.delegated_queue if qr.delegated else self.local_queue).append(qr)
         self._maybe_start()
 
@@ -156,6 +168,15 @@ class Node:
                 q = self.delegated_queue if qr.delegated else self.local_queue
                 q.insert(0, qr)
                 break
+            tr = get_tracer()
+            if tr.enabled:
+                now = self.network.loop.now
+                t0 = qr.queued_at if qr.queued_at is not None \
+                    else qr.enqueue_time
+                tr.span("executor.queue", qr.req.rid, self.id, t0, now,
+                        delegated=qr.delegated)
+                tr.event("executor.admit", qr.req.rid, self.id, now,
+                         active=self.executor.n_active)
 
     def _on_exec_complete(self, qr: QueuedRequest, started_at: float,
                           first_token_at: float) -> None:

@@ -25,6 +25,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import DuelParams, Network, Node, NodePolicy
 from repro.models import registry
+from repro.obs import (Tracer, breakdown_report, set_tracer,
+                       write_chrome_trace)
 from repro.serving import (DisaggEngineExecutor, Engine, EngineExecutor,
                            GenRequest, SpecEngineExecutor)
 from repro.sim import make_profile
@@ -58,6 +60,11 @@ def main(argv=None) -> int:
                          "scale pools — half the bytes per resident token, "
                          "so the same HBM budget admits ~2x the concurrent "
                          "requests (DESIGN.md §6.1-paged; implies paged)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="record lifecycle spans (DESIGN.md §Observability) "
+                         "for the protocol sim AND the real-engine replay, "
+                         "write a Perfetto/Chrome trace_event JSON to PATH, "
+                         "and print the per-request latency breakdown")
     args = ap.parse_args(argv)
     if args.spec and args.disagg:
         ap.error("--spec and --disagg are separate backends; pick one")
@@ -101,11 +108,17 @@ def main(argv=None) -> int:
             executors[nid] = EngineExecutor(
                 Engine(cfg, params, max_batch=4, bucket=32, seed=i,
                        paged=args.paged or args.kv_quant))
+        executors[nid].owner = nid     # real-engine spans carry the node id
         prof = make_profile("qwen3-8b", "RTX3090", "sglang",
                             quality=0.4 + 0.15 * i)
         pol = NodePolicy(offload_util_threshold=0.15,
                          offload_queue_threshold=0, target_utilization=0.9)
         net.add_node(Node(nid, prof, policy=pol))
+
+    # with --trace, both the protocol sim (sim clock) and the real-engine
+    # replay (wall clock) record spans into one stream; the exporter maps
+    # the two clock domains onto separate Perfetto processes
+    old_tracer = set_tracer(Tracer()) if args.trace else None
 
     # submit all user requests to node1 (the hot node)
     t_wall = time.time()
@@ -164,6 +177,12 @@ def main(argv=None) -> int:
           f"avg queue wait: {m.avg_queue_wait():.2f}s")
     print(f"credit balances: "
           f"{ {n: round(net.ledger_balance(n), 1) for n in net.nodes} }")
+    if args.trace:
+        tracer = set_tracer(old_tracer)
+        payload = write_chrome_trace(tracer.spans, args.trace)
+        print(breakdown_report(tracer.spans, limit=3))
+        print(f"wrote {len(tracer.spans)} spans "
+              f"({len(payload['traceEvents'])} events) to {args.trace}")
     return 0
 
 

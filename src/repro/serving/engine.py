@@ -57,7 +57,6 @@ benchmarks use the simulated executor instead (see DESIGN.md §6.1).
 
 from __future__ import annotations
 
-import time
 import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -68,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.obs import WALL, get_registry, get_tracer, wall_now
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
 from repro.sim.executor import (paged_admit_ok, pages_for, prefix_hit_pages,
@@ -191,6 +191,9 @@ class Engine:
         self.continuous = continuous
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
+        # trace span identity (DESIGN.md §Observability): the owning
+        # executor forwards the node id the Node binds onto it
+        self.owner = ""
         fam = registry.get_family(cfg)
         # right-padding is only inert with a full cache: a sliding-window
         # ring keeps the last `window` positions of the PADDED sequence, so
@@ -381,7 +384,7 @@ class Engine:
                 "the speculative engine is greedy-only: draft acceptance "
                 "compares argmax choices (temperature sampling would need "
                 "rejection sampling, which breaks the bit-parity invariant)")
-        r.enqueued_at = time.perf_counter()
+        r.enqueued_at = wall_now()
         self._queue.append(r)
 
     def requeue(self, r: GenRequest) -> None:
@@ -510,11 +513,13 @@ class Engine:
         for j, (_, r) in enumerate(take):
             toks[j, : len(r.tokens)] = r.tokens      # right-pad (inert)
             last[j] = len(r.tokens) - 1
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
-                                      self._capacity, jnp.asarray(last))
-        logits.block_until_ready()
-        self.stats.prefill_wall_s += time.perf_counter() - t0
+        with get_tracer().wall("engine.prefill", who=self.owner,
+                               rows=n, tokens=plen * n) as sp:
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)},
+                                          self._capacity, jnp.asarray(last))
+            logits.block_until_ready()
+        self.stats.prefill_wall_s += sp.dt
         self.stats.prefill_tokens += plen * n
         self.stats.batches += 1
         kv = {k: v for k, v in cache.items() if k != "length"}
@@ -529,7 +534,7 @@ class Engine:
         self._cache = jax.tree_util.tree_map(
             lambda p, nw: p.at[:, rows].set(nw), self._cache, kv)
         self._logits = self._logits.at[rows].set(logits)
-        now = time.perf_counter()
+        now = wall_now()
         for i, r in take:
             r.started_at = now
             self._slots[i] = _Slot(r)
@@ -685,13 +690,14 @@ class Engine:
             self._prefill_cold(cold)
         if warm:
             self._prefill_warm(warm, {i: len(shared[i]) for i, _ in warm})
-        now = time.perf_counter()       # started_at matches the slot path:
+        now = wall_now()                # started_at matches the slot path:
         for _, r in take:               # stamped after prefill completes
             r.started_at = now
         self.stats.batches += 1
         self.stats.peak_resident = max(self.stats.peak_resident,
                                        self.active_slots())
         if self.prefix_cache:
+            reg = get_registry()
             for i, r in take:
                 cached = len(shared[i]) * ps
                 p = max(1, len(r.tokens))
@@ -699,6 +705,8 @@ class Engine:
                 self.prefix_hit_tokens += cached
                 self.prefix_hit_rate += PREFIX_HIT_EMA_BETA * (
                     cached / p - self.prefix_hit_rate)
+                reg.counter("engine.prefix.lookup_tokens").inc(p)
+                reg.counter("engine.prefix.hit_tokens").inc(cached)
         if self.spec:
             plen = self._pad_bucket(max(len(r.tokens) for _, r in take))
             plen = -(-plen // ps) * ps
@@ -722,11 +730,13 @@ class Engine:
             toks[j, : len(r.tokens)] = r.tokens      # right-pad (inert)
             last[j] = len(r.tokens) - 1
             phys[j, : len(self._row_pages[i])] = self._row_pages[i]
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
-                                      plen, jnp.asarray(last))
-        logits.block_until_ready()
-        self.stats.prefill_wall_s += time.perf_counter() - t0
+        with get_tracer().wall("engine.prefill", who=self.owner, path="cold",
+                               rows=n, tokens=plen * n) as sp:
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)},
+                                          plen, jnp.asarray(last))
+            logits.block_until_ready()
+        self.stats.prefill_wall_s += sp.dt
         self.stats.prefill_tokens += plen * n
         kv = {k: v for k, v in cache.items() if k != "length"}
         if self._pools is None:
@@ -766,10 +776,13 @@ class Engine:
         cache = {**self._pools,
                  "block_tables": jnp.asarray(self._block_tables[:, :w]),
                  "lengths": jnp.asarray(self._lengths, jnp.int32)}
-        t0 = time.perf_counter()
-        vlogits, cache = self._verify(self.params, cache, jnp.asarray(toks))
-        vlogits.block_until_ready()
-        self.stats.prefill_wall_s += time.perf_counter() - t0
+        with get_tracer().wall("engine.prefill", who=self.owner, path="warm",
+                               rows=len(warm), tokens=S * len(warm),
+                               cached_pages=sum(hits.values())) as sp:
+            vlogits, cache = self._verify(self.params, cache,
+                                          jnp.asarray(toks))
+            vlogits.block_until_ready()
+        self.stats.prefill_wall_s += sp.dt
         self.stats.prefill_tokens += S * len(warm)
         self._pools = {n: cache[n] for n in self._pool_names}
         self._tables_dirty = True
@@ -955,6 +968,9 @@ class Engine:
         cached = len(pages) * self.page_size
         self.prefix_lookup_tokens += p
         self.prefix_hit_tokens += cached
+        reg = get_registry()
+        reg.counter("engine.prefix.lookup_tokens").inc(p)
+        reg.counter("engine.prefix.hit_tokens").inc(cached)
         self.prefix_hit_rate += PREFIX_HIT_EMA_BETA * (
             cached / p - self.prefix_hit_rate)
         if not pages:
@@ -968,12 +984,13 @@ class Engine:
         and install its contiguous KV rows next to the target's slots
         (DESIGN.md §6.1-spec).  The draft's prompt logits are discarded:
         drafting always starts by feeding the pending token."""
-        t0 = time.perf_counter()
-        dlogits, dcache = self._draft_prefill(
-            self.spec_draft_params, {"tokens": jnp.asarray(toks)},
-            self._draft_capacity, jnp.asarray(last))
-        dlogits.block_until_ready()
-        self.stats.draft_wall_s += time.perf_counter() - t0
+        with get_tracer().wall("engine.spec_draft", who=self.owner,
+                               path="prefill", rows=len(take)) as sp:
+            dlogits, dcache = self._draft_prefill(
+                self.spec_draft_params, {"tokens": jnp.asarray(toks)},
+                self._draft_capacity, jnp.asarray(last))
+            dlogits.block_until_ready()
+        self.stats.draft_wall_s += sp.dt
         dkv = {k: v for k, v in dcache.items() if k != "length"}
         if self._draft_cache is None:
             self._draft_cache = jax.tree_util.tree_map(
@@ -1018,6 +1035,11 @@ class Engine:
             self._draft_lengths[i] = 0
         self._queue.insert(0, r)
         self.stats.preempted += 1
+        get_registry().counter("engine.preempted").inc()
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("executor.preempt", r.rid, self.owner, wall_now(),
+                     clock=WALL, row=i)
 
     def _ensure_decode_pages(self, survivors: List[int],
                              lookahead: int = 1) -> List[int]:
@@ -1223,7 +1245,7 @@ class Engine:
         cur = sample(sk, self._logits, temperature=temps,
                      vocab_size=self.cfg.vocab_size)
         cur_np = np.asarray(cur[:, 0])
-        now = time.perf_counter()
+        now = wall_now()
         finished: List[GenRequest] = []
         survivors: List[int] = []
         for i in resident:
@@ -1241,38 +1263,41 @@ class Engine:
         #    their cache write lands at their own depth and is overwritten by
         #    their first real decode, and their logits are kept, not replaced
         if survivors:
-            t0 = time.perf_counter()
-            if self.paged:
-                # trim the table to the pages live rows can actually touch
-                # and reuse the device-resident copy whenever no host-side
-                # mutation invalidated it (§Perf-kernels)
-                w = self._table_width()
-                if (self._tables_dirty or self._bt_dev is None
-                        or self._bt_dev.shape[1] != w):
-                    self._bt_dev = jnp.asarray(self._block_tables[:, :w])
-                    self._len_dev = jnp.asarray(self._lengths, jnp.int32)
-                cache = {**self._pools, "block_tables": self._bt_dev,
-                         "lengths": self._len_dev}
-                logits, cache = self._decode_paged(self.params, cache, cur)
-                logits.block_until_ready()
-                self._pools = {n: cache[n] for n in self._pool_names}
-                # the cache is donated: only the RETURNED tables/lengths are
-                # valid now.  They advanced every row by one; reuse is only
-                # sound when every active row was a survivor — a rider row
-                # (admitted mid-step) holds its prompt length on the host
-                # but length+1 on the device, so its next write would skip
-                # a position.  Any rider forces a re-upload.
-                self._bt_dev = cache["block_tables"]
-                self._len_dev = cache["lengths"]
-                self._tables_dirty = self.active_slots() != len(survivors)
-            else:
-                cache = {**self._cache,
-                         "length": jnp.asarray(self._lengths, jnp.int32)}
-                logits, cache = self._decode(self.params, cache, cur)
-                logits.block_until_ready()
-                self._cache = {k: v for k, v in cache.items()
-                               if k != "length"}
-            self.stats.decode_wall_s += time.perf_counter() - t0
+            with get_tracer().wall("engine.decode_step", who=self.owner,
+                                   batch=len(survivors)) as spn:
+                if self.paged:
+                    # trim the table to the pages live rows can actually
+                    # touch and reuse the device-resident copy whenever no
+                    # host-side mutation invalidated it (§Perf-kernels)
+                    w = self._table_width()
+                    if (self._tables_dirty or self._bt_dev is None
+                            or self._bt_dev.shape[1] != w):
+                        self._bt_dev = jnp.asarray(self._block_tables[:, :w])
+                        self._len_dev = jnp.asarray(self._lengths, jnp.int32)
+                    cache = {**self._pools, "block_tables": self._bt_dev,
+                             "lengths": self._len_dev}
+                    logits, cache = self._decode_paged(self.params, cache,
+                                                       cur)
+                    logits.block_until_ready()
+                    self._pools = {n: cache[n] for n in self._pool_names}
+                    # the cache is donated: only the RETURNED tables/lengths
+                    # are valid now.  They advanced every row by one; reuse
+                    # is only sound when every active row was a survivor — a
+                    # rider row (admitted mid-step) holds its prompt length
+                    # on the host but length+1 on the device, so its next
+                    # write would skip a position.  Any rider forces a
+                    # re-upload.
+                    self._bt_dev = cache["block_tables"]
+                    self._len_dev = cache["lengths"]
+                    self._tables_dirty = self.active_slots() != len(survivors)
+                else:
+                    cache = {**self._cache,
+                             "length": jnp.asarray(self._lengths, jnp.int32)}
+                    logits, cache = self._decode(self.params, cache, cur)
+                    logits.block_until_ready()
+                    self._cache = {k: v for k, v in cache.items()
+                                   if k != "length"}
+            self.stats.decode_wall_s += spn.dt
             keep = jnp.asarray(survivors)
             self._logits = self._logits.at[keep].set(logits[keep])
             self._lengths[survivors] += 1
@@ -1308,7 +1333,7 @@ class Engine:
         cur = sample(sk, self._logits, temperature=0.0,
                      vocab_size=self.cfg.vocab_size)
         cur_np = np.asarray(cur[:, 0])
-        now = time.perf_counter()
+        now = wall_now()
         finished: List[GenRequest] = []
         survivors: List[int] = []
         for i in resident:
@@ -1332,33 +1357,35 @@ class Engine:
         #    fully overwritten before it is ever attended)
         drafts = np.zeros((self.max_batch, k), np.int32)
         tok = cur
-        t0 = time.perf_counter()
-        for j in range(k):
+        with get_tracer().wall("engine.spec_draft", who=self.owner,
+                               k=k, batch=len(survivors)) as dsp:
+            for j in range(k):
+                dcache = {**self._draft_cache,
+                          "length": jnp.asarray(self._draft_lengths + j,
+                                                jnp.int32)}
+                dlogits, dcache = self._draft_decode(self.spec_draft_params,
+                                                     dcache, tok)
+                dlogits.block_until_ready()
+                self._draft_cache = {n: v for n, v in dcache.items()
+                                     if n != "length"}
+                tok = _greedy_tokens(dlogits[:, -1],
+                                     self.spec_draft_cfg.vocab_size)[:, None]
+                drafts[:, j] = np.asarray(tok[:, 0])
+            # land the last draft's KV too: each proposing forward writes
+            # its INPUT token, so d_k would be missing from the draft cache
+            # when all k drafts are accepted and the next round builds on it
+            # — one discarded forward writes it at draft position n + k
+            # (harmless for rows that accept less: the position is past
+            # their valid prefix and overwritten before it is ever attended)
             dcache = {**self._draft_cache,
-                      "length": jnp.asarray(self._draft_lengths + j,
+                      "length": jnp.asarray(self._draft_lengths + k,
                                             jnp.int32)}
             dlogits, dcache = self._draft_decode(self.spec_draft_params,
                                                  dcache, tok)
             dlogits.block_until_ready()
             self._draft_cache = {n: v for n, v in dcache.items()
                                  if n != "length"}
-            tok = _greedy_tokens(dlogits[:, -1],
-                                 self.spec_draft_cfg.vocab_size)[:, None]
-            drafts[:, j] = np.asarray(tok[:, 0])
-        # land the last draft's KV too: each proposing forward writes its
-        # INPUT token, so d_k would be missing from the draft cache when
-        # all k drafts are accepted and the next round builds on it — one
-        # discarded forward writes it at draft position n + k (harmless
-        # for rows that accept less: the position is past their valid
-        # prefix and overwritten before it is ever attended)
-        dcache = {**self._draft_cache,
-                  "length": jnp.asarray(self._draft_lengths + k, jnp.int32)}
-        dlogits, dcache = self._draft_decode(self.spec_draft_params,
-                                             dcache, tok)
-        dlogits.block_until_ready()
-        self._draft_cache = {n: v for n, v in dcache.items()
-                             if n != "length"}
-        self.stats.draft_wall_s += time.perf_counter() - t0
+        self.stats.draft_wall_s += dsp.dt
         self.stats.spec_drafted += k * len(survivors)
         # 4. verify pending + drafts in ONE batched target forward; the
         #    verify scatters all k+1 tokens' KV into the pages claimed in
@@ -1372,12 +1399,13 @@ class Engine:
         cache = {**self._pools,
                  "block_tables": jnp.asarray(self._block_tables[:, :w]),
                  "lengths": jnp.asarray(self._lengths, jnp.int32)}
-        t0 = time.perf_counter()
-        vlogits, cache = self._verify(self.params, cache, jnp.asarray(toks))
-        vlogits.block_until_ready()
-        dt = time.perf_counter() - t0
-        self.stats.decode_wall_s += dt
-        self.stats.verify_wall_s += dt
+        with get_tracer().wall("engine.spec_verify", who=self.owner,
+                               k=k, batch=len(survivors)) as vsp:
+            vlogits, cache = self._verify(self.params, cache,
+                                          jnp.asarray(toks))
+            vlogits.block_until_ready()
+        self.stats.decode_wall_s += vsp.dt
+        self.stats.verify_wall_s += vsp.dt
         self._pools = {n: cache[n] for n in self._pool_names}
         # the target's greedy choice at every position, with the same
         # vocab masking + argmax as sample(temperature=0)
@@ -1385,7 +1413,7 @@ class Engine:
         # 5. per row: accept the longest draft prefix matching the target,
         #    emit it under the usual EOS/budget rules, advance the caches
         #    over pending + accepted tokens only
-        now = time.perf_counter()
+        now = wall_now()
         rows: List[int] = []
         pos: List[int] = []
         accepts: List[int] = []
@@ -1457,14 +1485,17 @@ class Engine:
             toks[i, plen - len(r.tokens):] = r.tokens     # left-pad
         batch = {"tokens": jnp.asarray(toks)}
         cap = plen + self._pad_bucket(max_new)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch, cap)
-        logits.block_until_ready()
-        self.stats.prefill_wall_s += time.perf_counter() - t0
+        with get_tracer().wall("engine.prefill", who=self.owner, path="wave",
+                               rows=len(reqs),
+                               tokens=plen * len(reqs)) as sp:
+            logits, cache = self._prefill(self.params, batch, cap)
+            logits.block_until_ready()
+        self.stats.prefill_wall_s += sp.dt
         self.stats.prefill_tokens += plen * len(reqs)
         self.stats.batches += 1
+        started = wall_now()
         for r in reqs:
-            r.started_at = time.perf_counter()
+            r.started_at = started
 
         out = np.zeros((len(reqs), max_new), np.int32)
         done = np.zeros(len(reqs), bool)
@@ -1479,17 +1510,18 @@ class Engine:
                          vocab_size=self.cfg.vocab_size)
             out[:, step] = np.asarray(cur[:, 0])
             if step == 0:
-                now = time.perf_counter()
+                now = wall_now()
                 for r in reqs:
                     r.first_token_at = now
             done |= out[:, step] == self.eos_id
             done |= step + 1 >= budgets
             if done.all():
                 break
-            t0 = time.perf_counter()
-            logits, cache = self._decode(self.params, cache, cur)
-            logits.block_until_ready()
-            self.stats.decode_wall_s += time.perf_counter() - t0
+            with get_tracer().wall("engine.decode_step", who=self.owner,
+                                   batch=int((~done).sum())) as sp:
+                logits, cache = self._decode(self.params, cache, cur)
+                logits.block_until_ready()
+            self.stats.decode_wall_s += sp.dt
             self.stats.decode_tokens += int((~done).sum())
             self.stats.decode_steps += 1
         for i, r in enumerate(reqs):
@@ -1498,7 +1530,7 @@ class Engine:
                                                     self.eos_id).any() \
                 else r.max_new
             r.result = row[: max(int(end), 1)]
-            r.finished_at = time.perf_counter()
+            r.finished_at = wall_now()
         self.stats.served += len(reqs)
         return reqs
 

@@ -48,6 +48,7 @@ from __future__ import annotations
 from dataclasses import replace
 from typing import Dict, List, Optional
 
+from repro.obs import WALL, get_tracer, wall_now
 from repro.serving.engine import Engine, EngineStats, GenRequest, KVHandoff
 from repro.sim.executor import (Executor, ExecutorLoad, paged_admit_ok,
                                 pages_for, spec_expected_tokens)
@@ -84,6 +85,17 @@ class EngineExecutor(Executor):
         self._on_complete = None
 
     # ------------------------------------------------------------- interface
+    @property
+    def owner(self) -> str:   # type: ignore[override]
+        """Trace identity forwards to the engine: its wall spans
+        (``engine.prefill``/``engine.decode_step``) must carry the node id
+        the Node binds onto this executor."""
+        return self.engine.owner
+
+    @owner.setter
+    def owner(self, v: str) -> None:
+        self.engine.owner = v
+
     @property
     def n_active(self) -> int:
         return self.engine.active_slots()
@@ -236,6 +248,16 @@ class DisaggEngineExecutor(Executor):
 
     # ------------------------------------------------------------- interface
     @property
+    def owner(self) -> str:   # type: ignore[override]
+        return self.prefill.owner
+
+    @owner.setter
+    def owner(self, v: str) -> None:
+        # both phase engines speak for the same node in traces
+        self.prefill.owner = v
+        self.decode.owner = v
+
+    @property
     def n_active(self) -> int:
         return self.prefill.active_slots() + self.decode.active_slots()
 
@@ -324,8 +346,16 @@ class DisaggEngineExecutor(Executor):
         # pages it already holds cached (DESIGN.md §6.1-prefix): those are
         # pinned against eviction, skipped by the gather, and excluded
         # from both ends' handoff_bytes
-        self._pending.extend(
-            self.prefill.extract_handoffs(self.decode.prefix_pin))
+        handoffs = self.prefill.extract_handoffs(self.decode.prefix_pin)
+        if handoffs:
+            tr = get_tracer()
+            if tr.enabled:
+                t = wall_now()
+                for h in handoffs:
+                    tr.event("disagg.handoff", h.req.rid, self.owner, t,
+                             clock=WALL, bytes=h.kv_bytes,
+                             cached_tokens=h.cached_tokens)
+        self._pending.extend(handoffs)
         if self.decode.has_work():
             finished.extend(self.decode.step())    # overlaps pending copies
         while self._pending and self.decode.accept_handoff(self._pending[0]):

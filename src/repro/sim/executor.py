@@ -88,6 +88,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, replace
 from typing import Any, Callable, List, Optional, Tuple
 
+from repro.obs import get_tracer
 from repro.sim.events import EventLoop
 from repro.sim.servicemodel import (DIGEST_STALENESS_TAU_S,
                                     KV_BYTES_PER_TOKEN, KV_TOKENS_PER_STREAM,
@@ -316,6 +317,10 @@ def digest_staleness_weight(age_s: float,
 
 class Executor(ABC):
     """Backend-agnostic execution contract held by a Node's Model Manager."""
+
+    # trace identity: who emitted a span (DESIGN.md §Observability).  Set
+    # by the owning Node at bind time; standalone executors keep "".
+    owner: str = ""
 
     def digest(self, now: float) -> LoadDigest:
         """Gossip digest of the current load snapshot (DESIGN.md
@@ -564,8 +569,16 @@ class TokenBucketExecutor(Executor):
         # completions fire after the reschedule: the callback may re-enter
         # admit() (node pulls the next queued request) and reschedule again
         for s in done:
-            self._on_complete(s.item, s.started_at,
-                              s.first_token_at or self._loop.now)
+            ft = s.first_token_at if s.first_token_at is not None \
+                else self._loop.now
+            tr = get_tracer()
+            if tr.enabled:
+                rid = getattr(getattr(s.item, "req", None), "rid", "")
+                tr.span("engine.prefill", rid, self.owner, s.started_at, ft,
+                        prompt_tokens=s.prompt_total)
+                tr.span("engine.decode", rid, self.owner, ft,
+                        self._loop.now, output_tokens=s.output_total)
+            self._on_complete(s.item, s.started_at, ft)
 
     def _on_boundary(self) -> None:
         self._pending_ev = None
@@ -829,6 +842,16 @@ class DisaggTokenBucketExecutor(Executor):
         self._advance()
         self._transfers.remove(s)
         self._handoffs.append(s)
+        tr = get_tracer()
+        if tr.enabled:
+            # the wire leg: transfer starts the instant prefill finishes
+            # (first_token_at) and lands now (DESIGN.md §Observability)
+            rid = getattr(getattr(s.item, "req", None), "rid", "")
+            tr.span("disagg.handoff", rid, self.owner,
+                    s.first_token_at if s.first_token_at is not None
+                    else self._loop.now,
+                    self._loop.now,
+                    bytes=max(1, s.prompt_total) * self.kv_bytes_per_token)
         self._admit_decode()
 
     def _reschedule(self) -> None:
@@ -867,8 +890,18 @@ class DisaggTokenBucketExecutor(Executor):
             # completion callbacks re-enter admit() (node queue refill)
             self._admit_decode()
             for s in done:
-                self._on_complete(s.item, s.started_at,
-                                  s.first_token_at or now)
+                ft = s.first_token_at if s.first_token_at is not None \
+                    else now
+                tr = get_tracer()
+                if tr.enabled:
+                    rid = getattr(getattr(s.item, "req", None), "rid", "")
+                    tr.span("engine.prefill", rid, self.owner,
+                            s.started_at, ft, prompt_tokens=s.prompt_total)
+                    # covers wire + handoff queue + decode (the nested
+                    # disagg.handoff span shows the wire leg)
+                    tr.span("engine.decode", rid, self.owner, ft, now,
+                            output_tokens=s.output_total, stage="disagg")
+                self._on_complete(s.item, s.started_at, ft)
 
     def _on_boundary(self) -> None:
         self._pending_ev = None

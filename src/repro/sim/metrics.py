@@ -92,8 +92,12 @@ class MetricsCollector:
         user = self._user()
         return float(np.mean([c.delegated for c in user])) if user else 0.0
 
-    def per_executor_counts(self) -> Dict[str, int]:
+    def per_executor_counts(self, user_only: bool = True) -> Dict[str, int]:
+        """Completions per executing node.  Like every other aggregate
+        here this defaults to USER traffic — duel challengers/judges used
+        to be counted too, which overstated duel-heavy nodes' share.
+        ``user_only=False`` restores the raw count for duel accounting."""
         out: Dict[str, int] = {}
-        for c in self.completed:
+        for c in (self._user() if user_only else self.completed):
             out[c.executor] = out.get(c.executor, 0) + 1
         return out

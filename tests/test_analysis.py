@@ -28,7 +28,7 @@ from repro.analysis.framework import Finding, RepoIndex, rule_matches
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
 ALL_RULES = ("compat-boundary", "docs-anchors", "kernel-lint", "layering",
-             "twin-drift")
+             "obs-lint", "twin-drift")
 
 
 def mk_repo(tmp_path, files):
@@ -63,6 +63,7 @@ DESIGN_OK = """\
     ## §6.3 Ledger
     ## §7 Analysis
     ## §Arch-applicability
+    ## §Observability
 """
 MD_STUBS = {"DESIGN.md": DESIGN_OK, "ROADMAP.md": "roadmap\n",
             "CHANGES.md": "changes\n", "README.md": "readme\n"}
@@ -109,6 +110,17 @@ SEEDED = {
     "docs-anchors": {
         **MD_STUBS,
         "ROADMAP.md": "see §no-such-section\n",
+    },
+    "obs-lint": {
+        **MD_STUBS,
+        # a governed module reading a raw clock (and no longer resolving
+        # the tracer) trips both wall-clock and emission
+        "src/repro/core/network.py": """\
+            import time
+
+            def now():
+                return time.perf_counter()
+        """,
     },
 }
 
@@ -434,6 +446,90 @@ class TestTwinDrift:
         assert ids.count("twin-drift/duplicate-const") == 2
 
 
+class TestObsLint:
+    def test_span_ctor_outside_obs_fires(self, tmp_path):
+        root = mk_repo(tmp_path, {**MD_STUBS, "src/repro/core/x.py": """\
+            from repro.obs.tracer import Span
+
+            def f(spans):
+                spans.append(Span("route.decide", "r1", "n0", 0.0, 1.0))
+        """})
+        findings = analyze(root, "obs-lint").new
+        bad = [f for f in findings
+               if f.rule_id == "obs-lint/span-construction"]
+        assert len(bad) == 1 and bad[0].path == "src/repro/core/x.py"
+
+    def test_obs_home_and_tracer_api_are_silent(self, tmp_path):
+        root = mk_repo(tmp_path, {
+            **MD_STUBS,
+            # the sanctioned home constructs Span freely
+            "src/repro/obs/tracer.py": """\
+            class Span:
+                pass
+
+            def span(name):
+                return Span()
+        """,
+            # recording through the Tracer API is the idiomatic form
+            "src/repro/core/x.py": """\
+            from repro.obs import get_tracer
+
+            def f(rid):
+                tr = get_tracer()
+                if tr.enabled:
+                    tr.span("route.decide", rid, "n0", 0.0, 1.0)
+        """})
+        assert rule_ids(analyze(root, "obs-lint")) == []
+
+    def test_raw_clock_in_governed_module_fires(self, tmp_path):
+        root = mk_repo(tmp_path, {
+            **MD_STUBS,
+            "src/repro/serving/engine.py": """\
+            import time
+            from time import perf_counter
+
+            from repro.obs import get_tracer
+
+            def step():
+                get_tracer()
+                return perf_counter() - time.time() + time.monotonic()
+        """})
+        ids = rule_ids(analyze(root, "obs-lint"))
+        # perf_counter(), time.time(), time.monotonic() — three reads
+        assert ids.count("obs-lint/wall-clock") == 3
+        assert "obs-lint/emission" not in ids
+
+    def test_wall_now_and_ungoverned_clocks_are_silent(self, tmp_path):
+        root = mk_repo(tmp_path, {
+            **MD_STUBS,
+            # governed module stamping through the sanctioned API
+            "src/repro/serving/engine.py": """\
+            from repro.obs import get_tracer, wall_now
+
+            def step(self):
+                with get_tracer().wall("engine.decode_step") as sp:
+                    t = wall_now()
+                return t
+        """,
+            # raw clocks outside the governed set (drivers, benches) are
+            # not obs-lint's business
+            "src/repro/launch/serve.py": """\
+            import time
+
+            def main():
+                return time.perf_counter()
+        """})
+        assert rule_ids(analyze(root, "obs-lint")) == []
+
+    def test_governed_module_without_tracer_fires_emission(self, tmp_path):
+        root = mk_repo(tmp_path, {**MD_STUBS, "src/repro/core/node.py": """\
+            def enqueue(qr):
+                return qr
+        """})
+        ids = rule_ids(analyze(root, "obs-lint"))
+        assert ids == ["obs-lint/emission"]
+
+
 class TestDocAnchors:
     def test_missing_required_heading(self, tmp_path):
         files = dict(MD_STUBS)
@@ -534,7 +630,7 @@ class TestCLI:
         res = self._run("--root", str(REPO), cwd=REPO)
         assert res.returncode == 0, res.stdout + res.stderr
 
-    def test_list_rules_names_all_five(self):
+    def test_list_rules_names_all_six(self):
         res = self._run("--list-rules", cwd=REPO)
         assert res.returncode == 0
         for rule in ALL_RULES:
@@ -544,7 +640,7 @@ class TestCLI:
 class TestLivePass:
     """Tier-1 acceptance: the analyzer over THIS repository."""
 
-    def test_all_five_checkers_registered(self):
+    def test_all_six_checkers_registered(self):
         assert [c.rule_id for c in all_checkers()] == sorted(ALL_RULES)
 
     def test_repo_is_clean_and_fast(self):

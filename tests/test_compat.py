@@ -107,7 +107,7 @@ class TestBenchSchema:
 
         from benchmarks.run import check_bench_schema
         payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
-        assert payload["schema"] == 8
+        assert payload["schema"] == 9
         assert "ttft_speedup_prompt_heavy" in payload["mix"]
         for key in ("handoffs", "transfer_inflight_peak"):
             broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
@@ -231,6 +231,34 @@ class TestBenchSchema:
         broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
         broken["prefix_cache"]["routing"]["affinity"]["hit_rate"] = \
             broken["prefix_cache"]["routing"]["blind"]["hit_rate"]
+        with pytest.raises(AssertionError):
+            check_bench_schema(broken)
+
+    def test_schema_checker_rejects_obs_drift(self):
+        """Schema 9 pins the tracing-overhead section (DESIGN.md
+        §Observability): mix decode tok/s with the tracer on vs off, with
+        a hard >= 0.95x bound — making spans expensive fails tier-1, not
+        just the artifact diff."""
+        import json
+
+        from benchmarks.run import check_bench_schema
+        payload = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        obs = payload["obs"]
+        assert obs["overhead_ratio"] >= 0.95
+        assert obs["spans"] > 0
+        for key in ("untraced", "traced", "overhead_ratio", "spans",
+                    "metrics"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["obs"][key]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
+        for arm in ("untraced", "traced"):
+            broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+            del broken["obs"][arm]["decode_tokens_per_s"]
+            with pytest.raises(AssertionError):
+                check_bench_schema(broken)
+        broken = json.loads((REPO / "BENCH_scheduling.json").read_text())
+        broken["obs"]["overhead_ratio"] = 0.8
         with pytest.raises(AssertionError):
             check_bench_schema(broken)
 
